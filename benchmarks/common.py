@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: timed registry worlds + CSV emit."""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from contextlib import contextmanager
+
+from repro.core import Executor, Manager, Registry
+
+
+def fresh_linker(root: str | None = None):
+    root = root or tempfile.mkdtemp(prefix="repro-bench-")
+    reg = Registry(root)
+    mgr = Manager(reg)
+    ex = Executor(reg, mgr)
+    return reg, mgr, ex
+
+
+def publish_world(mgr, objects_with_payloads) -> None:
+    from repro.core import Mode
+
+    if mgr.mode != Mode.MANAGEMENT:
+        mgr.begin_mgmt()
+    for obj, payload in objects_with_payloads:
+        mgr.update_obj(obj, payload)
+    mgr.end_mgmt()
+
+
+def timeit(fn, *, warmup: int = 1, trials: int = 3):
+    """Paper protocol (scaled to container budget): warmups + trials,
+    returns (mean_s, min_s, max_s)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sum(ts) / len(ts), min(ts), max(ts)
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived"""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,71 @@
+"""Paper Figure 11 / §6.2: the lazy-binding trampoline tax.
+
+There is no PLT on TPU, so the trampoline is reproduced at the loader layer
+(DESIGN.md §2): ``LazyImage`` interposes a guard+dict indirection on every
+symbol access (GOT jump analogue) with a resolve-on-first-use slow path
+(resolver trampoline analogue). We measure steady-state access cost through
+the lazy wrapper vs the eager table-loaded dict — the per-call overhead that
+§6.2's "disable it!" removes — plus the first-touch resolution stalls.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.configs.paper_microbench import make_world_spec
+
+from .common import emit, fresh_linker, publish_world
+
+ACCESS_ROUNDS = 200
+
+
+def run(n: int = 100, f: int = 100, *, out: str | None = None) -> dict:
+    reg, mgr, ex = fresh_linker()
+    bundles, app = make_world_spec(n, f)
+    publish_world(mgr, bundles + [(app, b"")])
+    names = [r.name for r in mgr.world().resolve(app.name).refs]
+
+    lazy = ex.load(app.name, strategy="lazy")
+    t0 = time.perf_counter()
+    for nm in names:
+        lazy[nm]
+    first_touch_s = time.perf_counter() - t0
+
+    eager = ex.load(app.name, strategy="stable")
+
+    t0 = time.perf_counter()
+    for _ in range(ACCESS_ROUNDS):
+        for nm in names:
+            lazy[nm]
+    lazy_access_s = time.perf_counter() - t0
+
+    tensors = eager.tensors
+    t0 = time.perf_counter()
+    for _ in range(ACCESS_ROUNDS):
+        for nm in names:
+            tensors[nm]
+    eager_access_s = time.perf_counter() - t0
+
+    calls = ACCESS_ROUNDS * len(names)
+    res = {
+        "symbols": len(names),
+        "first_touch_s": first_touch_s,
+        "lazy_ns_per_access": lazy_access_s / calls * 1e9,
+        "eager_ns_per_access": eager_access_s / calls * 1e9,
+        "overhead_pct": (lazy_access_s / eager_access_s - 1) * 100,
+    }
+    emit("lazy/first_touch", first_touch_s, f"symbols={len(names)}")
+    emit("lazy/access", lazy_access_s / calls,
+         f"eager={res['eager_ns_per_access']:.0f}ns")
+    emit("lazy/overhead", 0.0,
+         f"{res['overhead_pct']:.1f}% (paper PLT tax: 2.75-9.22%)")
+    if out:
+        Path(out).parent.mkdir(parents=True, exist_ok=True)
+        Path(out).write_text(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    run(out="benchmarks/results/lazy_binding.json")

@@ -1,0 +1,77 @@
+"""§Perf hillclimb C — the paper's own axis: epoch-path loading.
+
+Variants, cumulative (paper-faithful baseline first):
+    npz+rows     — np.savez table container, per-row grouped-sequential
+                   loads (the paper's §4.2 Executor, our original impl)
+    raw+rows     — MATR1 raw table format (one read + frombuffer views;
+                   kills zip/CRC parse on the epoch path)
+    raw+paged    — materialization-time page table applied as one
+                   vectorized gather per provider (host execution of the
+                   paged_reloc_copy kernel plan)
+    raw+paged+t4 — + 4 IO threads across providers
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import Executor
+from repro.configs.paper_microbench import make_world_spec
+
+from .common import emit, fresh_linker, publish_world, timeit
+
+CELLS = [(10, 1000), (100, 100), (1000, 100), (911, 219)]  # last ~ pynamic
+
+
+def run_cell(n: int, f: int, *, trials: int = 3) -> dict:
+    reg, mgr, ex_default = fresh_linker()
+    bundles, app = make_world_spec(n, f)
+    publish_world(mgr, bundles + [(app, b"")])
+    world = mgr.world()
+    app_obj = world.resolve(app.name)
+
+    out = {"n": n, "f": f, "relocations": n * f}
+    variants = [
+        ("npz+rows", dict(loader="rows", table_format="npz")),
+        ("raw+rows", dict(loader="rows", table_format="raw")),
+        ("raw+paged", dict(loader="paged", table_format="raw")),
+        ("raw+paged+t4", dict(loader="paged", table_format="raw", io_threads=4)),
+    ]
+    for name, kw in variants:
+        ex = Executor(reg, mgr, **kw)
+        # re-materialize in this executor's format
+        ex.materialize(app_obj, world, mgr.epoch)
+        mean, mn, mx = timeit(
+            lambda: ex.load(app.name, strategy="stable"), trials=trials
+        )
+        img = ex.load(app.name, strategy="stable")
+        out[name] = {
+            "mean_s": mean,
+            "table_s": img.stats.table_load_s,
+            "io_s": img.stats.io_s,
+        }
+        emit(f"loader/{name}/n{n}_f{f}", mean,
+             f"table={img.stats.table_load_s*1e3:.1f}ms")
+    base = out["npz+rows"]["mean_s"]
+    best = min(v["mean_s"] for k, v in out.items() if isinstance(v, dict))
+    out["best_speedup_vs_baseline"] = base / best
+    emit(f"loader/speedup/n{n}_f{f}", 0.0, f"{base / best:.2f}x vs npz+rows")
+    # restore default-format table for any later users
+    ex_default.materialize(app_obj, world, mgr.epoch)
+    return out
+
+
+def main(*, fast: bool = False, out: str | None = None):
+    rows = [run_cell(n, f, trials=2 if fast else 3)
+            for n, f in (CELLS[:2] if fast else CELLS)]
+    if out:
+        Path(out).parent.mkdir(parents=True, exist_ok=True)
+        Path(out).write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(fast="--fast" in sys.argv, out="benchmarks/results/loader_variants.json")

@@ -1,0 +1,107 @@
+"""Paper Figures 1 & 7: the (n shared objects) x (f symbols) microbenchmark.
+
+Builds the paper's synthetic world (configs/paper_microbench.py), then times
+application startup (symbol resolution + payload load into the arena) under:
+
+    dynamic — traditional dynamic linking (ordered search, the musl baseline)
+    hints   — dynamic + direct-binding hints (§2.2.2 mitigation baseline)
+    stable  — materialized relocation table (MATR)
+
+Reports per-cell wall times, the stable-vs-dynamic speedup grid, and the
+resolution-only decomposition (paper Table 4's startup isolation).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.paper_microbench import make_world_spec
+from repro.core import DynamicResolver
+
+from .common import emit, fresh_linker, publish_world, timeit
+
+# paper grid is 1..10k objects x 1..1M functions; scaled to the container
+# budget with the same aspect (n*f capped at 1e5 -> ~400MB of payload)
+GRID = [
+    (1, 1), (1, 10), (1, 100), (1, 1000),
+    (10, 1), (10, 10), (10, 100), (10, 1000),
+    (100, 1), (100, 10), (100, 100), (100, 1000),
+    (1000, 1), (1000, 10), (1000, 100),
+]
+
+
+def run_cell(n: int, f: int, *, trials: int = 3) -> dict:
+    reg, mgr, ex = fresh_linker()
+    bundles, app = make_world_spec(n, f)
+    publish_world(mgr, bundles + [(app, b"")])
+
+    res: dict = {"n": n, "f": f, "relocations": n * f}
+
+    dyn_mean, *_ = timeit(
+        lambda: ex.load(app.name, strategy="dynamic"), trials=trials
+    )
+    st_mean, *_ = timeit(
+        lambda: ex.load(app.name, strategy="stable"), trials=trials
+    )
+
+    img_d = ex.load(app.name, strategy="dynamic")
+    img_s = ex.load(app.name, strategy="stable")
+
+    # direct-binding mitigation: probe only the hinted provider
+    world = mgr.world()
+    resolver = DynamicResolver(world)
+    app_obj = world.resolve(app.name)
+    hints = {
+        r.ref.name: r.provider.name
+        for r in resolver.resolve(app_obj)
+        if r.provider
+    }
+
+    def hinted():
+        DynamicResolver(world).resolve_with_hints(app_obj, hints)
+
+    hint_mean, *_ = timeit(hinted, trials=trials)
+
+    res.update(
+        dynamic_s=dyn_mean,
+        stable_s=st_mean,
+        hints_resolve_s=hint_mean,
+        speedup=dyn_mean / st_mean if st_mean else 0.0,
+        dynamic_resolve_s=img_d.stats.resolve_s,
+        stable_table_s=img_s.stats.table_load_s,
+        io_s=img_s.stats.io_s,
+        probes=img_d.stats.probes,
+    )
+    return res
+
+
+def main(*, fast: bool = False, out: str | None = None) -> list[dict]:
+    grid = [(n, f) for n, f in GRID if (n * f <= 10_000 if fast else True)]
+    rows = []
+    for n, f in grid:
+        r = run_cell(n, f, trials=2 if fast else 3)
+        rows.append(r)
+        emit(
+            f"microbench/dynamic/n{n}_f{f}",
+            r["dynamic_s"],
+            f"relocs={r['relocations']}",
+        )
+        emit(
+            f"microbench/stable/n{n}_f{f}",
+            r["stable_s"],
+            f"speedup={r['speedup']:.2f}x",
+        )
+    if out:
+        Path(out).parent.mkdir(parents=True, exist_ok=True)
+        Path(out).write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(
+        fast="--fast" in sys.argv,
+        out="benchmarks/results/microbench.json",
+    )

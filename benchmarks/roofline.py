@@ -1,0 +1,128 @@
+"""Roofline harness: turns dry-run JSONL caches into the EXPERIMENTS.md
+§Roofline table (deliverable g).
+
+Per (arch x shape) cell on the single-pod mesh: the three roofline terms in
+seconds (compute / HBM / collective), the dominant term, MODEL_FLOPS =
+6*N(_active)*D, the MODEL/HLO useful-compute ratio, and a one-line
+what-would-move-it note.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--md]
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results"
+
+MOVE_NOTES = {
+    ("compute", "train"): "cut remat recompute / larger microbatches to amortize",
+    ("compute", "prefill"): "flash kernel skips masked blocks (XLA path masks)",
+    ("compute", "decode"): "batch more requests per step",
+    ("memory", "train"): "fuse optimizer+cast ops; fewer f32 round-trips",
+    ("memory", "prefill"): "avoid score materialization (flash kernel)",
+    ("memory", "decode"): "KV-cache layout/quantization; fuse cache update",
+    ("collective", "train"): "2D-shard gradients / overlap FSDP all-gathers",
+    ("collective", "prefill"): "shard KV heads not activations",
+    ("collective", "decode"): "replicate small weights to skip all-gathers",
+}
+
+
+def load(mesh: str) -> dict[str, dict]:
+    path = RESULTS / f"dryrun_{mesh}.jsonl"
+    out: dict[str, dict] = {}
+    if path.exists():
+        for line in path.read_text().splitlines():
+            if line.strip():
+                r = json.loads(line)
+                out[r["cell"]] = r
+    return out
+
+
+def best_roofline(rec: dict) -> dict | None:
+    probe = rec.get("cost_probe") or {}
+    if isinstance(probe, dict) and probe.get("roofline"):
+        return probe["roofline"]
+    return rec.get("roofline")
+
+
+def rows(mesh: str = "pod") -> list[dict]:
+    out = []
+    for cell, rec in sorted(load(mesh).items()):
+        row = {
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "kind": rec.get("kind", ""),
+            "status": rec["status"],
+        }
+        if rec["status"] == "ok":
+            r = best_roofline(rec)
+            note = MOVE_NOTES.get((r["dominant"], rec.get("kind", "")), "")
+            row.update(
+                compute_s=r["compute_s"],
+                memory_s=r["memory_s"],
+                collective_s=r["collective_s"],
+                dominant=r["dominant"],
+                model_flops=r["model_flops"],
+                useful=r["useful_flops_frac"],
+                roofline_frac=r["roofline_frac"],
+                note=note,
+                exact="cost_probe" in rec and bool(
+                    (rec.get("cost_probe") or {}).get("roofline")
+                ),
+            )
+        elif rec["status"] == "skipped":
+            row["note"] = rec.get("reason", "")
+        else:
+            row["note"] = rec.get("error", "")[:120]
+        out.append(row)
+    return out
+
+
+def to_markdown(mesh: str = "pod") -> str:
+    lines = [
+        f"| arch | shape | compute s | memory s | collective s | dominant "
+        f"| useful | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(mesh):
+        if r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+                f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+                f"| {r['dominant']} | {r['useful']:.2f} "
+                f"| {r['roofline_frac']:.2f} | {r['note']} |"
+            )
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} "
+                f"| — | — | {r.get('note','')} |"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import sys
+
+    if "--md" in sys.argv:
+        print(to_markdown())
+        return
+    ok = skipped = err = 0
+    for r in rows():
+        if r["status"] == "ok":
+            ok += 1
+            print(
+                f"{r['arch']:24s} {r['shape']:12s} dominant={r['dominant']:10s}"
+                f" frac={r['roofline_frac']:.2f} useful={r['useful']:.2f}"
+            )
+        elif r["status"] == "skipped":
+            skipped += 1
+        else:
+            err += 1
+            print(f"{r['arch']:24s} {r['shape']:12s} ERROR {r['note']}")
+    print(f"\nok={ok} skipped={skipped} errors={err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark aggregator — one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits ``name,us_per_call,derived`` CSV rows:
+    microbench/*   — paper Fig. 1 & 7 (n x f grid, dynamic vs stable)
+    startup/*      — paper Tables 3 & 4 (real-arch startup + pynamic point)
+    lazy/*         — paper Fig. 11 (lazy-binding trampoline tax)
+    reloc_apply/*  — beyond-paper: loader strategies incl. paged plan
+    attention/*    — beyond-paper: chunked vs naive attention
+    roofline/*     — summary of the dry-run roofline table (if present)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from . import kernels_bench, lazy_binding, microbench, startup
+
+    print("name,us_per_call,derived")
+    microbench.main(fast=fast, out="benchmarks/results/microbench.json")
+    startup.main(fast=fast, out="benchmarks/results/startup.json")
+    lazy_binding.run(out="benchmarks/results/lazy_binding.json")
+    kernels_bench.main(fast=fast, out="benchmarks/results/kernels.json")
+
+    # roofline summary (only if a dry-run sweep has been recorded);
+    # prefer the optimized-defaults sweep when present
+    try:
+        from . import roofline
+
+        rl = roofline.rows("pod_opt") or roofline.rows("pod")
+        ok = [r for r in rl if r["status"] == "ok"]
+        if ok:
+            worst = min(ok, key=lambda r: r["roofline_frac"])
+            best = max(ok, key=lambda r: r["roofline_frac"])
+            print(
+                f"roofline/cells,0.0,ok={len(ok)} "
+                f"worst={worst['arch']}/{worst['shape']}"
+                f"@{worst['roofline_frac']:.2f} "
+                f"best={best['arch']}/{best['shape']}"
+                f"@{best['roofline_frac']:.2f}"
+            )
+    except Exception as e:  # roofline table absent: not an error for run.py
+        print(f"roofline/unavailable,0.0,{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Batched serving of a small model — the paper's kind of win (startup).
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Publishes a model world once, then simulates a fleet of short-lived server
+processes: each "process start" loads weights dynamically (baseline) vs via
+the materialized table (stable), then serves a batch of greedy-decode
+requests. The aggregate-startup-cost argument of the paper, live.
+"""
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro import models
+from repro.ckpt import bundle_from_params
+from repro.configs import get_config
+from repro.core import Executor, Manager, ObjectKind, Registry, make_object
+from repro.serve import ServeEngine
+
+cfg = get_config("mamba2-370m", smoke=True).replace(num_layers=48)  # real depth
+root = tempfile.mkdtemp(prefix="repro-serve-")
+reg = Registry(root)
+mgr = Manager(reg)
+ex = Executor(reg, mgr)
+
+params = {n: np.asarray(v) for n, v in models.init_params(cfg, 0).items()}
+bundle, payload = bundle_from_params(
+    "weights:mamba", "v1", params, fragment_layers=True
+)
+app, _ = make_object(
+    name="serve:mamba", version="1", kind=ObjectKind.APPLICATION,
+    refs=models.manifest_refs(cfg, fragment=True), needed=["weights:mamba"],
+)
+mgr.update_obj(bundle, payload)
+mgr.update_obj(app)
+mgr.end_mgmt()
+
+N_PROCS = 8
+rng = np.random.default_rng(0)
+prompts = rng.integers(0, cfg.vocab_size, (4, 24), dtype=np.int32)
+
+for strategy in ("dynamic", "stable"):
+    t0 = time.perf_counter()
+    startups = 0.0
+    for _ in range(N_PROCS):
+        img = ex.load("serve:mamba", strategy=strategy)
+        startups += img.stats.startup_s
+    load_wall = time.perf_counter() - t0
+    print(
+        f"{strategy:8s}: {N_PROCS} process starts, "
+        f"aggregate weight-resolution+load {startups*1e3:7.1f}ms "
+        f"(wall {load_wall*1e3:7.1f}ms)"
+    )
+
+# serve one batch to show the loaded image is the real thing
+import jax.numpy as jnp
+
+img = ex.load("serve:mamba", strategy="stable")
+live = {}
+for name in models.param_specs(cfg):
+    live[name] = jnp.asarray(
+        np.stack([img[f"{name}[{l}]"] for l in range(cfg.num_layers)])
+        if name.startswith("blocks/")
+        else img[name]
+    )
+engine = ServeEngine(cfg, live, cache_len=48)
+out, stats = engine.generate(prompts, 8)
+print(
+    f"served batch={prompts.shape[0]}: prefill {stats.prefill_s*1e3:.0f}ms, "
+    f"decode {stats.tok_per_s:.0f} tok/s, sample row: {out[0].tolist()}"
+)

@@ -1,0 +1,18 @@
+from .bundle import (
+    bundle_from_params,
+    fragment_name,
+    image_to_params,
+    make_kernel_lib,
+    params_from_image,
+)
+from .checkpoint import Checkpointer, restore_train_state
+
+__all__ = [
+    "bundle_from_params",
+    "fragment_name",
+    "image_to_params",
+    "make_kernel_lib",
+    "params_from_image",
+    "Checkpointer",
+    "restore_train_state",
+]

@@ -1,0 +1,115 @@
+"""Weight bundles — the "shared libraries" of the ML world (DESIGN.md §2).
+
+A bundle is a registry object whose payload concatenates tensors at
+PAGE_BYTES alignment and whose manifest carries the exported symbol table
+(name -> shape/dtype/offset). Construction modes:
+
+* monolithic            — one symbol per model parameter.
+* ``fragment_experts``  — per-expert tensors exported as individual symbols
+  ("...experts/w_gate[e]" slices): the Pynamic analogue, maximizing
+  relocation count; also what lets one expert be hot-swapped/interposed.
+* ``stack_layers=False`` keeps stacked (L, ...) tensors whole; per-layer
+  SLICE references still resolve against them via the "name[i]" syntax.
+
+Kernel libraries export op symbols ("kernel:flash_attention") with a dtype
+of "kernel"; binding one is a RelocType.KERNEL relocation.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import numpy as np
+
+from repro.core import (
+    ObjectKind,
+    PAGE_BYTES,
+    StoreObject,
+    SymbolDef,
+    align_up,
+    make_object,
+)
+
+
+def fragment_name(base: str, idx: int) -> str:
+    return f"{base}[{idx}]"
+
+
+def bundle_from_params(
+    name: str,
+    version: str,
+    params: Mapping[str, np.ndarray],
+    *,
+    fragment_experts: bool = False,
+    fragment_layers: bool = False,
+    meta: dict | None = None,
+) -> tuple[StoreObject, bytes]:
+    """Build a bundle exporting every (optionally fragmented) tensor."""
+    payload = bytearray()
+    syms: list[SymbolDef] = []
+
+    def emit(sym_name: str, arr: np.ndarray):
+        arr = np.ascontiguousarray(arr)
+        off = len(payload)
+        payload.extend(arr.tobytes())
+        pad = align_up(len(payload), PAGE_BYTES) - len(payload)
+        payload.extend(b"\x00" * pad)
+        syms.append(
+            SymbolDef(sym_name, tuple(arr.shape), str(arr.dtype), off, arr.nbytes)
+        )
+
+    _stacked_prefixes = ("blocks/", "enc/", "dec/")
+
+    for pname in sorted(params):
+        arr = np.asarray(params[pname])
+        stacked = pname.startswith(_stacked_prefixes)
+        if fragment_experts and "/experts/" in pname and arr.ndim >= 3:
+            # (L, E, ...) -> one symbol per (layer, expert) slice
+            L, E = arr.shape[0], arr.shape[1]
+            for l in range(L):
+                for e in range(E):
+                    emit(fragment_name(fragment_name(pname, l), e), arr[l, e])
+        elif fragment_layers and stacked and arr.ndim >= 2:
+            for l in range(arr.shape[0]):
+                emit(fragment_name(pname, l), arr[l])
+        else:
+            emit(pname, arr)
+
+    obj, pl = make_object(
+        name=name,
+        version=version,
+        kind=ObjectKind.BUNDLE,
+        symbols=syms,
+        payload=bytes(payload),
+        meta=meta or {},
+    )
+    return obj, pl
+
+
+def make_kernel_lib(
+    name: str, version: str, entries: Mapping[str, int]
+) -> tuple[StoreObject, bytes]:
+    """Kernel library exporting op symbols; offset = entry-point index."""
+    syms = [
+        SymbolDef(f"kernel:{k}", (), "kernel", idx, 0)
+        for k, idx in entries.items()
+    ]
+    return make_object(
+        name=name, version=version, kind=ObjectKind.KERNEL_LIB, symbols=syms
+    )
+
+
+# ---------------------------------------------------------------- conversion
+def image_to_params(image) -> dict[str, np.ndarray]:
+    """LoadedImage -> params dict (zero-copy views into the arena)."""
+    return dict(image.tensors)
+
+
+def params_from_image(image, specs) -> dict[str, np.ndarray]:
+    """Views matching a spec dict's order/shapes (asserts compatibility)."""
+    out = {}
+    for name, spec in specs.items():
+        arr = image[name]
+        assert tuple(arr.shape) == tuple(spec.shape), (name, arr.shape, spec.shape)
+        out[name] = arr
+    return out

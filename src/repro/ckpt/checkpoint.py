@@ -1,0 +1,122 @@
+"""Training checkpoints as management-time events.
+
+A checkpoint save is exactly a management time (§3 Integration): the trainer
+calls ``begin_mgmt``, publishes the new weight/optimizer bundles with
+``update_obj``, and ``end_mgmt`` re-materializes the relocation tables of
+every application that references them. A restart after failure then takes
+the *epoch* path: table-driven loading, no symbol resolution — the paper's
+startup win applied to fault recovery.
+
+Writes are asynchronous: tensors are snapshotted to host (device_get) on the
+caller's thread, serialization + registry insertion run on a background
+thread, and ``wait()`` joins before the next save (overlapping checkpoint IO
+with compute).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import Manager, Mode
+
+from .bundle import bundle_from_params
+
+
+def _flatten_opt(opt_state) -> dict[str, np.ndarray]:
+    out = {}
+    for mv in ("m", "v"):
+        for name, arr in opt_state[mv].items():
+            out[f"opt/{mv}/{name}"] = np.asarray(arr)
+    out["opt/step"] = np.asarray(opt_state["step"]).reshape(1)
+    return out
+
+
+def _unflatten_opt(tensors: dict[str, np.ndarray]) -> dict:
+    m, v = {}, {}
+    for name, arr in tensors.items():
+        if name.startswith("opt/m/"):
+            m[name[len("opt/m/"):]] = arr
+        elif name.startswith("opt/v/"):
+            v[name[len("opt/v/"):]] = arr
+    step = tensors["opt/step"].reshape(())
+    import jax.numpy as jnp
+
+    return {"m": m, "v": v, "step": jnp.asarray(step)}
+
+
+@dataclass
+class Checkpointer:
+    manager: Manager
+    weights_name: str
+    opt_name: str
+    keep_opt: bool = True
+    _thread: Optional[threading.Thread] = field(default=None, repr=False)
+    last_step: int = -1
+    saves: int = 0
+    save_seconds: float = 0.0
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, params, opt_state=None) -> None:
+        """Snapshot on caller thread; publish on background thread."""
+        self.wait()
+        host_params = {n: np.asarray(jax.device_get(a)) for n, a in params.items()}
+        host_opt = (
+            _flatten_opt(jax.device_get(opt_state))
+            if (opt_state is not None and self.keep_opt)
+            else None
+        )
+
+        def publish():
+            t0 = time.perf_counter()
+            own_mgmt = self.manager.mode != Mode.MANAGEMENT
+            if own_mgmt:
+                self.manager.begin_mgmt()
+            obj, pl = bundle_from_params(
+                self.weights_name, f"step{step}", host_params,
+                meta={"step": step},
+            )
+            self.manager.update_obj(obj, pl)
+            if host_opt is not None:
+                oobj, opl = bundle_from_params(
+                    self.opt_name, f"step{step}", host_opt, meta={"step": step}
+                )
+                self.manager.update_obj(oobj, opl)
+            if own_mgmt:
+                self.manager.end_mgmt()  # re-materializes relocation tables
+            self.last_step = step
+            self.saves += 1
+            self.save_seconds += time.perf_counter() - t0
+
+        self._thread = threading.Thread(target=publish, daemon=True)
+        self._thread.start()
+
+
+def restore_train_state(executor, app_name: str, *, strategy: str = "stable"):
+    """Epoch-path restore: table-driven load of weights (+opt if present).
+
+    Returns (params np dict, opt tensors np dict or None, step)."""
+    image = executor.load(app_name, strategy=strategy)
+    params = {
+        n: t for n, t in image.tensors.items() if not n.startswith("opt/")
+    }
+    opt_tensors = {
+        n: t for n, t in image.tensors.items() if n.startswith("opt/")
+    }
+    step = -1
+    for o in image.table.objects:
+        obj = executor.registry.get(o["content_hash"])
+        if "step" in obj.meta:
+            step = max(step, int(obj.meta["step"]))
+    opt = _unflatten_opt(opt_tensors) if opt_tensors else None
+    return params, opt, step

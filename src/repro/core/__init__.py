@@ -1,0 +1,84 @@
+"""repro.core — stable linking (the paper's contribution), substrate-free.
+
+Public surface:
+
+    Registry, World              — content-addressed object store + world views
+    Manager, Mode                — begin_mgmt / update_obj / end_mgmt
+    Executor, LoadedImage        — materialize + stable/dynamic/lazy loading
+    DynamicResolver              — the traditional-dynamic-linking baseline
+    RelocationTable, PageTable   — materialized tables (+ TPU page compilation)
+    inspector, interpose         — observability + fine-grained rebinding
+    CompileCache                 — AOT executable materialization
+"""
+
+from .compile_cache import CompileCache, CompileStats, cache_key
+from .errors import (
+    ImmutableEpochError,
+    ModeError,
+    PayloadIntegrityError,
+    StableLinkingError,
+    StaleTableError,
+    SymbolMismatchError,
+    UnknownObjectError,
+    UnresolvedSymbolError,
+)
+from .executor import Executor, LazyImage, LoadedImage, LoadStats
+from .manager import Manager, Mode
+from .objects import (
+    PAGE_BYTES,
+    ObjectKind,
+    RelocType,
+    StoreObject,
+    SymbolDef,
+    SymbolRef,
+    align_up,
+    make_object,
+)
+from .registry import Registry, World
+from .relocation import (
+    PageTable,
+    RelocationTable,
+    build_arena_layout,
+    build_table,
+    compile_page_table,
+)
+from .resolver import DynamicResolver, Relocation, dependency_closure, np_dtype
+
+__all__ = [
+    "CompileCache",
+    "CompileStats",
+    "cache_key",
+    "ImmutableEpochError",
+    "ModeError",
+    "PayloadIntegrityError",
+    "StableLinkingError",
+    "StaleTableError",
+    "SymbolMismatchError",
+    "UnknownObjectError",
+    "UnresolvedSymbolError",
+    "Executor",
+    "LazyImage",
+    "LoadedImage",
+    "LoadStats",
+    "Manager",
+    "Mode",
+    "PAGE_BYTES",
+    "ObjectKind",
+    "RelocType",
+    "StoreObject",
+    "SymbolDef",
+    "SymbolRef",
+    "align_up",
+    "make_object",
+    "Registry",
+    "World",
+    "PageTable",
+    "RelocationTable",
+    "build_arena_layout",
+    "build_table",
+    "compile_page_table",
+    "DynamicResolver",
+    "Relocation",
+    "dependency_closure",
+    "np_dtype",
+]

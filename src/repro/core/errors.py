@@ -1,0 +1,50 @@
+"""Error taxonomy for the stable linker.
+
+Mirrors the failure modes discussed in the paper: illegal registry mutation
+during an epoch, unresolved symbols at materialization time, and stale /
+missing relocation tables at epoch load time.
+"""
+
+from __future__ import annotations
+
+
+class StableLinkingError(Exception):
+    """Base class for all stable-linking errors."""
+
+
+class ModeError(StableLinkingError):
+    """Operation attempted in the wrong mode (epoch vs management time)."""
+
+
+class ImmutableEpochError(ModeError):
+    """Registry mutation attempted while the system is in an epoch."""
+
+
+class UnknownObjectError(StableLinkingError):
+    """A referenced object name/uuid is not present in the world view."""
+
+
+class UnresolvedSymbolError(StableLinkingError):
+    """A (strong) symbol reference could not be bound to any provider."""
+
+    def __init__(self, symbol: str, requirer: str, searched: list[str]):
+        self.symbol = symbol
+        self.requirer = requirer
+        self.searched = list(searched)
+        super().__init__(
+            f"unresolved symbol {symbol!r} required by {requirer!r} "
+            f"(searched {len(searched)} objects: {', '.join(searched[:8])}"
+            f"{', ...' if len(searched) > 8 else ''})"
+        )
+
+
+class SymbolMismatchError(StableLinkingError):
+    """Provider symbol exists but is ABI-incompatible (shape mismatch)."""
+
+
+class StaleTableError(StableLinkingError):
+    """Relocation table missing or generated under a different world/epoch."""
+
+
+class PayloadIntegrityError(StableLinkingError):
+    """Bundle payload digest does not match its manifest (corrupt store)."""

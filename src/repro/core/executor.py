@@ -1,0 +1,447 @@
+"""The Executor (§4.2): materialization + epoch/management-time loading.
+
+Three modes of operation, exactly as the paper's Figure 5:
+
+* ``materialize``  — invoked by the Manager at ``end_mgmt``: runs the
+  traditional dynamic-linking resolution once per application, observes the
+  resulting relocation mapping, and stores it as a flat table keyed by
+  (app hash, world hash).
+* epoch load       — loads the stored table, verifies freshness, and applies
+  relocations with grouped *sequential* reads per provider (the paper's
+  prefetch-friendly access pattern), entirely skipping symbol search.
+* management load  — falls back to the dynamic path so behaviour stays
+  correct while the world is in flux.
+
+Loading strategies exposed for the benchmarks:
+  ``stable``   — table-driven (the paper's contribution).
+  ``dynamic``  — traditional dynamic linking (baseline).
+  ``lazy``     — dynamic linking with per-symbol first-use faulting (the
+                 lazy-binding/PLT analogue, §6.2).
+
+The loaded image is numpy-only; sharded ``device_put`` belongs to the train/
+serve layers (core stays substrate-independent).
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .errors import StaleTableError, UnknownObjectError
+from .manager import Manager, Mode
+from .objects import ObjectKind, RelocType, StoreObject
+from .registry import Registry, World
+from .relocation import RelocationTable, build_table
+from .resolver import DynamicResolver, Relocation, np_dtype
+
+Initializer = Callable[[str, tuple[int, ...], str], np.ndarray]
+
+
+def _zeros_init(name: str, shape: tuple[int, ...], dtype: str) -> np.ndarray:
+    return np.zeros(shape, dtype=np_dtype(dtype))
+
+
+@dataclass
+class LoadStats:
+    strategy: str = ""
+    resolve_s: float = 0.0      # symbol search (dynamic) / 0 (stable)
+    table_load_s: float = 0.0   # table deserialize (stable) / 0 (dynamic)
+    io_s: float = 0.0           # payload reads into the arena
+    relocations: int = 0
+    probes: int = 0             # hash probes performed (search work)
+    bytes_loaded: int = 0
+
+    @property
+    def startup_s(self) -> float:
+        return self.resolve_s + self.table_load_s + self.io_s
+
+
+@dataclass
+class LoadedImage:
+    """Result of loading an application: symbol name -> tensor view."""
+
+    app: StoreObject
+    arena: np.ndarray
+    tensors: dict[str, np.ndarray]
+    kernels: dict[str, str]               # op symbol -> "provider:entry"
+    table: Optional[RelocationTable]
+    stats: LoadStats = field(default_factory=LoadStats)
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.tensors[name]
+
+
+class LazyImage:
+    """Lazy-binding analogue: resolve+load each symbol at first access.
+
+    Every access goes through ``__getitem__`` — the indirection is the GOT
+    jump; the first-access slow path is the PLT resolver trampoline. Eager
+    stable loading eliminates both (§6.2: "disable it!").
+    """
+
+    def __init__(self, executor: "Executor", app: StoreObject, world: World):
+        self._executor = executor
+        self._app = app
+        self._world = world
+        self._resolver = DynamicResolver(world)
+        self._scope = None
+        self._cache: dict[str, np.ndarray] = {}
+        self._refs = {r.name: r for r in app.refs}
+        self.stats = LoadStats(strategy="lazy")
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        hit = self._cache.get(name)
+        if hit is not None:
+            return hit
+        t0 = time.perf_counter()
+        if self._scope is None:
+            from .resolver import dependency_closure
+
+            self._scope = dependency_closure(self._app, self._world)
+        ref = self._refs.get(name)
+        if ref is None:
+            raise UnknownObjectError(f"{self._app.name} has no symbol {name!r}")
+        reloc = self._resolver.resolve_ref(ref, self._app, self._scope)
+        self.stats.resolve_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        arr = self._executor._read_single(reloc)
+        self.stats.io_s += time.perf_counter() - t1
+        self.stats.relocations += 1
+        self.stats.bytes_loaded += arr.nbytes
+        self.stats.probes = self._resolver.probe_count
+        self._cache[name] = arr
+        return arr
+
+    def keys(self):
+        return self._refs.keys()
+
+
+class Executor:
+    def __init__(
+        self,
+        registry: Registry,
+        manager: Manager,
+        *,
+        initializer: Initializer = _zeros_init,
+        io_threads: int = 0,
+        loader: str = "paged",
+        table_format: str = "raw",
+    ):
+        assert loader in ("paged", "rows")
+        assert table_format in ("raw", "npz")
+        self.registry = registry
+        self.manager = manager
+        self.initializer = initializer
+        self.io_threads = io_threads
+        self.table_format = table_format
+        # "rows"  — the paper-faithful §4.2 loader: iterate the table with
+        #           grouped sequential reads per provider.
+        # "paged" — beyond-paper: the materialization-time page table is
+        #           applied as one vectorized gather per provider (host
+        #           execution of the paged_reloc_copy kernel's plan);
+        #           CAST/INIT/unaligned rows fall back to the row loader.
+        self.loader = loader
+        # Wire the Manager's end_mgmt hook (Figure 5's dashed control edge).
+        manager.on_materialize = self.materialize_all
+
+    # ---------------------------------------------------------- materialize
+    def materialize(self, app: StoreObject, world: World, epoch: int) -> RelocationTable:
+        resolver = DynamicResolver(world)
+        relocations = resolver.resolve(app)
+        table = build_table(
+            app, relocations, world_hash=world.world_hash, epoch=epoch
+        )
+        table.save(
+            self.registry.table_path(app.content_hash, world.world_hash),
+            format=self.table_format,
+        )
+        return table
+
+    def materialize_all(self, world: World, epoch: int) -> list[str]:
+        """end_mgmt hook: (re-)materialize every application whose table is
+        missing under the new world (objects updated since the last epoch
+        necessarily changed the world hash, so their tables are re-created —
+        unchanged closures keep their key and are reused)."""
+        done = []
+        for app in world.applications():
+            path = self.registry.table_path(app.content_hash, world.world_hash)
+            if not path.exists():
+                self.materialize(app, world, epoch)
+                done.append(app.name)
+        return done
+
+    # ----------------------------------------------------------------- load
+    def load(
+        self,
+        app_name: str,
+        *,
+        strategy: str = "auto",
+        world: Optional[World] = None,
+    ):
+        """Load an application image.
+
+        ``auto`` follows the paper: dynamic during management time, stable
+        (table-driven) during an epoch.
+        """
+        world = world or self.manager.world()
+        app = world.resolve(app_name)
+        if strategy == "auto":
+            strategy = (
+                "dynamic" if self.manager.mode == Mode.MANAGEMENT else "stable"
+            )
+        if strategy == "stable":
+            return self._load_stable(app, world)
+        if strategy == "dynamic":
+            return self._load_dynamic(app, world)
+        if strategy == "lazy":
+            return LazyImage(self, app, world)
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    # ------------------------------------------------------------- internals
+    def _load_stable(self, app: StoreObject, world: World) -> LoadedImage:
+        stats = LoadStats(strategy="stable")
+        t0 = time.perf_counter()
+        path = self.registry.table_path(app.content_hash, world.world_hash)
+        if not path.exists():
+            raise StaleTableError(
+                f"no materialized table for {app.name} under world "
+                f"{world.world_hash[:12]}; run begin_mgmt/end_mgmt"
+            )
+        table = RelocationTable.load(path)
+        table.check_fresh(world.world_hash, app.content_hash)
+        stats.table_load_s = time.perf_counter() - t0
+        image = self._apply_table(app, table, stats)
+        return image
+
+    def _load_dynamic(self, app: StoreObject, world: World) -> LoadedImage:
+        stats = LoadStats(strategy="dynamic")
+        t0 = time.perf_counter()
+        resolver = DynamicResolver(world)
+        relocations = resolver.resolve(app)
+        table = build_table(
+            app, relocations, world_hash=world.world_hash, epoch=self.manager.epoch
+        )
+        stats.resolve_s = time.perf_counter() - t0
+        stats.probes = resolver.probe_count
+        return self._apply_table(app, table, stats)
+
+    def _payload_mmap(self, store_name: str) -> np.ndarray:
+        path = self.registry.root / "objects" / store_name / "payload.bin"
+        return np.memmap(path, dtype=np.uint8, mode="r")
+
+    def _apply_table(
+        self, app: StoreObject, table: RelocationTable, stats: LoadStats
+    ) -> LoadedImage:
+        t0 = time.perf_counter()
+        arena = np.empty(table.arena_size, dtype=np.uint8)
+        slots = table.slots()
+        rows = table.rows
+        kernels: dict[str, str] = {}
+
+        if (
+            self.loader == "paged"
+            and table._pt_src is not None
+            and "host_rows" in table.meta
+        ):
+            self._apply_paged(table, arena, kernels)
+            stats.io_s = time.perf_counter() - t0
+            stats.relocations = len(rows)
+            tensors = {
+                name: arena[s.offset : s.offset + s.nbytes]
+                .view(np_dtype(s.dtype))
+                .reshape(s.shape)
+                for name, s in slots.items()
+            }
+            return LoadedImage(
+                app=app, arena=arena, tensors=tensors, kernels=kernels,
+                table=table, stats=stats,
+            )
+
+        # Group rows by provider, sort by source offset: each provider's
+        # payload is then read strictly sequentially (§4.2's key loading
+        # optimization — "well suited for memory prefetching").
+        order = np.lexsort((rows["st_value"], rows["provides_so_uuid"]))
+        groups: dict[int, list[int]] = {}
+        for i in order:
+            groups.setdefault(int(rows["provides_so_uuid"][i]), []).append(int(i))
+
+        def apply_group(uuid: int, idxs: list[int]) -> int:
+            nbytes = 0
+            mm = None
+
+            def payload():  # lazy: KERNEL/INIT-only groups have no payload
+                nonlocal mm
+                if mm is None:
+                    obj = table.object_by_uuid(uuid)
+                    mm = self._payload_mmap(obj["store_name"])
+                return mm
+
+            for i in idxs:
+                r = rows[i]
+                rt = int(r["type"])
+                name = table.name_at(r["symbol_name"])
+                if rt == RelocType.KERNEL:
+                    prov = table.object_by_uuid(int(r["provides_so_uuid"]))
+                    kernels[name] = f"{prov['name']}:{int(r['st_value'])}"
+                    continue
+                slot = slots[name]
+                dst = arena[slot.offset : slot.offset + slot.nbytes]
+                if rt == RelocType.INIT:
+                    init = self.initializer(name, slot.shape, slot.dtype)
+                    dst[:] = np.ascontiguousarray(init).view(np.uint8).ravel()
+                    nbytes += slot.nbytes
+                    continue
+                src0 = int(r["st_value"]) + int(r["addend"])
+                size = int(r["st_size"])
+                src = payload()[src0 : src0 + size]
+                if rt == RelocType.CAST:
+                    prov_obj = table.object_by_uuid(uuid)
+                    # provider dtype comes from its manifest symbol table
+                    sdef = self._provider_symbol(prov_obj, name)
+                    sarr = src.view(np_dtype(sdef.dtype))
+                    dst.view(np_dtype(slot.dtype))[:] = sarr.astype(
+                        np_dtype(slot.dtype)
+                    )
+                else:
+                    dst[:size] = src
+                nbytes += size
+            return nbytes
+
+        if self.io_threads > 1 and len(groups) > 1:
+            with ThreadPoolExecutor(max_workers=self.io_threads) as pool:
+                futs = [
+                    pool.submit(apply_group, u, idxs) for u, idxs in groups.items()
+                ]
+                stats.bytes_loaded = sum(f.result() for f in futs)
+        else:
+            stats.bytes_loaded = sum(
+                apply_group(u, idxs) for u, idxs in groups.items()
+            )
+
+        stats.io_s = time.perf_counter() - t0
+        stats.relocations = len(rows)
+
+        tensors = {
+            name: arena[s.offset : s.offset + s.nbytes]
+            .view(np_dtype(s.dtype))
+            .reshape(s.shape)
+            for name, s in slots.items()
+        }
+        return LoadedImage(
+            app=app,
+            arena=arena,
+            tensors=tensors,
+            kernels=kernels,
+            table=table,
+            stats=stats,
+        )
+
+    def _apply_paged(self, table: RelocationTable, arena: np.ndarray,
+                     kernels: dict) -> None:
+        """Vectorized page-table application (one gather per provider)."""
+        from .objects import PAGE_BYTES, align_up
+
+        rows = table.rows
+        src, dst = table._pt_src, table._pt_dst
+        pad = align_up(arena.nbytes, PAGE_BYTES) - arena.nbytes
+        arena_pages = (
+            arena if pad == 0 else arena  # arena is page-multiple by layout
+        ).reshape(-1, PAGE_BYTES)
+
+        cursor = 0
+        jobs = []
+        for o in table.objects:
+            n_pages = align_up(int(o["payload_size"]), PAGE_BYTES) // PAGE_BYTES
+            if n_pages:
+                jobs.append((o, cursor, cursor + n_pages))
+            cursor += n_pages
+
+        def copy_provider(o, lo, hi):
+            mask = (src >= lo) & (src < hi)
+            if not mask.any():
+                return
+            mm = self._payload_mmap(o["store_name"])
+            pages = mm[: (hi - lo) * PAGE_BYTES].reshape(-1, PAGE_BYTES)
+            arena_pages[dst[mask]] = pages[src[mask] - lo]
+
+        if self.io_threads > 1 and len(jobs) > 1:
+            with ThreadPoolExecutor(max_workers=self.io_threads) as pool:
+                list(pool.map(lambda j: copy_provider(*j), jobs))
+        else:
+            for j in jobs:
+                copy_provider(*j)
+
+        # host-path rows: CAST / INIT / unaligned SLICE
+        host_rows = table.meta.get("host_rows", [])
+        if host_rows:
+            self._apply_row_subset(table, arena, kernels, host_rows)
+        # kernel symbols (not in the page table)
+        kmask = rows["type"] == int(RelocType.KERNEL)
+        for i in np.nonzero(kmask)[0]:
+            name = table.name_at(rows["symbol_name"][i])
+            prov = table.object_by_uuid(int(rows["provides_so_uuid"][i]))
+            kernels[name] = f"{prov['name']}:{int(rows['st_value'][i])}"
+
+    def _apply_row_subset(self, table: RelocationTable, arena: np.ndarray,
+                          kernels: dict, idxs) -> None:
+        rows = table.rows
+        slots = table.slots()
+        for i in idxs:
+            r = rows[int(i)]
+            rt = int(r["type"])
+            name = table.name_at(r["symbol_name"])
+            if rt == RelocType.KERNEL:
+                prov = table.object_by_uuid(int(r["provides_so_uuid"]))
+                kernels[name] = f"{prov['name']}:{int(r['st_value'])}"
+                continue
+            slot = slots[name]
+            dstb = arena[slot.offset : slot.offset + slot.nbytes]
+            if rt == RelocType.INIT:
+                init = self.initializer(name, slot.shape, slot.dtype)
+                dstb[:] = np.ascontiguousarray(init).view(np.uint8).ravel()
+                continue
+            prov = table.object_by_uuid(int(r["provides_so_uuid"]))
+            mm = self._payload_mmap(prov["store_name"])
+            src0 = int(r["st_value"]) + int(r["addend"])
+            size = int(r["st_size"])
+            srcb = mm[src0 : src0 + size]
+            if rt == RelocType.CAST:
+                sdef = self._provider_symbol(prov, name)
+                dstb.view(np_dtype(slot.dtype))[:] = srcb.view(
+                    np_dtype(sdef.dtype)
+                ).astype(np_dtype(slot.dtype))
+            else:
+                dstb[:size] = srcb
+
+    def _provider_symbol(self, prov_obj: dict, name: str):
+        obj = self.registry.get(prov_obj["content_hash"])
+        return self._find_symbol(obj, name)
+
+    @staticmethod
+    def _find_symbol(obj: StoreObject, name: str):
+        sdef = obj.symbols.get(name)
+        while sdef is None and "[" in name:
+            name = name.rsplit("[", 1)[0]  # strip slice levels outward-in
+            sdef = obj.symbols.get(name)
+        if sdef is None:
+            raise UnknownObjectError(f"{obj.name} has no symbol {name!r}")
+        return sdef
+
+    def _read_single(self, reloc: Relocation) -> np.ndarray:
+        """Single-symbol read for the lazy path."""
+        ref = reloc.ref
+        dt = np_dtype(ref.dtype)
+        if reloc.rtype == RelocType.INIT or reloc.provider is None:
+            return self.initializer(ref.name, ref.shape, ref.dtype)
+        mm = self._payload_mmap(reloc.provider.store_name)
+        src0 = reloc.st_value + reloc.addend
+        raw = np.array(mm[src0 : src0 + reloc.st_size])  # copy out of mmap
+        sdef = self._find_symbol(reloc.provider, ref.name)
+        arr = raw.view(np_dtype(sdef.dtype))
+        if reloc.rtype == RelocType.CAST:
+            arr = arr.astype(dt)
+        return arr.reshape(ref.shape)

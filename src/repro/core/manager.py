@@ -1,0 +1,133 @@
+"""The Manager (§4.1): mode state machine + object-registry gatekeeper.
+
+``begin_mgmt`` / ``update_obj`` / ``end_mgmt`` exactly as in the paper:
+
+* ``begin_mgmt``  — EPOCH -> MANAGEMENT. Staged world starts as a copy of the
+  committed world.
+* ``update_obj``  — only legal in MANAGEMENT; registers the object and updates
+  the staged world binding for its name. Attempting this during an epoch
+  raises ImmutableEpochError (the paper's key invariant).
+* ``end_mgmt``    — commits the staged world, bumps the epoch counter, flips
+  to EPOCH, and invokes the Executor with the ``materialize`` flag for every
+  application whose relocation table is missing/stale under the new world.
+
+In our ML framing a management time is a cluster maintenance window (publish
+a checkpoint, roll a kernel library, change the mesh); an epoch is the
+steady-state period in between, during which every job start may safely reuse
+the materialized tables.
+"""
+
+from __future__ import annotations
+
+import time
+from enum import Enum
+from typing import Callable, Optional
+
+from .errors import ImmutableEpochError, ModeError, UnknownObjectError
+from .objects import StoreObject
+from .registry import Registry, World
+
+
+class Mode(str, Enum):
+    MANAGEMENT = "management"
+    EPOCH = "epoch"
+
+
+class Manager:
+    def __init__(self, registry: Registry):
+        self.registry = registry
+        st = registry.read_state()
+        self._mode = Mode(st.get("mode", "management"))
+        self._epoch = int(st.get("epoch", 0))
+        self._world = dict(st.get("world", {}))      # committed bindings
+        self._staged = dict(st.get("pending", self._world))  # staged bindings
+        # Hook invoked by end_mgmt; wired to Executor.materialize_all.
+        self.on_materialize: Optional[Callable[[World, int], None]] = None
+
+    # ------------------------------------------------------------- properties
+    @property
+    def mode(self) -> Mode:
+        return self._mode
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def world(self) -> World:
+        """The world view current processes should link against."""
+        if self._mode == Mode.MANAGEMENT:
+            return World(self.registry, self._staged)
+        return World(self.registry, self._world)
+
+    def committed_world(self) -> World:
+        return World(self.registry, self._world)
+
+    # ------------------------------------------------------------- operations
+    def begin_mgmt(self) -> None:
+        if self._mode == Mode.MANAGEMENT:
+            raise ModeError("already in management time")
+        self._mode = Mode.MANAGEMENT
+        self._staged = dict(self._world)
+        self._persist()
+
+    def update_obj(self, obj: StoreObject, payload: bytes = b"") -> StoreObject:
+        """Register (or upgrade) an object. Management time only."""
+        if self._mode != Mode.MANAGEMENT:
+            raise ImmutableEpochError(
+                f"update_obj({obj.name!r}) during epoch {self._epoch}: "
+                "system objects are immutable outside management time"
+            )
+        self.registry.add(obj, payload)
+        self._staged[obj.name] = obj.content_hash
+        self._persist()
+        return obj
+
+    def update_obj_file(self, obj: StoreObject, payload_file) -> StoreObject:
+        if self._mode != Mode.MANAGEMENT:
+            raise ImmutableEpochError(
+                f"update_obj({obj.name!r}) during epoch {self._epoch}"
+            )
+        self.registry.add_with_payload_file(obj, payload_file)
+        self._staged[obj.name] = obj.content_hash
+        self._persist()
+        return obj
+
+    def remove_obj(self, name: str) -> None:
+        if self._mode != Mode.MANAGEMENT:
+            raise ImmutableEpochError(f"remove_obj({name!r}) during epoch")
+        if name not in self._staged:
+            raise UnknownObjectError(name)
+        del self._staged[name]
+        self._persist()
+
+    def end_mgmt(self, materialize: bool = True) -> int:
+        """Commit the staged world and enter a new epoch.
+
+        Returns the new epoch number. Invokes the materialization hook (the
+        Executor with the ``materialize`` flag) *before* the epoch is usable,
+        exactly as MATR extends Nix (§4.1).
+        """
+        if self._mode != Mode.MANAGEMENT:
+            raise ModeError("end_mgmt outside management time")
+        self._world = dict(self._staged)
+        self._epoch += 1
+        new_world = World(self.registry, self._world)
+        if materialize and self.on_materialize is not None:
+            # Materialization happens while still formally in management time:
+            # the Executor may run the dynamic-linking path to observe mappings.
+            self.on_materialize(new_world, self._epoch)
+        self._mode = Mode.EPOCH
+        self._persist()
+        return self._epoch
+
+    # --------------------------------------------------------------- internal
+    def _persist(self) -> None:
+        self.registry.write_state(
+            {
+                "mode": self._mode.value,
+                "epoch": self._epoch,
+                "world": self._world,
+                "pending": self._staged,
+                "mtime": time.time(),
+            }
+        )

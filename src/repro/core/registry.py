@@ -1,0 +1,181 @@
+"""Content-addressed object registry — the Nix-store analogue (§4.1).
+
+Layout on disk::
+
+    <root>/
+      objects/<hash16>-<name>-<version>/
+        manifest.json
+        payload.bin            (optional; tensors at PAGE_BYTES alignment)
+      tables/<app_hash>-<world_hash>.npz     (materialized relocation tables)
+      executables/<key>.jaxexe               (AOT compile cache, optional)
+      state.json               (mode, epoch counter, world view)
+
+The *world view* is the set of (object name -> content hash) bindings that is
+current for the running epoch — the analogue of /nix/var/nix/profiles. The
+``world_hash`` identifies it; relocation tables are keyed by
+(application content hash, world hash) so a table can never be used against a
+world it was not materialized for (StaleTableError otherwise).
+
+The registry itself is mode-agnostic; mutation gating lives in Manager.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Iterator, Optional
+
+from .errors import PayloadIntegrityError, UnknownObjectError
+from .objects import StoreObject, payload_digest
+
+
+class Registry:
+    def __init__(self, root: str | os.PathLike):
+        self.root = Path(root)
+        (self.root / "objects").mkdir(parents=True, exist_ok=True)
+        (self.root / "tables").mkdir(parents=True, exist_ok=True)
+        (self.root / "executables").mkdir(parents=True, exist_ok=True)
+        self._manifest_cache: dict[str, StoreObject] = {}
+
+    # ------------------------------------------------------------------ paths
+    def object_dir(self, obj: StoreObject | str) -> Path:
+        if isinstance(obj, StoreObject):
+            return self.root / "objects" / obj.store_name
+        # by content hash
+        for p in (self.root / "objects").iterdir():
+            if p.name.startswith(obj[:16]):
+                return p
+        raise UnknownObjectError(f"no object with content hash {obj!r}")
+
+    def payload_path(self, obj: StoreObject) -> Path:
+        return self.object_dir(obj) / "payload.bin"
+
+    def table_path(self, app_hash: str, world_hash: str) -> Path:
+        return self.root / "tables" / f"{app_hash[:16]}-{world_hash[:16]}.npz"
+
+    def executable_path(self, key: str) -> Path:
+        return self.root / "executables" / f"{key[:32]}.jaxexe"
+
+    # ---------------------------------------------------------------- objects
+    def add(self, obj: StoreObject, payload: bytes = b"") -> StoreObject:
+        """Insert an object into the store. Idempotent (content-addressed)."""
+        d = self.root / "objects" / obj.store_name
+        if d.exists():
+            return obj  # identical content already present
+        tmp = Path(tempfile.mkdtemp(dir=self.root / "objects"))
+        try:
+            (tmp / "manifest.json").write_text(
+                json.dumps(obj.manifest_json(), indent=1, sort_keys=True)
+            )
+            if payload:
+                if payload_digest(payload) != obj.payload_digest:
+                    raise PayloadIntegrityError(
+                        f"payload digest mismatch for {obj.name}"
+                    )
+                (tmp / "payload.bin").write_bytes(payload)
+            tmp.rename(d)
+        finally:
+            if tmp.exists():
+                import shutil
+
+                shutil.rmtree(tmp, ignore_errors=True)
+        self._manifest_cache[obj.content_hash] = obj
+        return obj
+
+    def add_with_payload_file(self, obj: StoreObject, payload_file: Path) -> StoreObject:
+        """Like add(), but moves a pre-written payload file (large bundles)."""
+        d = self.root / "objects" / obj.store_name
+        if d.exists():
+            return obj
+        tmp = Path(tempfile.mkdtemp(dir=self.root / "objects"))
+        try:
+            (tmp / "manifest.json").write_text(
+                json.dumps(obj.manifest_json(), indent=1, sort_keys=True)
+            )
+            os.replace(payload_file, tmp / "payload.bin")
+            tmp.rename(d)
+        finally:
+            if tmp.exists():
+                import shutil
+
+                shutil.rmtree(tmp, ignore_errors=True)
+        self._manifest_cache[obj.content_hash] = obj
+        return obj
+
+    def get(self, chash: str) -> StoreObject:
+        if chash in self._manifest_cache:
+            return self._manifest_cache[chash]
+        d = self.object_dir(chash)
+        obj = StoreObject.from_manifest(json.loads((d / "manifest.json").read_text()))
+        self._manifest_cache[obj.content_hash] = obj
+        return obj
+
+    def iter_objects(self) -> Iterator[StoreObject]:
+        for p in sorted((self.root / "objects").iterdir()):
+            m = p / "manifest.json"
+            if m.exists():
+                yield StoreObject.from_manifest(json.loads(m.read_text()))
+
+    # ------------------------------------------------------------------ state
+    @property
+    def state_path(self) -> Path:
+        return self.root / "state.json"
+
+    def read_state(self) -> dict:
+        if self.state_path.exists():
+            return json.loads(self.state_path.read_text())
+        return {"mode": "management", "epoch": 0, "world": {}, "pending": {}}
+
+    def write_state(self, state: dict) -> None:
+        tmp = self.state_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(state, indent=1, sort_keys=True))
+        os.replace(tmp, self.state_path)
+
+
+class World:
+    """An immutable name -> StoreObject view (one epoch's bindings)."""
+
+    def __init__(self, registry: Registry, bindings: dict[str, str]):
+        self._registry = registry
+        self._bindings = dict(bindings)  # name -> content hash
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._bindings
+
+    def __iter__(self):
+        return iter(sorted(self._bindings))
+
+    def __len__(self) -> int:
+        return len(self._bindings)
+
+    def resolve(self, name: str) -> StoreObject:
+        try:
+            return self._registry.get(self._bindings[name])
+        except KeyError:
+            raise UnknownObjectError(f"object {name!r} not in world view") from None
+
+    def get(self, name: str) -> Optional[StoreObject]:
+        h = self._bindings.get(name)
+        return self._registry.get(h) if h else None
+
+    @property
+    def bindings(self) -> dict[str, str]:
+        return dict(self._bindings)
+
+    @property
+    def world_hash(self) -> str:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(
+            json.dumps(self._bindings, sort_keys=True, separators=(",", ":")).encode()
+        )
+        return h.hexdigest()
+
+    def applications(self) -> list[StoreObject]:
+        from .objects import ObjectKind
+
+        return [
+            o for n in self for o in [self.resolve(n)] if o.kind == ObjectKind.APPLICATION
+        ]

@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, SyntheticTokens, make_batch
+
+__all__ = ["Prefetcher", "SyntheticTokens", "make_batch"]

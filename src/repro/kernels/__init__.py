@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+    paged_reloc_copy — the paper's relocation-table walk as a scalar-
+                       prefetched paged HBM gather (the stable-linking
+                       epoch loader's TPU form)
+    flash_attention  — blockwise online-softmax attention (causal / GQA /
+                       sliding window) for train + prefill
+    rmsnorm          — fused norm
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+ref.py (pure-jnp oracle). Validated on CPU with interpret=True; compiled
+via Mosaic on TPU.
+"""
+
+from . import flash_attention, paged_reloc_copy, rmsnorm
+
+__all__ = ["flash_attention", "paged_reloc_copy", "rmsnorm"]

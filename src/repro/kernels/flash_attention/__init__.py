@@ -1,0 +1,11 @@
+from . import ops
+from .flash_attention import flash_attention_bhsd
+from .ops import flash_attention
+from .ref import flash_attention_ref
+
+__all__ = [
+    "ops",
+    "flash_attention",
+    "flash_attention_bhsd",
+    "flash_attention_ref",
+]

@@ -1,0 +1,45 @@
+"""jit'd wrapper: model layout (B,S,H,hd) <-> kernel layout (B,H,S,hd)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .ref import flash_attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "interpret",
+                     "block_q", "block_k"),
+)
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Sk, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    out = flash_attention_bhsd(
+        q.swapaxes(1, 2),
+        k.swapaxes(1, 2),
+        v.swapaxes(1, 2),
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out.swapaxes(1, 2)
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

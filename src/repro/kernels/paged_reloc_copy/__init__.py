@@ -1,0 +1,11 @@
+from .paged_reloc_copy import PAGE_ELEMS, PAGE_SHAPE, paged_reloc_copy
+from .ref import paged_reloc_copy_ref
+from . import ops
+
+__all__ = [
+    "PAGE_ELEMS",
+    "PAGE_SHAPE",
+    "paged_reloc_copy",
+    "paged_reloc_copy_ref",
+    "ops",
+]

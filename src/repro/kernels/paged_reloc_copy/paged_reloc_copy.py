@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: table-driven paged relocation copy.
+
+The paper's epoch-time loader walks the relocation table sequentially because
+disk prefetchers love that (§4.2). The TPU-native rethink (DESIGN.md §2):
+materialization compiles the relocation table to a flat page table
+(core.relocation.compile_page_table) and this kernel executes it as a
+**scalar-prefetched gather of whole pages** — the page-index arrays live in
+SMEM (prefetched before the grid starts), each grid step DMAs one
+PAGE_BYTES-page HBM->VMEM->HBM, and Mosaic double-buffers consecutive steps.
+That is exactly "sequential, well suited for memory prefetching", expressed
+in the TPU memory hierarchy.
+
+Layout: a page is PAGE_BYTES = 4096 bytes viewed as (8, 128) int32 — one
+native f32/i32 TPU tile — so the copy is layout-change-free.
+
+The destination arena is passed as an input and aliased to the output:
+pages not named in the table (INIT/host-path relocations) keep their values.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import PAGE_BYTES
+
+PAGE_ELEMS = PAGE_BYTES // 4          # int32 elements per page
+PAGE_SHAPE = (8, PAGE_ELEMS // 8)     # (8, 128): one native int32 tile
+
+
+def _copy_kernel(src_idx_ref, dst_idx_ref, blob_ref, arena_in_ref, out_ref):
+    # src_idx/dst_idx are scalar-prefetch refs (SMEM); the interesting work
+    # happened in the BlockSpec index_maps — here we just move the tile.
+    del src_idx_ref, dst_idx_ref, arena_in_ref
+    out_ref[...] = blob_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_reloc_copy(
+    blob: jax.Array,       # (blob_pages, 8, 128) int32 — concatenated payloads
+    arena: jax.Array,      # (arena_pages, 8, 128) int32 — destination
+    src_page: jax.Array,   # (n,) int32 — page index into blob
+    dst_page: jax.Array,   # (n,) int32 — page index into arena
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    n = src_page.shape[0]
+    if n == 0:
+        return arena
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(
+                (1,) + PAGE_SHAPE,
+                lambda i, src, dst: (src[i], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1,) + PAGE_SHAPE,
+                lambda i, src, dst: (dst[i], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1,) + PAGE_SHAPE,
+            lambda i, src, dst: (dst[i], 0, 0),
+        ),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={3: 0},  # arena is updated in place
+        interpret=interpret,
+    )(src_page, dst_page, blob, arena)

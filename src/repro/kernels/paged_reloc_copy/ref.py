@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the paged relocation copy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_reloc_copy_ref(
+    blob: jax.Array, arena: jax.Array, src_page: jax.Array, dst_page: jax.Array
+) -> jax.Array:
+    if src_page.shape[0] == 0:
+        return arena
+    return arena.at[dst_page].set(blob[src_page])

@@ -1,0 +1,6 @@
+from . import ops
+from .ops import rmsnorm
+from .ref import rmsnorm_ref
+from .rmsnorm import rmsnorm_2d
+
+__all__ = ["ops", "rmsnorm", "rmsnorm_ref", "rmsnorm_2d"]

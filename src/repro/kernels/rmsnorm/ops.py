@@ -1,0 +1,25 @@
+"""jit'd wrapper: any (..., d) layout -> kernel's (N, d)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import rmsnorm_ref
+from .rmsnorm import rmsnorm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(
+    x: jax.Array, scale: jax.Array, *, eps: float = 1e-6, interpret: bool = False
+) -> jax.Array:
+    shape = x.shape
+    out = rmsnorm_2d(
+        x.reshape(-1, shape[-1]), scale, eps=eps, interpret=interpret
+    )
+    return out.reshape(shape)
+
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

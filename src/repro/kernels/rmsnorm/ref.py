@@ -1,0 +1,13 @@
+"""Pure-jnp RMSNorm oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,232 @@
+"""Step-function builders shared by the trainer, server and dry-run.
+
+Everything a cell (arch x shape x mesh) needs to lower:
+    build_step(cfg, shape, mesh, ...) -> StepBundle with
+        fn          — python callable (pre-jit)
+        jitted      — jax.jit with in/out shardings + donation
+        args        — ShapeDtypeStruct pytree for .lower(*args)
+        shardings   — NamedSharding pytrees (params/opt/inputs)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro import models
+from repro.dist.context import mesh_rules
+from repro.dist.sharding import ShardingRules, spec_for
+from repro.optim import OptConfig, adamw_update, init_opt_state
+
+
+# ----------------------------------------------------------------- shardings
+def param_shardings(cfg, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    specs = models.param_specs(cfg)
+    return {
+        n: NamedSharding(mesh, spec_for(s.axes, s.shape, mesh, rules))
+        for n, s in specs.items()
+    }
+
+
+def opt_shardings(cfg, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    ps = param_shardings(cfg, mesh, rules)
+    return {
+        "m": ps,
+        "v": ps,
+        "step": NamedSharding(mesh, PartitionSpec()),
+    }
+
+
+def input_shardings(cfg, shape, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    specs = models.input_specs(cfg, shape)
+    axes = models.input_axes(cfg, shape)
+
+    def resolve(spec_leaf, ax_leaf):
+        return NamedSharding(
+            mesh, spec_for(ax_leaf, spec_leaf.shape, mesh, rules)
+        )
+
+    out: dict = {}
+    for k, v in specs.items():
+        if isinstance(v, dict):  # cache pytree
+            out[k] = {
+                n: resolve(v[n], axes[k][n]) for n in v
+            }
+        else:
+            out[k] = resolve(v, axes[k])
+    return out
+
+
+def abstract_opt(cfg):
+    specs = models.param_specs(cfg)
+    m = {
+        n: jax.ShapeDtypeStruct(s.shape, jnp.float32) for n, s in specs.items()
+    }
+    return {"m": m, "v": dict(m), "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# -------------------------------------------------------------------- steps
+@dataclass
+class StepBundle:
+    kind: str
+    fn: Any
+    jitted: Any
+    args: tuple
+    shardings: dict
+
+
+def make_train_fn(cfg, opt_cfg: OptConfig, *, num_microbatches: int = 1,
+                  impl: str = "chunked", aux_coef: float = 0.01):
+    def train_step(params, opt_state, batch):
+        def loss_on(p, b):
+            return models.loss_fn(cfg, p, b, impl=impl)
+
+        B = batch["tokens"].shape[0]
+        if num_microbatches > 1:
+            mb = B // num_microbatches
+            micro_b = jax.tree.map(
+                lambda x: x.reshape((num_microbatches, mb) + x.shape[1:]), batch
+            )
+
+            def micro(acc, b):
+                loss, g = jax.value_and_grad(loss_on)(params, b)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g
+                )
+                return acc, loss
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, losses = jax.lax.scan(micro, acc0, micro_b)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_on)(params, batch)
+        new_p, new_o, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return new_p, new_o, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_fn(cfg, *, impl: str = "chunked"):
+    def prefill_step(params, batch):
+        logits, cache = models.prefill(cfg, params, batch, impl=impl)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_fn(cfg):
+    def serve_step(params, cache, tokens):
+        logits, cache = models.decode_step(cfg, params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def _with_ctx(fn, mesh, rules):
+    """Install the logical-sharding context for the duration of tracing
+    (models' ``constrain`` calls resolve against this mesh+rules)."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapped(*a, **k):
+        with mesh_rules(mesh, rules):
+            return fn(*a, **k)
+
+    return wrapped
+
+
+def build_step(
+    cfg,
+    shape,
+    mesh: Mesh,
+    *,
+    rules: Optional[ShardingRules] = None,
+    opt_cfg: Optional[OptConfig] = None,
+    num_microbatches: int = 1,
+    impl: str = "chunked",
+) -> StepBundle:
+    """Build the jit-with-shardings step for one (arch x shape) cell."""
+    if rules is None and shape.name == "long_500k":
+        rules = ShardingRules.long_context()
+    elif (
+        rules is None
+        and shape.kind == "decode"
+        and 0 < cfg.num_kv_heads < cfg.num_heads
+    ):
+        # flash-decode cache sharding by default for GQA archs: §Perf
+        # hillclimb B showed 705x less collective traffic on deepseek-67b
+        # (27-38x better step bounds on all GQA archs); MHA archs have no
+        # cache gathers to remove and only pay the psum, so they keep the
+        # default rules (measured: OPTDECODE table in EXPERIMENTS.md).
+        rules = ShardingRules.decode_seq()
+    p_sh = param_shardings(cfg, mesh, rules)
+    in_sh = input_shardings(cfg, shape, mesh, rules)
+    p_abs = models.abstract(cfg)
+    in_abs = models.input_specs(cfg, shape)
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        fn = _with_ctx(
+            make_train_fn(
+                cfg, opt_cfg, num_microbatches=num_microbatches, impl=impl
+            ),
+            mesh, rules,
+        )
+        o_sh = opt_shardings(cfg, mesh, rules)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, o_sh, in_sh),
+            out_shardings=(p_sh, o_sh, repl),
+            donate_argnums=(0, 1),
+        )
+        args = (p_abs, abstract_opt(cfg), in_abs)
+        return StepBundle("train", fn, jitted, args,
+                          {"params": p_sh, "opt": o_sh, "inputs": in_sh})
+
+    if shape.kind == "prefill":
+        fn = _with_ctx(make_prefill_fn(cfg, impl=impl), mesh, rules)
+        _, cache_axes = models.cache_spec(cfg, shape.global_batch, shape.seq_len)
+        cache_sh = {
+            n: NamedSharding(
+                mesh,
+                spec_for(
+                    cache_axes[n],
+                    models.cache_spec(cfg, shape.global_batch, shape.seq_len)[0][n].shape,
+                    mesh,
+                    rules,
+                ),
+            )
+            for n in cache_axes
+        }
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, in_sh),
+            out_shardings=(repl, cache_sh),
+        )
+        args = (p_abs, in_abs)
+        return StepBundle("prefill", fn, jitted, args,
+                          {"params": p_sh, "inputs": in_sh, "cache": cache_sh})
+
+    # decode
+    fn = _with_ctx(make_decode_fn(cfg), mesh, rules)
+    cache_sh = in_sh["cache"]
+    tok_sh = in_sh["tokens"]
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_sh, cache_sh, tok_sh),
+        out_shardings=(repl, cache_sh),
+        donate_argnums=(1,),
+    )
+    args = (p_abs, in_abs["cache"], in_abs["tokens"])
+    return StepBundle("decode", fn, jitted, args,
+                      {"params": p_sh, "inputs": in_sh})

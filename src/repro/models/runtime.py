@@ -1,0 +1,41 @@
+"""Trace-time runtime switches.
+
+``unroll_scans()`` makes every layer stack trace as straight-line code
+instead of ``lax.scan``. Needed because XLA's HloCostAnalysis counts a while
+loop's body ONCE (trip counts are opaque to it) — so the dry-run's cost
+probes lower small-L configs unrolled and extrapolate affinely in layer-type
+counts (launch/dryrun.py). Deployed programs keep the scans (small HLO,
+fast compile).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+_UNROLL: ContextVar[bool] = ContextVar("repro_unroll_scans", default=False)
+
+
+def scans_unrolled() -> bool:
+    return _UNROLL.get()
+
+
+@contextlib.contextmanager
+def unroll_scans(on: bool = True):
+    token = _UNROLL.set(on)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def remat_wrap(fn, cfg):
+    """Apply the config's remat policy to a layer body."""
+    import jax
+
+    pol = getattr(cfg, "remat_policy", "nothing")
+    if pol == "none":
+        return fn
+    if pol == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)

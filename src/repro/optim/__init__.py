@@ -1,0 +1,3 @@
+from .adamw import OptConfig, adamw_update, init_opt_state, lr_at
+
+__all__ = ["OptConfig", "adamw_update", "init_opt_state", "lr_at"]

@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + greedy decode over a KV/SSM cache.
+
+Startup follows the stable-linking epoch path (table-driven weight load +
+AOT compile cache) exactly like the trainer; request batches share one
+cache. Greedy sampling keeps tests deterministic; the decode step is the
+same jitted ``serve_step`` the dry-run lowers for decode shapes.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_out: int = 0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, impl: str = "chunked", cache_len: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.impl = impl
+        self.cache_len = cache_len
+
+        def _prefill(params, batch):
+            return models.prefill(
+                cfg, params, batch, impl=impl,
+                cache_len=cache_len or None,
+            )
+
+        def _decode(params, cache, tokens):
+            logits, cache = models.decode_step(cfg, params, cache, tokens)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt[:, None], cache
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    def generate(
+        self, prompts: np.ndarray, max_new_tokens: int
+    ) -> tuple[np.ndarray, ServeStats]:
+        """prompts: (B, S) int32 -> (B, max_new_tokens) greedy continuations."""
+        stats = ServeStats()
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if self.cfg.is_encdec:
+            # modality stub: frames derived deterministically from prompts
+            rng = np.random.default_rng(0)
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal(
+                    (prompts.shape[0], prompts.shape[1], self.cfg.d_model)
+                ),
+                jnp.dtype(self.cfg.dtype),
+            )
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(tok)
+        stats.prefill_s = time.perf_counter() - t0
+
+        out = [np.asarray(tok)]
+        t1 = time.perf_counter()
+        for _ in range(max_new_tokens - 1):
+            tok, cache = self._decode(self.params, cache, tok)
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        stats.decode_s = time.perf_counter() - t1
+        stats.tokens_out = prompts.shape[0] * max_new_tokens
+        return np.concatenate(out, axis=1), stats

@@ -1,0 +1,3 @@
+from .trainer import TrainConfig, Trainer, TrainResult
+
+__all__ = ["TrainConfig", "Trainer", "TrainResult"]

@@ -1,0 +1,53 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device
+(the dry-run subprocess sets its own fake-device count)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Executor,
+    Manager,
+    ObjectKind,
+    PAGE_BYTES,
+    Registry,
+    SymbolDef,
+    SymbolRef,
+    align_up,
+    make_object,
+)
+
+
+@pytest.fixture()
+def linker(tmp_path):
+    reg = Registry(tmp_path / "store")
+    mgr = Manager(reg)
+    ex = Executor(reg, mgr)
+    return reg, mgr, ex
+
+
+def build_bundle(name: str, tensors: dict[str, np.ndarray], version="1"):
+    """Page-aligned bundle from named numpy tensors."""
+    payload = bytearray()
+    syms = []
+    for tname in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[tname])
+        off = len(payload)
+        payload.extend(arr.tobytes())
+        payload.extend(b"\x00" * (align_up(len(payload), PAGE_BYTES) - len(payload)))
+        syms.append(
+            SymbolDef(tname, tuple(arr.shape), str(arr.dtype), off, arr.nbytes)
+        )
+    return make_object(
+        name=name, version=version, kind=ObjectKind.BUNDLE,
+        symbols=syms, payload=bytes(payload),
+    )
+
+
+def build_app(name: str, refs: list[SymbolRef], needed: list[str]):
+    app, _ = make_object(
+        name=name, version="1", kind=ObjectKind.APPLICATION,
+        refs=refs, needed=needed,
+    )
+    return app

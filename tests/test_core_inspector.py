@@ -1,0 +1,144 @@
+"""Inspector + the paper's three vignettes (§5.3)."""
+
+import json
+
+import numpy as np
+
+from repro.core import SymbolRef, inspector, interpose
+from repro.core.executor import LoadStats
+
+from conftest import build_app, build_bundle
+
+
+def _world_with_app(linker):
+    _, mgr, ex = linker
+    libfoo, pfoo = build_bundle(
+        "libfoo",
+        {"foo/a": np.ones(4, np.float32), "foo/b": np.ones(8, np.float32)},
+    )
+    libbar, pbar = build_bundle("libbar", {"baz": np.ones(2, np.float32)})
+    app1 = build_app(
+        "app1",
+        [
+            SymbolRef("foo/a", (4,), "float32"),
+            SymbolRef("foo/b", (8,), "float32"),
+            SymbolRef("baz", (2,), "float32"),
+        ],
+        ["libfoo", "libbar"],
+    )
+    app2 = build_app("app2", [SymbolRef("foo/a", (4,), "float32")], ["libfoo"])
+    for o, p in [(libfoo, pfoo), (libbar, pbar), (app1, b""), (app2, b"")]:
+        mgr.update_obj(o, p)
+    mgr.end_mgmt()
+    return mgr, ex, libfoo, libbar
+
+
+def test_json_csv_exports(linker):
+    mgr, ex, *_ = _world_with_app(linker)
+    img = ex.load("app1")
+    d = json.loads(inspector.to_json(img.table))
+    assert len(d["relocations"]) == 3
+    assert {r["symbol_name"] for r in d["relocations"]} == {
+        "foo/a", "foo/b", "baz",
+    }
+    csv_text = inspector.to_csv(img.table)
+    assert csv_text.count("\n") == 4  # header + 3 rows
+    assert "provides_so_name" in csv_text.splitlines()[0]
+
+
+def test_vignette1_abi_compatibility(linker):
+    """Alice checks whether the new libfoo still exports what app1 binds."""
+    mgr, ex, libfoo, _ = _world_with_app(linker)
+    img = ex.load("app1")
+    # new libfoo drops foo/b and changes foo/a's shape
+    new_foo, _ = build_bundle(
+        "libfoo-new", {"foo/a": np.ones((2, 2), np.float32)}
+    )
+    conn = inspector.to_sqlite([img.table], abi_objects=[new_foo, libfoo])
+    missing = inspector.abi_incompatibilities(
+        conn, app="app1", old_bundle="libfoo", new_bundle="libfoo-new"
+    )
+    assert [m[0] for m in missing] == ["foo/b"]
+    # semantic (typed) check catches the shape change name-presence misses
+    changes = inspector.abi_shape_changes(
+        conn, app="app1", old=libfoo, new=new_foo
+    )
+    assert changes[0]["symbol"] == "foo/a"
+    assert changes[0]["new"][0] == (2, 2)
+
+
+def test_vignette2_cve_audit(linker):
+    """Bob finds every app binding libbar's vulnerable `baz`."""
+    mgr, ex, *_ = _world_with_app(linker)
+    t1 = ex.load("app1").table
+    t2 = ex.load("app2").table
+    conn = inspector.to_sqlite([t1, t2])
+    assert inspector.cve_audit(conn, bundle="libbar", symbol="baz") == ["app1"]
+    assert set(
+        inspector.cve_audit(conn, bundle="libfoo", symbol="foo/a")
+    ) == {"app1", "app2"}
+
+
+def test_vignette3_fine_grained_interposition(linker):
+    """Charlie routes only app1's foo/a to an instrumented bundle — the
+    rebinding dynamic linking's single search order cannot express."""
+    mgr, ex, *_ = _world_with_app(linker)
+    img = ex.load("app1")
+    dbg, pdbg = build_bundle(
+        "libfoo-debug", {"foo/a": np.full(4, 42.0, np.float32)}
+    )
+    mgr.begin_mgmt()
+    mgr.update_obj(dbg, pdbg)
+    mgr.end_mgmt()
+    n = interpose.rebind(img.table, symbol_glob="foo/a", new_provider=dbg)
+    assert n == 1
+    app_obj = mgr.world().resolve("app1")
+    img2 = ex._apply_table(app_obj, img.table, LoadStats())
+    assert np.array_equal(img2["foo/a"], np.full(4, 42.0, np.float32))
+    assert np.array_equal(img2["foo/b"], np.ones(8, np.float32))  # untouched
+    # the edit is visible in the inspector (flags != 0)
+    recs = inspector.table_records(img.table)
+    edited = [r for r in recs if r["flags"]]
+    assert [r["symbol_name"] for r in edited] == ["foo/a"]
+    assert edited[0]["provides_so_name"] == "libfoo-debug"
+
+
+def test_abi_function_lists_exports(linker):
+    mgr, ex, libfoo, _ = _world_with_app(linker)
+    rows = inspector.abi_records(libfoo)
+    assert {r["symbol_name"] for r in rows} == {"foo/a", "foo/b"}
+    assert all(r["object_name"] == "libfoo" for r in rows)
+
+
+def test_interpose_sliced_symbols_and_globs(linker):
+    """Regression: slice-suffixed symbol names ([i]) must glob literally,
+    and rebinding must survive the strtab rebuild (paged loader included)."""
+    import numpy as np
+    from conftest import build_app, build_bundle
+    from repro.core import SymbolRef
+
+    _, mgr, ex = linker
+    lib, pl = build_bundle(
+        "lib", {f"w[{i}]": np.full(8, float(i), np.float32) for i in range(4)}
+    )
+    app = build_app(
+        "app", [SymbolRef(f"w[{i}]", (8,), "float32") for i in range(4)], ["lib"]
+    )
+    mgr.update_obj(lib, pl)
+    mgr.update_obj(app)
+    mgr.end_mgmt()
+    img = ex.load("app")
+    dbg, pd = build_bundle("dbg", {"w[2]": np.full(8, 99.0, np.float32)})
+    mgr.begin_mgmt()
+    mgr.update_obj(dbg, pd)
+    mgr.end_mgmt()
+    assert interpose.rebind(img.table, symbol_glob="w[2]", new_provider=dbg) == 1
+    img2 = ex._apply_table(mgr.world().resolve("app"), img.table, LoadStats())
+    got = [float(img2[f"w[{i}]"][0]) for i in range(4)]
+    assert got == [0.0, 1.0, 99.0, 3.0]
+    # wildcard glob rebinds everything back to the stacked provider
+    assert (
+        interpose.rebind(img.table, symbol_glob="w[*", new_provider=lib) == 4
+    )
+    img3 = ex._apply_table(mgr.world().resolve("app"), img.table, LoadStats())
+    assert [float(img3[f"w[{i}]"][0]) for i in range(4)] == [0.0, 1.0, 2.0, 3.0]

@@ -1,0 +1,104 @@
+"""Manager state machine: the paper's management-time/epoch invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ImmutableEpochError,
+    Manager,
+    Mode,
+    ModeError,
+    Registry,
+    StaleTableError,
+)
+
+from conftest import build_app, build_bundle
+from repro.core import SymbolRef
+
+
+def test_initial_mode_is_management(linker):
+    _, mgr, _ = linker
+    assert mgr.mode == Mode.MANAGEMENT
+    assert mgr.epoch == 0
+
+
+def test_end_mgmt_enters_epoch_and_bumps_counter(linker):
+    _, mgr, _ = linker
+    assert mgr.end_mgmt() == 1
+    assert mgr.mode == Mode.EPOCH
+    with pytest.raises(ModeError):
+        mgr.end_mgmt()
+
+
+def test_update_during_epoch_forbidden(linker):
+    _, mgr, _ = linker
+    bundle, payload = build_bundle("libx", {"a": np.zeros(4, np.float32)})
+    mgr.end_mgmt()
+    with pytest.raises(ImmutableEpochError):
+        mgr.update_obj(bundle, payload)
+    # begin_mgmt lifts the restriction
+    mgr.begin_mgmt()
+    mgr.update_obj(bundle, payload)
+    assert mgr.end_mgmt() == 2
+
+
+def test_staged_world_not_visible_until_commit(linker):
+    reg, mgr, _ = linker
+    bundle, payload = build_bundle("libx", {"a": np.zeros(4, np.float32)})
+    mgr.end_mgmt()
+    mgr.begin_mgmt()
+    mgr.update_obj(bundle, payload)
+    assert "libx" not in mgr.committed_world()
+    assert "libx" in mgr.world()  # staged view during mgmt
+    mgr.end_mgmt()
+    assert "libx" in mgr.committed_world()
+
+
+def test_state_persists_across_manager_instances(linker):
+    reg, mgr, _ = linker
+    bundle, payload = build_bundle("libx", {"a": np.zeros(4, np.float32)})
+    mgr.update_obj(bundle, payload)
+    mgr.end_mgmt()
+    mgr2 = Manager(reg)
+    assert mgr2.mode == Mode.EPOCH
+    assert mgr2.epoch == 1
+    assert "libx" in mgr2.world()
+
+
+def test_end_mgmt_materializes_apps(linker):
+    reg, mgr, ex = linker
+    a = np.arange(8, dtype=np.float32)
+    bundle, payload = build_bundle("libw", {"w": a})
+    app = build_app("app", [SymbolRef("w", (8,), "float32")], ["libw"])
+    mgr.update_obj(bundle, payload)
+    mgr.update_obj(app)
+    mgr.end_mgmt()
+    # table exists: stable load works without any resolution
+    img = ex.load("app", strategy="stable")
+    assert np.array_equal(img["w"], a)
+
+
+def test_stale_table_rejected_after_world_change(linker):
+    reg, mgr, ex = linker
+    a = np.arange(8, dtype=np.float32)
+    bundle, payload = build_bundle("libw", {"w": a})
+    app = build_app("app", [SymbolRef("w", (8,), "float32")], ["libw"])
+    mgr.update_obj(bundle, payload)
+    mgr.update_obj(app)
+    mgr.end_mgmt()
+    old_world = mgr.world()
+    # world changes: new bundle version
+    mgr.begin_mgmt()
+    b2, p2 = build_bundle("libw", {"w": a * 2}, version="2")
+    mgr.update_obj(b2, p2)
+    mgr.end_mgmt()
+    img = ex.load("app", strategy="stable")
+    assert np.array_equal(img["w"], a * 2)
+    # old world's table is not used against the new world
+    from repro.core.relocation import RelocationTable
+
+    t = RelocationTable.load(
+        reg.table_path(app.content_hash, old_world.world_hash)
+    )
+    with pytest.raises(StaleTableError):
+        t.check_fresh(mgr.world().world_hash, app.content_hash)

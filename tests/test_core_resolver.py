@@ -1,0 +1,129 @@
+"""Dynamic-resolver semantics: ld.so-faithful search order, weak symbols,
+slices, mismatch handling (paper §2.1, Figure 3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DynamicResolver,
+    RelocType,
+    SymbolMismatchError,
+    SymbolRef,
+    UnresolvedSymbolError,
+    dependency_closure,
+)
+
+from conftest import build_app, build_bundle
+
+
+def _world(linker, *objs):
+    _, mgr, _ = linker
+    for obj, payload in objs:
+        mgr.update_obj(obj, payload)
+    return mgr.world()
+
+
+def test_first_match_wins_search_order(linker):
+    """Both libs export `foo`; the one earlier in `needed` provides it —
+    the Figure 3 limitation of global search order."""
+    a = build_bundle("liba", {"foo": np.ones(4, np.float32)})
+    b = build_bundle("libb", {"foo": np.full(4, 2.0, np.float32)})
+    app = build_app("app", [SymbolRef("foo", (4,), "float32")], ["liba", "libb"])
+    world = _world(linker, a, b, (app, b""))
+    reloc = DynamicResolver(world).resolve(world.resolve("app"))
+    assert reloc[0].provider.name == "liba"
+
+    app2 = build_app("app2", [SymbolRef("foo", (4,), "float32")], ["libb", "liba"])
+    _, mgr, _ = linker
+    mgr.update_obj(app2)
+    world = mgr.world()
+    reloc = DynamicResolver(world).resolve(world.resolve("app2"))
+    assert reloc[0].provider.name == "libb"
+
+
+def test_bfs_closure_order(linker):
+    """Dependencies load breadth-first (ld.so order), not depth-first."""
+    libc = build_bundle("libc", {"c": np.zeros(2, np.float32)})
+    libd = build_bundle("libd", {"d": np.zeros(2, np.float32)})
+    from repro.core import ObjectKind, SymbolDef, make_object
+
+    liba, _ = make_object(
+        name="liba", version="1", kind=ObjectKind.BUNDLE,
+        symbols=[], needed=["libd"],
+    )
+    app = build_app("app", [], ["liba", "libc"])
+    world = _world(linker, libc, libd, (liba, b""), (app, b""))
+    scope = dependency_closure(world.resolve("app"), world)
+    assert [o.name for o in scope] == ["app", "liba", "libc", "libd"]
+
+
+def test_weak_symbol_falls_back_to_init(linker):
+    app = build_app("app", [SymbolRef("nope", (4,), "float32", weak=True)], [])
+    world = _world(linker, (app, b""))
+    r = DynamicResolver(world).resolve(world.resolve("app"))[0]
+    assert r.rtype == RelocType.INIT and r.provider is None
+
+
+def test_strong_unresolved_raises(linker):
+    app = build_app("app", [SymbolRef("nope", (4,), "float32")], [])
+    world = _world(linker, (app, b""))
+    with pytest.raises(UnresolvedSymbolError):
+        DynamicResolver(world).resolve(world.resolve("app"))
+
+
+def test_dtype_cast_classified(linker):
+    b = build_bundle("lib", {"x": np.ones(4, np.float64)})
+    app = build_app("app", [SymbolRef("x", (4,), "float32")], ["lib"])
+    world = _world(linker, b, (app, b""))
+    r = DynamicResolver(world).resolve(world.resolve("app"))[0]
+    assert r.rtype == RelocType.CAST
+
+
+def test_slice_matching_with_addend(linker):
+    stacked = np.arange(24, dtype=np.float32).reshape(3, 8)
+    b = build_bundle("lib", {"w": stacked})
+    app = build_app(
+        "app",
+        [SymbolRef("w[2]", (8,), "float32"), SymbolRef("w[0]", (8,), "float32")],
+        ["lib"],
+    )
+    world = _world(linker, b, (app, b""))
+    rel = DynamicResolver(world).resolve(world.resolve("app"))
+    assert rel[0].rtype == RelocType.SLICE
+    assert rel[0].addend == 2 * 8 * 4          # the ELF-addend analogue
+    assert rel[1].addend == 0
+
+
+def test_slice_out_of_range_not_matched(linker):
+    b = build_bundle("lib", {"w": np.zeros((3, 8), np.float32)})
+    app = build_app("app", [SymbolRef("w[3]", (8,), "float32")], ["lib"])
+    world = _world(linker, b, (app, b""))
+    with pytest.raises(UnresolvedSymbolError):
+        DynamicResolver(world).resolve(world.resolve("app"))
+
+
+def test_shape_mismatch_error_vs_skip(linker):
+    bad = build_bundle("libbad", {"x": np.zeros(5, np.float32)})
+    good = build_bundle("libgood", {"x": np.ones(4, np.float32)})
+    app = build_app("app", [SymbolRef("x", (4,), "float32")], ["libbad", "libgood"])
+    world = _world(linker, bad, good, (app, b""))
+    with pytest.raises(SymbolMismatchError):
+        DynamicResolver(world, on_mismatch="error").resolve(world.resolve("app"))
+    r = DynamicResolver(world, on_mismatch="skip").resolve(world.resolve("app"))
+    assert r[0].provider.name == "libgood"
+
+
+def test_direct_binding_hints_reduce_probes(linker):
+    libs = [
+        build_bundle(f"lib{i}", {f"s{i}": np.zeros(2, np.float32)})
+        for i in range(20)
+    ]
+    refs = [SymbolRef(f"s{i}", (2,), "float32") for i in range(20)]
+    app = build_app("app", refs, [f"lib{i}" for i in range(20)])
+    world = _world(linker, *libs, (app, b""))
+    full = DynamicResolver(world)
+    full.resolve(world.resolve("app"))
+    hints = {f"s{i}": f"lib{i}" for i in range(20)}
+    hinted = DynamicResolver(world)
+    hinted.resolve_with_hints(world.resolve("app"), hints)
+    assert hinted.probe_count < full.probe_count

@@ -1,0 +1,111 @@
+"""Pallas kernel sweeps: shapes x dtypes, interpret=True vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.paged_reloc_copy import paged_reloc_copy, paged_reloc_copy_ref
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+
+rng = np.random.default_rng(7)
+
+
+def t(shape, dt=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dt)
+
+
+FA_CASES = [
+    # B, Sq, Sk, H, KV, hd, causal, window
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 256, 256, 8, 1, 128, True, 0),       # MQA
+    (2, 96, 96, 2, 2, 32, True, 0),          # non-block-multiple (padding)
+    (1, 128, 128, 4, 4, 64, True, 64),       # sliding window
+    (1, 64, 192, 4, 2, 64, False, 0),        # cross attention Sq != Sk
+    (1, 200, 72, 2, 1, 16, True, 0),         # ragged both sides
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_ref_f32(case):
+    B, Sq, Sk, H, KV, hd, causal, window = case
+    q, k, v = t((B, Sq, H, hd)), t((B, Sk, KV, hd)), t((B, Sk, KV, hd))
+    o_ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    o = flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=64, block_k=64, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dt", ["bfloat16", "float32"])
+def test_flash_attention_dtypes(dt):
+    import ml_dtypes
+
+    npdt = np.float32 if dt == "float32" else ml_dtypes.bfloat16
+    q = jnp.asarray(rng.standard_normal((1, 128, 4, 64)), dtype=jnp.dtype(dt))
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), dtype=jnp.dtype(dt))
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), dtype=jnp.dtype(dt))
+    o_ref = flash_attention_ref(q, k, v, causal=True)
+    o = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                        interpret=True)
+    assert o.dtype == q.dtype
+    tol = 2e-5 if dt == "float32" else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), atol=tol
+    )
+
+
+def test_flash_attention_window_blocks_skipped_consistent():
+    """Window result must equal ref even when whole kv blocks are skipped."""
+    q, k, v = t((1, 512, 2, 32)), t((1, 512, 2, 32)), t((1, 512, 2, 32))
+    o_ref = flash_attention_ref(q, k, v, causal=True, window=100)
+    o = flash_attention(q, k, v, causal=True, window=100,
+                        block_q=128, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+RMS_CASES = [(1, 8), (4, 300), (37, 128), (128, 1024), (5, 7)]
+
+
+@pytest.mark.parametrize("shape", RMS_CASES)
+@pytest.mark.parametrize("dt", ["float32", "bfloat16"])
+def test_rmsnorm_matches_ref(shape, dt):
+    x = jnp.asarray(rng.standard_normal(shape), dtype=jnp.dtype(dt))
+    s = jnp.asarray(rng.standard_normal(shape[-1]), dtype=jnp.dtype(dt))
+    got = rmsnorm(x, s, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    tol = 1e-5 if dt == "float32" else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("n_pages,n_copies", [(4, 2), (64, 64), (128, 37)])
+def test_paged_copy_matches_ref(n_pages, n_copies):
+    blob = jnp.asarray(
+        rng.integers(-(2**31), 2**31 - 1, (n_pages, 8, 128), dtype=np.int32)
+    )
+    arena = jnp.asarray(
+        rng.integers(-(2**31), 2**31 - 1, (n_pages, 8, 128), dtype=np.int32)
+    )
+    src = jnp.asarray(rng.integers(0, n_pages, n_copies, dtype=np.int32))
+    # dst indices unique (table semantics: one write per arena page)
+    dst = jnp.asarray(
+        rng.permutation(n_pages)[:n_copies].astype(np.int32)
+    )
+    got = paged_reloc_copy(blob, arena, src, dst, interpret=True)
+    ref = paged_reloc_copy_ref(blob, arena, src, dst)
+    assert bool((got == ref).all())
+
+
+def test_paged_copy_preserves_untouched_pages():
+    blob = jnp.zeros((4, 8, 128), jnp.int32)
+    arena = jnp.ones((8, 8, 128), jnp.int32) * 7
+    got = paged_reloc_copy(
+        blob, arena, jnp.asarray([0], jnp.int32), jnp.asarray([3], jnp.int32),
+        interpret=True,
+    )
+    assert bool((np.asarray(got)[3] == 0).all())
+    untouched = [i for i in range(8) if i != 3]
+    assert bool((np.asarray(got)[untouched] == 7).all())

@@ -1,0 +1,192 @@
+"""Hypothesis property tests over the stable linker's core invariants.
+
+P1: stable (materialized) loading is extensionally EQUAL to dynamic loading
+    for any world — the paper's central correctness claim (§4.2: the table
+    stores exactly the mapping a traditional dynamic linker produces).
+P2: resolution is deterministic (same world -> same relocation mapping).
+P3: first-match-wins follows BFS needed-order (interposition semantics).
+P4: table save/load roundtrips bit-exactly.
+P5: arena layouts never overlap and are page-aligned.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DynamicResolver,
+    Executor,
+    Manager,
+    PAGE_BYTES,
+    Registry,
+    SymbolRef,
+)
+from repro.core.relocation import RelocationTable, build_arena_layout
+
+from conftest import build_app, build_bundle
+
+# ---------------------------------------------------------------- strategies
+sym_names = st.lists(
+    st.text(alphabet="abcdefgh", min_size=1, max_size=6).map(lambda s: "s/" + s),
+    min_size=1,
+    max_size=12,
+    unique=True,
+)
+
+
+@st.composite
+def worlds(draw):
+    """A random world: n bundles exporting disjoint-or-overlapping symbols,
+    one app referencing a subset (some weak)."""
+    names = draw(sym_names)
+    n_bundles = draw(st.integers(1, 4))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    bundles = []
+    for i in range(n_bundles):
+        exported = draw(
+            st.lists(st.sampled_from(names), unique=True, min_size=0,
+                     max_size=len(names))
+        )
+        tensors = {
+            s: rng.standard_normal(draw(st.integers(1, 64))).astype(np.float32)
+            for s in exported
+        }
+        bundles.append((f"lib{i}", tensors))
+    exported_anywhere = {s for _, ts in bundles for s in ts}
+    refs = []
+    for s in names:
+        if s in exported_anywhere:
+            # shape must match the FIRST provider in search order
+            for _, ts in bundles:
+                if s in ts:
+                    refs.append(SymbolRef(s, ts[s].shape, "float32"))
+                    break
+        else:
+            refs.append(SymbolRef(s, (4,), "float32", weak=True))
+    return bundles, refs
+
+
+def _publish(tmp, bundles, refs):
+    reg = Registry(tmp)
+    mgr = Manager(reg)
+    ex = Executor(reg, mgr)
+    objs = [build_bundle(n, ts) for n, ts in bundles]
+    app = build_app("app", refs, [n for n, _ in bundles])
+    for o, p in objs:
+        mgr.update_obj(o, p)
+    mgr.update_obj(app)
+    mgr.end_mgmt()
+    return reg, mgr, ex
+
+
+@given(worlds())
+@settings(max_examples=25, deadline=None)
+def test_p1_stable_equals_dynamic(tmp_path_factory_world):
+    bundles, refs = tmp_path_factory_world
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # skip worlds where shapes collide across providers (mismatch error
+        # is legitimate; P1 is about resolvable worlds)
+        reg, mgr, ex = _publish(tmp, bundles, refs)
+        try:
+            img_d = ex.load("app", strategy="dynamic")
+        except Exception:
+            return
+        img_s = ex.load("app", strategy="stable")
+        assert set(img_d.tensors) == set(img_s.tensors)
+        for k in img_d.tensors:
+            assert np.array_equal(img_d[k], img_s[k]), k
+
+
+@given(worlds())
+@settings(max_examples=15, deadline=None)
+def test_p2_resolution_deterministic(tmp_path_factory_world):
+    bundles, refs = tmp_path_factory_world
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        reg, mgr, ex = _publish(tmp, bundles, refs)
+        world = mgr.world()
+        app = world.resolve("app")
+        try:
+            r1 = DynamicResolver(world).resolve(app)
+        except Exception:
+            return
+        r2 = DynamicResolver(world).resolve(app)
+        assert [
+            (r.ref.name, r.provider.name if r.provider else None, int(r.rtype))
+            for r in r1
+        ] == [
+            (r.ref.name, r.provider.name if r.provider else None, int(r.rtype))
+            for r in r2
+        ]
+
+
+@given(worlds())
+@settings(max_examples=15, deadline=None)
+def test_p3_first_match_in_needed_order(tmp_path_factory_world):
+    bundles, refs = tmp_path_factory_world
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        reg, mgr, ex = _publish(tmp, bundles, refs)
+        world = mgr.world()
+        app = world.resolve("app")
+        try:
+            rel = DynamicResolver(world).resolve(app)
+        except Exception:
+            return
+        order = {n: i for i, (n, _) in enumerate(bundles)}
+        by_name = {n: ts for n, ts in bundles}
+        for r in rel:
+            if r.provider is None:
+                continue
+            # no earlier bundle may export the same symbol
+            for n, ts in bundles:
+                if order[n] < order[r.provider.name]:
+                    assert r.ref.name not in ts
+
+
+@given(worlds())
+@settings(max_examples=10, deadline=None)
+def test_p4_table_roundtrip(tmp_path_factory_world):
+    bundles, refs = tmp_path_factory_world
+    import tempfile
+    from pathlib import Path
+
+    with tempfile.TemporaryDirectory() as tmp:
+        reg, mgr, ex = _publish(tmp, bundles, refs)
+        try:
+            img = ex.load("app", strategy="stable")
+        except Exception:
+            return
+        p = Path(tmp) / "t.npz"
+        img.table.save(p)
+        t2 = RelocationTable.load(p)
+        assert np.array_equal(img.table.rows, t2.rows)
+        assert img.table.strtab == t2.strtab
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.text("abcdef", min_size=1, max_size=5),
+            st.integers(1, 500),
+        ),
+        min_size=1,
+        max_size=20,
+        unique_by=lambda t: t[0],
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_p5_arena_layout_disjoint_aligned(entries):
+    refs = [SymbolRef(n, (k,), "float32") for n, k in entries]
+    slots, size = build_arena_layout(refs)
+    spans = sorted((s.offset, s.offset + s.nbytes) for s in slots.values())
+    for (o, e), (o2, _) in zip(spans, spans[1:]):
+        assert e <= o2
+    for s in slots.values():
+        assert s.offset % PAGE_BYTES == 0
+    assert size >= max(e for _, e in spans)
