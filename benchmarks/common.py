@@ -1,30 +1,30 @@
-"""Shared benchmark plumbing: timed registry worlds + CSV emit."""
+"""Shared benchmark plumbing: timed workspace worlds + CSV emit."""
 
 from __future__ import annotations
 
-import tempfile
 import time
-from contextlib import contextmanager
 
-from repro.core import Executor, Manager, Registry
+from repro.link import Workspace
+
+
+def fresh_workspace(root: str | None = None) -> Workspace:
+    return (
+        Workspace.open(root) if root else Workspace.ephemeral("repro-bench-")
+    )
 
 
 def fresh_linker(root: str | None = None):
-    root = root or tempfile.mkdtemp(prefix="repro-bench-")
-    reg = Registry(root)
-    mgr = Manager(reg)
-    ex = Executor(reg, mgr)
-    return reg, mgr, ex
+    """Deprecated shape kept for out-of-tree scripts: the engine-room
+    triple of a fresh Workspace."""
+    ws = fresh_workspace(root)
+    return ws.registry, ws.manager, ws.executor
 
 
-def publish_world(mgr, objects_with_payloads) -> None:
-    from repro.core import Mode
-
-    if mgr.mode != Mode.MANAGEMENT:
-        mgr.begin_mgmt()
-    for obj, payload in objects_with_payloads:
-        mgr.update_obj(obj, payload)
-    mgr.end_mgmt()
+def publish_world(ws: Workspace, objects_with_payloads) -> int:
+    with ws.management() as tx:
+        for obj, payload in objects_with_payloads:
+            tx.publish(obj, payload)
+    return tx.epoch
 
 
 def timeit(fn, *, warmup: int = 1, trials: int = 3):

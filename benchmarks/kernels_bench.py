@@ -22,20 +22,20 @@ from repro.core import PAGE_BYTES, RelocType, compile_page_table
 from repro.kernels.paged_reloc_copy.ops import as_pages
 from repro.kernels.paged_reloc_copy.ref import paged_reloc_copy_ref
 
-from .common import emit, fresh_linker, publish_world, timeit
+from .common import emit, fresh_workspace, publish_world, timeit
 
 
 def bench_reloc_apply(n: int = 100, f: int = 200) -> dict:
-    reg, mgr, ex = fresh_linker()
+    ws = fresh_workspace()
     bundles, app = make_world_spec(n, f)
-    publish_world(mgr, bundles + [(app, b"")])
-    img = ex.load(app.name, strategy="stable")
+    publish_world(ws, bundles + [(app, b"")])
+    img = ws.load(app.name, strategy="stable")
     table = img.table
 
     # --- per-row loop (paper-faithful iteration, one read per relocation)
     mms = {
         int(o["uuid"]): np.memmap(
-            reg.root / "objects" / o["store_name"] / "payload.bin",
+            ws.registry.root / "objects" / o["store_name"] / "payload.bin",
             dtype=np.uint8, mode="r",
         )
         for o in table.objects
@@ -58,7 +58,7 @@ def bench_reloc_apply(n: int = 100, f: int = 200) -> dict:
 
     # --- grouped sequential reads (Executor default)
     grouped_s, *_ = timeit(
-        lambda: ex.load(app.name, strategy="stable"), trials=3
+        lambda: ws.load(app.name, strategy="stable"), trials=3
     )
 
     # --- page-table vectorized copy (host execution of the TPU plan)
@@ -68,7 +68,7 @@ def bench_reloc_apply(n: int = 100, f: int = 200) -> dict:
         if o["payload_size"] == 0:
             continue
         raw = np.fromfile(
-            reg.root / "objects" / o["store_name"] / "payload.bin", np.uint8
+            ws.registry.root / "objects" / o["store_name"] / "payload.bin", np.uint8
         )
         pages = raw.view(np.int32).reshape(-1, 8, 128)
         start = pt.blob_layout[int(o["uuid"])]

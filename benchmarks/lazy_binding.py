@@ -16,24 +16,24 @@ from pathlib import Path
 
 from repro.configs.paper_microbench import make_world_spec
 
-from .common import emit, fresh_linker, publish_world
+from .common import emit, fresh_workspace, publish_world
 
 ACCESS_ROUNDS = 200
 
 
 def run(n: int = 100, f: int = 100, *, out: str | None = None) -> dict:
-    reg, mgr, ex = fresh_linker()
+    ws = fresh_workspace()
     bundles, app = make_world_spec(n, f)
-    publish_world(mgr, bundles + [(app, b"")])
-    names = [r.name for r in mgr.world().resolve(app.name).refs]
+    publish_world(ws, bundles + [(app, b"")])
+    names = [r.name for r in ws.world().resolve(app.name).refs]
 
-    lazy = ex.load(app.name, strategy="lazy")
+    lazy = ws.load(app.name, strategy="lazy")
     t0 = time.perf_counter()
     for nm in names:
         lazy[nm]
     first_touch_s = time.perf_counter() - t0
 
-    eager = ex.load(app.name, strategy="stable")
+    eager = ws.load(app.name, strategy="stable")
 
     t0 = time.perf_counter()
     for _ in range(ACCESS_ROUNDS):

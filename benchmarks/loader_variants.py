@@ -19,16 +19,16 @@ from pathlib import Path
 from repro.core import Executor
 from repro.configs.paper_microbench import make_world_spec
 
-from .common import emit, fresh_linker, publish_world, timeit
+from .common import emit, fresh_workspace, publish_world, timeit
 
 CELLS = [(10, 1000), (100, 100), (1000, 100), (911, 219)]  # last ~ pynamic
 
 
 def run_cell(n: int, f: int, *, trials: int = 3) -> dict:
-    reg, mgr, ex_default = fresh_linker()
+    ws = fresh_workspace()
     bundles, app = make_world_spec(n, f)
-    publish_world(mgr, bundles + [(app, b"")])
-    world = mgr.world()
+    publish_world(ws, bundles + [(app, b"")])
+    world = ws.world()
     app_obj = world.resolve(app.name)
 
     out = {"n": n, "f": f, "relocations": n * f}
@@ -39,9 +39,11 @@ def run_cell(n: int, f: int, *, trials: int = 3) -> dict:
         ("raw+paged+t4", dict(loader="paged", table_format="raw", io_threads=4)),
     ]
     for name, kw in variants:
-        ex = Executor(reg, mgr, **kw)
+        # variants measure below the Workspace facade: loader/table-format
+        # knobs are Executor construction parameters, not load strategies
+        ex = Executor(ws.registry, ws.manager, **kw)
         # re-materialize in this executor's format
-        ex.materialize(app_obj, world, mgr.epoch)
+        ex.materialize(app_obj, world, ws.epoch)
         mean, mn, mx = timeit(
             lambda: ex.load(app.name, strategy="stable"), trials=trials
         )
@@ -58,7 +60,7 @@ def run_cell(n: int, f: int, *, trials: int = 3) -> dict:
     out["best_speedup_vs_baseline"] = base / best
     emit(f"loader/speedup/n{n}_f{f}", 0.0, f"{base / best:.2f}x vs npz+rows")
     # restore default-format table for any later users
-    ex_default.materialize(app_obj, world, mgr.epoch)
+    ws.executor.materialize(app_obj, world, ws.epoch)
     return out
 
 

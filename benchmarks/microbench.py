@@ -19,7 +19,7 @@ from pathlib import Path
 from repro.configs.paper_microbench import make_world_spec
 from repro.core import DynamicResolver
 
-from .common import emit, fresh_linker, publish_world, timeit
+from .common import emit, fresh_workspace, publish_world, timeit
 
 # paper grid is 1..10k objects x 1..1M functions; scaled to the container
 # budget with the same aspect (n*f capped at 1e5 -> ~400MB of payload)
@@ -32,24 +32,24 @@ GRID = [
 
 
 def run_cell(n: int, f: int, *, trials: int = 3) -> dict:
-    reg, mgr, ex = fresh_linker()
+    ws = fresh_workspace()
     bundles, app = make_world_spec(n, f)
-    publish_world(mgr, bundles + [(app, b"")])
+    publish_world(ws, bundles + [(app, b"")])
 
     res: dict = {"n": n, "f": f, "relocations": n * f}
 
     dyn_mean, *_ = timeit(
-        lambda: ex.load(app.name, strategy="dynamic"), trials=trials
+        lambda: ws.load(app.name, strategy="dynamic"), trials=trials
     )
     st_mean, *_ = timeit(
-        lambda: ex.load(app.name, strategy="stable"), trials=trials
+        lambda: ws.load(app.name, strategy="stable"), trials=trials
     )
 
-    img_d = ex.load(app.name, strategy="dynamic")
-    img_s = ex.load(app.name, strategy="stable")
+    img_d = ws.load(app.name, strategy="dynamic")
+    img_s = ws.load(app.name, strategy="stable")
 
     # direct-binding mitigation: probe only the hinted provider
-    world = mgr.world()
+    world = ws.world()
     resolver = DynamicResolver(world)
     app_obj = world.resolve(app.name)
     hints = {

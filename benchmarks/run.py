@@ -1,6 +1,11 @@
 """Benchmark aggregator — one harness per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
+
+``--smoke`` runs a seconds-long correctness pass: one tiny world, every
+registered load strategy timed by name through ``Workspace.load`` (so a
+newly registered strategy shows up without touching this file). Use it in
+CI to prove the benchmark path stays runnable.
 
 Emits ``name,us_per_call,derived`` CSV rows:
     microbench/*   — paper Fig. 1 & 7 (n x f grid, dynamic vs stable)
@@ -16,7 +21,38 @@ from __future__ import annotations
 import sys
 
 
+def smoke() -> None:
+    """Tiny end-to-end pass: publish one world, run every strategy."""
+    from repro.configs.paper_microbench import make_world_spec
+    from repro.link import available_strategies
+
+    from .common import emit, fresh_workspace, publish_world, timeit
+
+    print("name,us_per_call,derived")
+    ws = fresh_workspace()
+    bundles, app = make_world_spec(8, 16)
+    publish_world(ws, bundles + [(app, b"")])
+    for strategy in available_strategies():
+        if strategy == "lazy":
+            def load():
+                img = ws.load(app.name, strategy="lazy")
+                for k in list(img.keys()):
+                    img[k]
+        else:
+            def load(strategy=strategy):
+                ws.load(app.name, strategy=strategy)
+        mean, *_ = timeit(load, warmup=1, trials=2)
+        emit(f"smoke/{strategy}", mean, f"relocs={8 * 16}")
+    rep = ws.explain(app.name)
+    emit("smoke/explain", 0.0,
+         f"source={rep.source};relocations={rep.relocations}")
+    ws.close()
+
+
 def main() -> None:
+    if "--smoke" in sys.argv:
+        smoke()
+        return
     fast = "--fast" in sys.argv
     from . import kernels_bench, lazy_binding, microbench, startup
 

@@ -25,7 +25,7 @@ from repro.configs import get_config
 from repro.configs.paper_microbench import make_world_spec
 from repro.core import ObjectKind, make_object
 
-from .common import emit, fresh_linker, publish_world, timeit
+from .common import emit, fresh_workspace, publish_world, timeit
 
 ARCH_BENCH = [
     # (arch, fragment) — fragmentation gives the real relocation counts
@@ -57,7 +57,7 @@ def _bench_cfg(arch: str):
 
 def bench_arch(arch: str, fragment: bool, *, trials: int = 3) -> dict:
     cfg = _bench_cfg(arch)
-    reg, mgr, ex = fresh_linker()
+    ws = fresh_workspace()
     params = {
         n: np.asarray(v) for n, v in models.init_params(cfg, 0).items()
     }
@@ -73,20 +73,20 @@ def bench_arch(arch: str, fragment: bool, *, trials: int = 3) -> dict:
         refs=refs,
         needed=[bundle.name],
     )
-    publish_world(mgr, [(bundle, payload), (app, b"")])
+    publish_world(ws, [(bundle, payload), (app, b"")])
 
-    dyn, *_ = timeit(lambda: ex.load(app.name, strategy="dynamic"), trials=trials)
-    st, *_ = timeit(lambda: ex.load(app.name, strategy="stable"), trials=trials)
+    dyn, *_ = timeit(lambda: ws.load(app.name, strategy="dynamic"), trials=trials)
+    st, *_ = timeit(lambda: ws.load(app.name, strategy="stable"), trials=trials)
 
     def lazy_all():
-        img = ex.load(app.name, strategy="lazy")
+        img = ws.load(app.name, strategy="lazy")
         for k in list(img.keys()):
             img[k]
 
     lz, *_ = timeit(lazy_all, trials=trials)
 
-    img_d = ex.load(app.name, strategy="dynamic")
-    img_s = ex.load(app.name, strategy="stable")
+    img_d = ws.load(app.name, strategy="dynamic")
+    img_s = ws.load(app.name, strategy="stable")
     return {
         "app": arch,
         "relocations": len(refs),
@@ -106,15 +106,15 @@ def bench_pynamic(*, n_bundles: int = 911, total_syms: int = 200_000,
     """The paper's LLNL Pynamic point: 911 shared objects, relocation count
     scaled to the container (200k symbols ~ 820MB of payload)."""
     f = total_syms // n_bundles
-    reg, mgr, ex = fresh_linker()
+    ws = fresh_workspace()
     bundles, app = make_world_spec(n_bundles, f)
-    publish_world(mgr, bundles + [(app, b"")])
-    dyn, *_ = timeit(lambda: ex.load(app.name, strategy="dynamic"),
+    publish_world(ws, bundles + [(app, b"")])
+    dyn, *_ = timeit(lambda: ws.load(app.name, strategy="dynamic"),
                      warmup=0, trials=trials)
-    st, *_ = timeit(lambda: ex.load(app.name, strategy="stable"),
+    st, *_ = timeit(lambda: ws.load(app.name, strategy="stable"),
                     warmup=0, trials=trials)
-    img_d = ex.load(app.name, strategy="dynamic")
-    img_s = ex.load(app.name, strategy="stable")
+    img_d = ws.load(app.name, strategy="dynamic")
+    img_s = ws.load(app.name, strategy="stable")
     return {
         "app": f"pynamic-{n_bundles}",
         "relocations": n_bundles * f,

@@ -1,16 +1,19 @@
-"""Quickstart: the whole stable-linking story in one script.
+"""Quickstart: the whole stable-linking story through one session object.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. management time  — publish a weight bundle + an application
-2. end_mgmt         — relocation tables materialize
+1. management time  — one transaction publishes a weight bundle + an app
+2. commit           — relocation tables materialize; a new epoch begins
 3. epoch            — table-driven (resolution-free) loading; run the model
-4. inspect          — the mapping is observable (JSON / CSV / SQL)
-5. update           — a new management time upgrades one bundle; tables
+4. explain          — the mapping is observable (summary / SQL) mid-epoch
+5. rollback         — a failed management transaction leaves the epoch,
+                      the committed world, and every load untouched
+6. update           — a clean transaction upgrades one bundle; tables
                       re-materialize; the next load sees the new world
-"""
 
-import tempfile
+The only entry point is ``repro.link.Workspace`` — no Registry/Manager/
+Executor wiring, no materialization callback to hook up.
+"""
 
 import jax.numpy as jnp
 import numpy as np
@@ -18,22 +21,12 @@ import numpy as np
 from repro import models
 from repro.ckpt import bundle_from_params
 from repro.configs import get_config
-from repro.core import (
-    Executor,
-    ImmutableEpochError,
-    Manager,
-    ObjectKind,
-    Registry,
-    inspector,
-    make_object,
-)
+from repro.core import ImmutableEpochError, ObjectKind, make_object
+from repro.link import Workspace
 
-root = tempfile.mkdtemp(prefix="repro-quickstart-")
-registry = Registry(root)
-manager = Manager(registry)
-executor = Executor(registry, manager)
+ws = Workspace.ephemeral(prefix="repro-quickstart-")
 
-# -- 1. management time ------------------------------------------------------
+# -- 1. management time: one transaction ------------------------------------
 cfg = get_config("gemma3-1b", smoke=True)
 params = {n: np.asarray(v) for n, v in models.init_params(cfg, 0).items()}
 bundle, payload = bundle_from_params("weights:gemma", "v1", params)
@@ -44,15 +37,15 @@ app, _ = make_object(
     refs=models.manifest_refs(cfg),     # the app's relocation instructions
     needed=["weights:gemma"],           # DT_NEEDED
 )
-manager.update_obj(bundle, payload)
-manager.update_obj(app)
+with ws.management() as tx:
+    tx.publish(bundle, payload)
+    tx.publish(app)
 
-# -- 2. end_mgmt materializes relocation tables ------------------------------
-epoch = manager.end_mgmt()
-print(f"epoch {epoch} begins; mode={manager.mode.value}")
+# -- 2. commit materialized relocation tables -------------------------------
+print(f"epoch {ws.epoch} begins; mode={ws.mode.value}")
 
-# -- 3. epoch: stable (table-driven) load, zero symbol resolution ------------
-image = executor.load("serve:gemma")
+# -- 3. epoch: stable (table-driven) load, zero symbol resolution -----------
+image = ws.load("serve:gemma")
 print(
     f"loaded {image.stats.relocations} relocations via {image.stats.strategy} "
     f"in {image.stats.startup_s*1e3:.1f}ms "
@@ -65,28 +58,48 @@ print("forward OK:", logits.shape)
 
 # the registry is immutable during the epoch
 try:
-    manager.update_obj(bundle, payload)
+    ws.manager.update_obj(bundle, payload)
 except ImmutableEpochError as e:
     print("epoch immutability enforced:", type(e).__name__)
 
-# -- 4. the relocation mapping is observable ---------------------------------
-conn = inspector.to_sqlite([image.table], abi_objects=[bundle])
+# -- 4. the relocation mapping is observable --------------------------------
+report = ws.explain("serve:gemma")
+print(
+    f"explain: epoch={report.epoch} source={report.source} "
+    f"by_type={report.by_type} providers={list(report.providers)}"
+)
+conn = report.to_sqlite(abi_objects=[bundle])
 n = conn.execute("SELECT COUNT(*) FROM relocations").fetchone()[0]
 some = conn.execute(
     "SELECT symbol_name, provides_so_name, st_value FROM relocations LIMIT 3"
 ).fetchall()
 print(f"SQL: {n} relocations;", some)
 
-# -- 5. a new management time upgrades the world -----------------------------
+# -- 5. a failed transaction rolls the staged world back --------------------
+world_before = ws.world().bindings
+try:
+    with ws.management() as tx:
+        tx.remove("weights:gemma")      # staged...
+        raise RuntimeError("operator aborts the maintenance window")
+except RuntimeError:
+    pass
+assert ws.epoch == 1 and ws.world().bindings == world_before
+image_again = ws.load("serve:gemma")
+assert np.array_equal(
+    np.asarray(image_again["final_norm/scale"]),
+    np.asarray(image["final_norm/scale"]),
+)
+print("rollback OK: epoch, world and loads unchanged after the abort")
+
+# -- 6. a clean transaction upgrades the world ------------------------------
 params2 = dict(params)
 params2["final_norm/scale"] = params["final_norm/scale"] * 2
 bundle2, payload2 = bundle_from_params("weights:gemma", "v2", params2)
-manager.begin_mgmt()
-manager.update_obj(bundle2, payload2)
-manager.end_mgmt()
+with ws.management() as tx:
+    tx.publish(bundle2, payload2)
 
-image2 = executor.load("serve:gemma")
+image2 = ws.load("serve:gemma")
 assert np.allclose(
     np.asarray(image2["final_norm/scale"]), params2["final_norm/scale"]
 )
-print("epoch", manager.epoch, "sees the upgraded bundle — done.")
+print("epoch", ws.epoch, "sees the upgraded bundle — done.")

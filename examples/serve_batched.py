@@ -8,7 +8,6 @@ the materialized table (stable), then serves a batch of greedy-decode
 requests. The aggregate-startup-cost argument of the paper, live.
 """
 
-import tempfile
 import time
 
 import numpy as np
@@ -16,14 +15,12 @@ import numpy as np
 from repro import models
 from repro.ckpt import bundle_from_params
 from repro.configs import get_config
-from repro.core import Executor, Manager, ObjectKind, Registry, make_object
+from repro.core import ObjectKind, make_object
+from repro.link import Workspace
 from repro.serve import ServeEngine
 
 cfg = get_config("mamba2-370m", smoke=True).replace(num_layers=48)  # real depth
-root = tempfile.mkdtemp(prefix="repro-serve-")
-reg = Registry(root)
-mgr = Manager(reg)
-ex = Executor(reg, mgr)
+ws = Workspace.ephemeral(prefix="repro-serve-")
 
 params = {n: np.asarray(v) for n, v in models.init_params(cfg, 0).items()}
 bundle, payload = bundle_from_params(
@@ -33,9 +30,9 @@ app, _ = make_object(
     name="serve:mamba", version="1", kind=ObjectKind.APPLICATION,
     refs=models.manifest_refs(cfg, fragment=True), needed=["weights:mamba"],
 )
-mgr.update_obj(bundle, payload)
-mgr.update_obj(app)
-mgr.end_mgmt()
+with ws.management() as tx:
+    tx.publish(bundle, payload)
+    tx.publish(app)
 
 N_PROCS = 8
 rng = np.random.default_rng(0)
@@ -45,7 +42,7 @@ for strategy in ("dynamic", "stable"):
     t0 = time.perf_counter()
     startups = 0.0
     for _ in range(N_PROCS):
-        img = ex.load("serve:mamba", strategy=strategy)
+        img = ws.load("serve:mamba", strategy=strategy)
         startups += img.stats.startup_s
     load_wall = time.perf_counter() - t0
     print(
@@ -57,7 +54,7 @@ for strategy in ("dynamic", "stable"):
 # serve one batch to show the loaded image is the real thing
 import jax.numpy as jnp
 
-img = ex.load("serve:mamba", strategy="stable")
+img = ws.load("serve:mamba", strategy="stable")
 live = {}
 for name in models.param_specs(cfg):
     live[name] = jnp.asarray(

@@ -54,7 +54,7 @@ def main() -> None:
         opt=OptConfig(peak_lr=3e-3, warmup_steps=10, decay_steps=steps),
     )
     tr = Trainer(registry, cfg, shape, make_local_mesh(), tcfg)
-    if tr.app_name not in tr.manager.world():
+    if tr.app_name not in tr.ws.world():
         tr.publish()
     res = tr.run()
     print(

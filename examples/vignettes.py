@@ -10,28 +10,16 @@ Vignette 3 — fine-grained interposition: route ONE layer's norm scale to an
              instrumented bundle for ONE app, leaving everything else alone.
 """
 
-import tempfile
-
 import numpy as np
 
 from repro import models
 from repro.ckpt import bundle_from_params
 from repro.configs import get_config
-from repro.core import (
-    Executor,
-    Manager,
-    ObjectKind,
-    Registry,
-    inspector,
-    interpose,
-    make_object,
-)
+from repro.core import ObjectKind, inspector, interpose, make_object
 from repro.core.executor import LoadStats
+from repro.link import Workspace
 
-root = tempfile.mkdtemp(prefix="repro-vignettes-")
-reg, mgr = Registry(root), None
-mgr = Manager(reg)
-ex = Executor(reg, mgr)
+ws = Workspace.ephemeral(prefix="repro-vignettes-")
 
 # World: an MoE model (fragmented per-expert symbols) + a dense model
 moe_cfg = get_config("olmoe-1b-7b", smoke=True)
@@ -57,13 +45,13 @@ dense_app, _ = make_object(
     refs=models.manifest_refs(dense_cfg, fragment=True),
     needed=["weights:starcoder"],
 )
-for o, p in [(moe_bundle, moe_pl), (dense_bundle, dense_pl),
-             (moe_app, b""), (dense_app, b"")]:
-    mgr.update_obj(o, p)
-mgr.end_mgmt()
+with ws.management() as tx:
+    for o, p in [(moe_bundle, moe_pl), (dense_bundle, dense_pl),
+                 (moe_app, b""), (dense_app, b"")]:
+        tx.publish(o, p)
 
-t_moe = ex.load("serve:olmoe").table
-t_dense = ex.load("serve:starcoder").table
+t_moe = ws.load("serve:olmoe").table
+t_dense = ws.load("serve:starcoder").table
 
 # ---------------------------------------------------------------- vignette 1
 print("=== Vignette 1: ABI compatibility (Alice) ===")
@@ -99,13 +87,14 @@ print(f"  apps binding a clean symbol: {hits2} (quarantine nothing)")
 print("=== Vignette 3: fine-grained interposition (Charlie) ===")
 dbg = {"blocks/attn_norm/scale[1]": moe_params["blocks/attn_norm/scale"][1] * 100}
 dbg_bundle, dbg_pl = bundle_from_params("debug:norms", "1", dbg)
-mgr.begin_mgmt()
-mgr.update_obj(dbg_bundle, dbg_pl)
-mgr.end_mgmt()
+with ws.management() as tx:
+    tx.publish(dbg_bundle, dbg_pl)
 n = interpose.rebind(
     t_moe, symbol_glob="blocks/attn_norm/scale[1]", new_provider=dbg_bundle
 )
-img = ex._apply_table(mgr.world().resolve("serve:olmoe"), t_moe, LoadStats())
+img = ws.executor._apply_table(
+    ws.world().resolve("serve:olmoe"), t_moe, LoadStats()
+)
 print(f"  rebound {n} relocation(s); layer-1 norm now instrumented:")
 print(
     "    layer0 scale[:3] =", np.asarray(img["blocks/attn_norm/scale[0]"])[:3],

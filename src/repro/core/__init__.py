@@ -1,10 +1,18 @@
 """repro.core — stable linking (the paper's contribution), substrate-free.
 
-Public surface:
+This is the ENGINE ROOM. The public session API lives one level up in
+``repro.link``: ``Workspace.open(root)`` wires everything below into one
+object with transactional management times (``with ws.management() as tx``),
+by-name load strategies, and ``ws.explain()`` observability. New application
+code should go through ``Workspace``; constructing ``Manager``/``Executor``
+pairs by hand (including the ``on_materialize`` hook) is deprecated and kept
+for tooling and benchmarks that measure below the facade.
+
+Engine-room surface:
 
     Registry, World              — content-addressed object store + world views
-    Manager, Mode                — begin_mgmt / update_obj / end_mgmt
-    Executor, LoadedImage        — materialize + stable/dynamic/lazy loading
+    Manager, Mode                — begin_mgmt / update_obj / end_mgmt / abort_mgmt
+    Executor, LoadedImage        — materialize + strategy-registry loading
     DynamicResolver              — the traditional-dynamic-linking baseline
     RelocationTable, PageTable   — materialized tables (+ TPU page compilation)
     inspector, interpose         — observability + fine-grained rebinding
@@ -20,6 +28,7 @@ from .errors import (
     StaleTableError,
     SymbolMismatchError,
     UnknownObjectError,
+    UnknownStrategyError,
     UnresolvedSymbolError,
 )
 from .executor import Executor, LazyImage, LoadedImage, LoadStats
@@ -55,6 +64,7 @@ __all__ = [
     "StaleTableError",
     "SymbolMismatchError",
     "UnknownObjectError",
+    "UnknownStrategyError",
     "UnresolvedSymbolError",
     "Executor",
     "LazyImage",
@@ -81,4 +91,27 @@ __all__ = [
     "Relocation",
     "dependency_closure",
     "np_dtype",
+    "open_workspace",
 ]
+
+
+def open_workspace(root):
+    """Deprecated shim for the old hand-wiring pattern.
+
+    Returns a ``repro.link.Workspace`` (the replacement for constructing
+    Registry/Manager/Executor by hand). Prefer importing it directly::
+
+        from repro.link import Workspace
+        ws = Workspace.open(root)
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.open_workspace is a transition shim; import "
+        "repro.link.Workspace directly",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.link import Workspace
+
+    return Workspace.open(root)

@@ -38,6 +38,19 @@ class UnresolvedSymbolError(StableLinkingError):
         )
 
 
+class UnknownStrategyError(StableLinkingError):
+    """Load-strategy name not present in the strategy registry."""
+
+    def __init__(self, name: str, available: list[str]):
+        self.name = name
+        self.available = list(available)
+        super().__init__(
+            f"unknown load strategy {name!r}; registered strategies: "
+            f"{', '.join(self.available) or '(none)'} "
+            "(add one with repro.link.register_strategy)"
+        )
+
+
 class SymbolMismatchError(StableLinkingError):
     """Provider symbol exists but is ABI-incompatible (shape mismatch)."""
 

@@ -32,7 +32,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from .errors import StaleTableError, UnknownObjectError
-from .manager import Manager, Mode
+from .manager import Manager
 from .objects import ObjectKind, RelocType, StoreObject
 from .registry import Registry, World
 from .relocation import RelocationTable, build_table
@@ -182,24 +182,21 @@ class Executor:
         strategy: str = "auto",
         world: Optional[World] = None,
     ):
-        """Load an application image.
+        """Load an application image via a registered strategy.
 
         ``auto`` follows the paper: dynamic during management time, stable
-        (table-driven) during an epoch.
+        (table-driven) during an epoch. Everything else dispatches through
+        the ``repro.link.strategies`` registry, so new loaders are drop-in
+        (``@register_strategy("name")``) and benchmarks select them by name.
         """
+        # Imported lazily: core stays importable without the link facade,
+        # and the registry module itself imports core.
+        from repro.link.strategies import resolve_strategy
+
         world = world or self.manager.world()
         app = world.resolve(app_name)
-        if strategy == "auto":
-            strategy = (
-                "dynamic" if self.manager.mode == Mode.MANAGEMENT else "stable"
-            )
-        if strategy == "stable":
-            return self._load_stable(app, world)
-        if strategy == "dynamic":
-            return self._load_dynamic(app, world)
-        if strategy == "lazy":
-            return LazyImage(self, app, world)
-        raise ValueError(f"unknown strategy {strategy!r}")
+        fn = resolve_strategy(strategy, mode=self.manager.mode)
+        return fn(self, app, world)
 
     # ------------------------------------------------------------- internals
     def _load_stable(self, app: StoreObject, world: World) -> LoadedImage:

@@ -10,11 +10,26 @@
 * ``end_mgmt``    — commits the staged world, bumps the epoch counter, flips
   to EPOCH, and invokes the Executor with the ``materialize`` flag for every
   application whose relocation table is missing/stale under the new world.
+* ``abort_mgmt``  — discards the staged world and returns to the committed
+  one: the rollback half of ``repro.link.Workspace.management()``
+  transactions. Objects already written to the content-addressed store stay
+  on disk (they are unreferenced, hence invisible to every world view).
 
 In our ML framing a management time is a cluster maintenance window (publish
 a checkpoint, roll a kernel library, change the mesh); an epoch is the
 steady-state period in between, during which every job start may safely reuse
 the materialized tables.
+
+Crash consistency: the persisted state always carries both the committed
+``world`` and the staged ``pending`` snapshot. A process that dies during
+management time leaves ``mode=management`` + its partial ``pending`` behind;
+on reload that pending is only honoured while still in management (an
+explicit resume), and a state that claims ``mode=epoch`` has its pending
+forced back to the committed world — a half-staged snapshot can never leak
+into the next epoch's bindings.
+
+Direct ``Manager`` wiring is deprecated for application code — use
+``repro.link.Workspace``, which adds transactional management times on top.
 """
 
 from __future__ import annotations
@@ -40,7 +55,12 @@ class Manager:
         self._mode = Mode(st.get("mode", "management"))
         self._epoch = int(st.get("epoch", 0))
         self._world = dict(st.get("world", {}))      # committed bindings
-        self._staged = dict(st.get("pending", self._world))  # staged bindings
+        if self._mode == Mode.EPOCH:
+            # A stale pending snapshot (e.g. from a crash mid-management in a
+            # different process) must not survive into epoch state.
+            self._staged = dict(self._world)
+        else:
+            self._staged = dict(st.get("pending", self._world))
         # Hook invoked by end_mgmt; wired to Executor.materialize_all.
         self.on_materialize: Optional[Callable[[World, int], None]] = None
 
@@ -100,6 +120,33 @@ class Manager:
         del self._staged[name]
         self._persist()
 
+    def reset_staged(self) -> None:
+        """Drop staged changes without leaving management time.
+
+        Used when a new management session starts over a leftover pending
+        snapshot (e.g. after a crash) and must not inherit it.
+        """
+        if self._mode != Mode.MANAGEMENT:
+            raise ModeError("reset_staged outside management time")
+        self._staged = dict(self._world)
+        self._persist()
+
+    def abort_mgmt(self) -> None:
+        """Roll back the current management time.
+
+        The staged world is discarded and the committed world of the current
+        epoch stays authoritative. If an epoch has ever been committed the
+        manager returns to EPOCH mode (the state it was in before
+        ``begin_mgmt``); a never-committed manager (epoch 0) stays in
+        management with a clean slate, since there is no epoch to return to.
+        """
+        if self._mode != Mode.MANAGEMENT:
+            raise ModeError("abort_mgmt outside management time")
+        self._staged = dict(self._world)
+        if self._epoch > 0:
+            self._mode = Mode.EPOCH
+        self._persist()
+
     def end_mgmt(self, materialize: bool = True) -> int:
         """Commit the staged world and enter a new epoch.
 
@@ -109,13 +156,18 @@ class Manager:
         """
         if self._mode != Mode.MANAGEMENT:
             raise ModeError("end_mgmt outside management time")
-        self._world = dict(self._staged)
-        self._epoch += 1
-        new_world = World(self.registry, self._world)
+        new_world = World(self.registry, dict(self._staged))
+        new_epoch = self._epoch + 1
         if materialize and self.on_materialize is not None:
             # Materialization happens while still formally in management time:
-            # the Executor may run the dynamic-linking path to observe mappings.
-            self.on_materialize(new_world, self._epoch)
+            # the Executor may run the dynamic-linking path to observe
+            # mappings. It runs BEFORE the commit below, so a failure (e.g.
+            # an unresolvable symbol in a staged app) leaves the committed
+            # world and epoch untouched — the management session stays open
+            # to be fixed or aborted.
+            self.on_materialize(new_world, new_epoch)
+        self._world = dict(self._staged)
+        self._epoch = new_epoch
         self._mode = Mode.EPOCH
         self._persist()
         return self._epoch

@@ -1,0 +1,31 @@
+"""repro.dist — distribution substrate: logical sharding, roofline
+analysis of compiled programs, and gradient compression.
+
+Public surface:
+
+    context.mesh_rules / context.constrain   — logical-axis sharding context
+    sharding.ShardingRules / spec_for        — logical axes -> PartitionSpec
+    hlo_analysis.collective_stats / Roofline — optimized-HLO roofline terms
+    compression.quantize_int8 / int8_allreduce_mean — int8 gradient traffic
+
+Submodules load lazily (module ``__getattr__``) so importing one of them —
+or this package — never drags in the others' dependencies; in particular
+``repro.dist.context`` / ``hlo_analysis`` stay importable without paying
+for jax until a sharding spec or collective op is actually resolved.
+"""
+
+import importlib
+
+__all__ = ["compression", "context", "hlo_analysis", "sharding"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,42 @@
+"""Int8 gradient compression: symmetric per-tensor quantization + an
+all-gather-based compressed mean that stands in for ``lax.pmean``.
+
+The quantization grid is symmetric around zero with 127 positive steps, so
+zero is exact and the roundtrip error is bounded by half a grid step
+(scale/2). ``int8_allreduce_mean`` moves int8 + one f32 scale per shard on
+the wire instead of f32 activations — a 4x traffic cut for ~1% mean error
+on normal-ish gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30  # all-zero tensors: avoid 0/0; q stays exactly 0
+
+
+def quantize_int8(x) -> tuple[jax.Array, jax.Array]:
+    """x -> (int8 codes, f32 scale); codes * scale ~= x to scale/2."""
+    x = jnp.asarray(x)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, _EPS) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_allreduce_mean(x, axis_name: str) -> jax.Array:
+    """Compressed mean over ``axis_name`` (shard_map/pmap collective axis).
+
+    Each participant quantizes its shard, all-gathers codes + scales, and
+    dequantizes locally — wire traffic is ~x.nbytes/4 per hop vs pmean.
+    """
+    q, s = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)
+    ss = jax.lax.all_gather(s, axis_name)
+    vals = qs.astype(jnp.float32) * ss.reshape(ss.shape + (1,) * q.ndim)
+    return jnp.mean(vals, axis=0)

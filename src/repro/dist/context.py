@@ -1,0 +1,62 @@
+"""Trace-time sharding context: ``with mesh_rules(mesh, rules): ...``.
+
+Models call ``constrain(x, logical_axes)`` unconditionally; outside a
+``mesh_rules`` context (unit tests, single-host smoke runs) it is the
+identity, inside one it resolves the logical axes through
+``dist.sharding.spec_for`` and applies ``with_sharding_constraint``. This
+keeps model code mesh-agnostic — the launcher owns placement policy.
+
+The context is a thread-local stack so nested meshes (e.g. a dry-run
+lowering inside a training process) resolve against the innermost one.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+from .sharding import ShardingRules, spec_for
+
+_local = threading.local()
+
+
+def _stack() -> list:
+    st = getattr(_local, "stack", None)
+    if st is None:
+        st = _local.stack = []
+    return st
+
+
+def current_mesh_rules() -> Optional[Tuple[object, Optional[ShardingRules]]]:
+    """The innermost installed (mesh, rules), or None outside any context."""
+    st = _stack()
+    return st[-1] if st else None
+
+
+@contextmanager
+def mesh_rules(mesh, rules: Optional[ShardingRules] = None):
+    """Install mesh+rules for the duration of a trace/lowering."""
+    st = _stack()
+    st.append((mesh, rules))
+    try:
+        yield
+    finally:
+        st.pop()
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """Constrain ``x`` to the sharding its logical axes resolve to.
+
+    Identity when no ``mesh_rules`` context is installed, so model code can
+    sprinkle constraints freely without caring where it runs.
+    """
+    ctx = current_mesh_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    import jax
+    from jax.sharding import NamedSharding
+
+    spec = spec_for(tuple(axes), tuple(x.shape), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

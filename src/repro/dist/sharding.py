@@ -1,0 +1,135 @@
+"""Logical-axis sharding rules: declarative FSDP / TP placement.
+
+Models declare *logical* axis names on every parameter and activation
+(``ParamSpec.axes``); a ``ShardingRules`` maps each logical axis to an
+ordered list of candidate mesh axes. ``spec_for`` resolves one shape against
+one mesh:
+
+* first candidate mesh axis that exists on the mesh, has size > 1, is not
+  already used by an earlier dimension of the same tensor, and divides the
+  dimension evenly wins;
+* otherwise the dimension is replicated (``None``);
+* trailing ``None`` entries are trimmed so fully-replicated tensors get the
+  canonical empty ``PartitionSpec``.
+
+Rule sets are registered in ``RULESETS`` by name so CLIs (dryrun --rules)
+and the benchmarks can select placement policies without code changes —
+the same by-name dispatch idea as ``repro.link``'s load-strategy registry.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Sequence
+
+# Default placement: FSDP over the "data" axis (params' embed dim), tensor
+# parallelism over the "model" axis (vocab / mlp hidden / heads). Sequence
+# and cache axes stay replicated unless a specialised rule set shards them.
+_DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("data",),
+    "embed": ("data",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "d_state": ("model",),
+    "d_inner": ("model",),
+    "conv": ("model",),
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """A named logical-axis -> candidate-mesh-axes mapping."""
+
+    name: str = "default"
+    rules: Mapping[str, tuple[str, ...]] = field(
+        default_factory=lambda: dict(_DEFAULT_RULES)
+    )
+
+    def candidates(self, axis: Optional[str]) -> tuple[str, ...]:
+        if axis is None:
+            return ()
+        return tuple(self.rules.get(axis, ()))
+
+    # ------------------------------------------------------- named variants
+    @classmethod
+    def default(cls) -> "ShardingRules":
+        return cls()
+
+    @classmethod
+    def long_context(cls) -> "ShardingRules":
+        """500k-token shapes: the KV/SSM cache shards along its sequence
+        axis over "data" (the cache dominates memory; weights stay FSDP)."""
+        return cls(
+            "long",
+            {**_DEFAULT_RULES, "cache_seq": ("data",), "seq": ("data",)},
+        )
+
+    @classmethod
+    def decode_seq(cls) -> "ShardingRules":
+        """Flash-decode cache sharding for GQA decode shapes: the cache
+        sequence axis shards over "data" so per-step attention reads are
+        local; heads keep the default TP placement."""
+        return cls("decode_seq", {**_DEFAULT_RULES, "cache_seq": ("data",)})
+
+    @classmethod
+    def decode_tp(cls) -> "ShardingRules":
+        """Pure tensor-parallel decode: heads/mlp over "model", everything
+        sequence-like replicated (latency-optimal at small batch)."""
+        return cls("decode_tp", {**_DEFAULT_RULES, "cache_seq": ()})
+
+    @classmethod
+    def decode_2d_tp(cls) -> "ShardingRules":
+        """2D decode: head-like axes may fall back to "data" when "model"
+        is exhausted by an earlier dimension of the same tensor."""
+        over = {
+            ax: ("model", "data")
+            for ax in ("heads", "kv_heads", "mlp", "vocab")
+        }
+        return cls("decode_2d_tp", {**_DEFAULT_RULES, **over})
+
+
+RULESETS = {
+    "default": ShardingRules.default,
+    "long": ShardingRules.long_context,
+    "decode_seq": ShardingRules.decode_seq,
+    "decode_tp": ShardingRules.decode_tp,
+    "decode_2d_tp": ShardingRules.decode_2d_tp,
+}
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    return dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+
+
+def spec_for(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh,
+    rules: Optional[ShardingRules] = None,
+):
+    """Resolve logical axes against a mesh: the single placement oracle.
+
+    Returns a ``jax.sharding.PartitionSpec`` (jax imported only here, so
+    rule definitions stay importable without it).
+    """
+    from jax.sharding import PartitionSpec
+
+    rules = rules or ShardingRules()
+    sizes = _mesh_sizes(mesh)
+    used: set[str] = set()
+    entries: list[Optional[str]] = []
+    for ax, dim in zip(axes, shape):
+        choice = None
+        for cand in rules.candidates(ax):
+            n = sizes.get(cand, 0)
+            if n > 1 and cand not in used and dim > 1 and dim % n == 0:
+                choice = cand
+                used.add(cand)
+                break
+        entries.append(choice)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)

@@ -2,17 +2,27 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \
         --batch 4 --prompt-len 32 --max-new 16
+
+Startup goes through the stable-linking session API: the weight bundle and
+application are published into a ``Workspace`` (one management transaction),
+then every server start is an epoch-path ``ws.load`` — pass ``--strategy``
+to compare loaders by name (any strategy registered in ``repro.link``).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import tempfile
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.ckpt import bundle_from_params
 from repro.configs import ARCHS, get_config
+from repro.core import ObjectKind, make_object
+from repro.link import Workspace, available_strategies
 from repro.serve import ServeEngine
 
 
@@ -23,12 +33,41 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--strategy", default="stable", choices=available_strategies()
+    )
+    ap.add_argument("--registry", default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
-    params = models.init_params(cfg, args.seed)
+    ws = Workspace.open(
+        args.registry or tempfile.mkdtemp(prefix="repro-serve-")
+    )
+    app_name = f"serve:{cfg.name}"
+    if app_name not in ws.world():
+        params = {
+            n: np.asarray(v)
+            for n, v in models.init_params(cfg, args.seed).items()
+        }
+        bundle, payload = bundle_from_params(f"weights:{cfg.name}", "v1", params)
+        app, _ = make_object(
+            name=app_name,
+            version="1",
+            kind=ObjectKind.APPLICATION,
+            refs=models.manifest_refs(cfg),
+            needed=[bundle.name],
+        )
+        with ws.management() as tx:
+            tx.publish(bundle, payload)
+            tx.publish(app)
+
+    image = ws.load(app_name, strategy=args.strategy)
+    if hasattr(image, "tensors"):
+        live = {n: jnp.asarray(a) for n, a in image.tensors.items()}
+    else:  # lazy image: every symbol faults in on first access
+        live = {n: jnp.asarray(image[n]) for n in image.keys()}
     engine = ServeEngine(
-        cfg, params, cache_len=args.prompt_len + args.max_new
+        cfg, live, cache_len=args.prompt_len + args.max_new
     )
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(
@@ -39,6 +78,9 @@ def main() -> None:
         json.dumps(
             {
                 "arch": cfg.name,
+                "epoch": ws.epoch,
+                "load_strategy": image.stats.strategy,
+                "load_s": round(image.stats.startup_s, 4),
                 "out_shape": list(out.shape),
                 "prefill_s": round(stats.prefill_s, 4),
                 "decode_s": round(stats.decode_s, 4),

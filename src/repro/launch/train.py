@@ -49,7 +49,7 @@ def main() -> None:
         opt=OptConfig(peak_lr=args.lr, warmup_steps=5, decay_steps=args.steps),
     )
     tr = Trainer(registry, cfg, shape, mesh, tcfg)
-    if tr.app_name not in tr.manager.world():
+    if tr.app_name not in tr.ws.world():
         tr.publish()
     res = tr.run()
     print(

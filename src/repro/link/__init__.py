@@ -1,0 +1,43 @@
+"""repro.link — the unified stable-linking session API.
+
+``Workspace`` is the single public entry point: it wires the engine room
+(``repro.core``'s Registry/Manager/Executor/CompileCache) into one session
+object with transactional management times, by-name load strategies, and
+one-call observability:
+
+    from repro.link import Workspace
+
+    ws = Workspace.open("/path/to/store")      # or Workspace.ephemeral()
+    with ws.management() as tx:                # commit-or-rollback
+        tx.publish(bundle, payload)
+        tx.publish(app)
+    img = ws.load("serve:model")               # strategy registry dispatch
+    ws.explain("serve:model").summary()        # observable mid-epoch
+
+Direct Registry/Manager/Executor wiring remains available in ``repro.core``
+for tooling that measures below the facade, but is deprecated for
+application code.
+"""
+
+from .report import LinkReport, report_from_table
+from .strategies import (
+    available_strategies,
+    get_strategy,
+    register_strategy,
+    resolve_strategy,
+    unregister_strategy,
+)
+from .transaction import ManagementTransaction
+from .workspace import Workspace
+
+__all__ = [
+    "LinkReport",
+    "ManagementTransaction",
+    "Workspace",
+    "available_strategies",
+    "get_strategy",
+    "register_strategy",
+    "report_from_table",
+    "resolve_strategy",
+    "unregister_strategy",
+]

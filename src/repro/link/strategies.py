@@ -1,0 +1,114 @@
+"""The load-strategy registry: loaders selected by name, drop-in extensible.
+
+A strategy is a callable ``(executor, app, world) -> image`` registered
+under a short name. ``Executor.load`` (and therefore ``Workspace.load``)
+dispatches through this table instead of hard-coded branches, so
+
+* benchmarks sweep strategies by name (``for s in available_strategies()``),
+* new loaders (prefetch variants, tiered-storage readers, ...) plug in with
+  ``@register_strategy("name")`` and immediately work everywhere,
+* an unknown name fails with a ``StableLinkingError`` that lists what is
+  registered.
+
+Built-ins mirror the paper's Figure 5:
+
+    stable    — table-driven epoch load (the contribution)
+    dynamic   — traditional dynamic linking (baseline)
+    lazy      — per-symbol first-use faulting (PLT analogue, §6.2)
+    prefetch  — stable + OS readahead hints on provider payloads (drop-in
+                variant, demonstrating the registry)
+
+``auto`` is not a strategy but a dispatch rule: dynamic during management
+time, stable during an epoch.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional
+
+from repro.core.errors import UnknownStrategyError
+from repro.core.manager import Mode
+
+# name -> (executor, app, world) -> LoadedImage | LazyImage
+LoadStrategy = Callable[[object, object, object], object]
+
+_STRATEGIES: dict[str, LoadStrategy] = {}
+
+
+def register_strategy(name: str, fn: Optional[LoadStrategy] = None):
+    """Register a load strategy; usable as decorator or plain call.
+
+    Re-registering a name replaces it (latest wins), so tests and notebooks
+    can shadow built-ins locally.
+    """
+
+    def _register(f: LoadStrategy) -> LoadStrategy:
+        _STRATEGIES[name] = f
+        return f
+
+    return _register(fn) if fn is not None else _register
+
+
+def unregister_strategy(name: str) -> None:
+    _STRATEGIES.pop(name, None)
+
+
+def available_strategies() -> list[str]:
+    return sorted(_STRATEGIES)
+
+
+def get_strategy(name: str) -> LoadStrategy:
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise UnknownStrategyError(name, available_strategies()) from None
+
+
+def resolve_strategy(name: str, *, mode: Mode) -> LoadStrategy:
+    """Dispatch rule used by ``Executor.load``: resolve ``auto`` by mode,
+    everything else by registry lookup."""
+    if name == "auto":
+        name = "dynamic" if mode == Mode.MANAGEMENT else "stable"
+    return get_strategy(name)
+
+
+# ------------------------------------------------------------------ built-ins
+@register_strategy("stable")
+def _stable(executor, app, world):
+    return executor._load_stable(app, world)
+
+
+@register_strategy("dynamic")
+def _dynamic(executor, app, world):
+    return executor._load_dynamic(app, world)
+
+
+@register_strategy("lazy")
+def _lazy(executor, app, world):
+    from repro.core.executor import LazyImage
+
+    return LazyImage(executor, app, world)
+
+
+@register_strategy("prefetch")
+def _prefetch(executor, app, world):
+    """Stable load preceded by OS readahead hints on every payload in the
+    app's dependency closure — useful when payloads are cold on networked
+    or spinning storage. The closure walk reads only manifests (no table
+    parse, no payload bytes); platforms without posix_fadvise degrade to a
+    plain stable load."""
+    fadvise = getattr(os, "posix_fadvise", None)
+    if fadvise is not None:
+        from repro.core.resolver import dependency_closure
+
+        for obj in dependency_closure(app, world):
+            payload = executor.registry.payload_path(obj)
+            if not payload.exists():
+                continue
+            fd = os.open(payload, os.O_RDONLY)
+            try:
+                fadvise(fd, 0, 0, os.POSIX_FADV_WILLNEED)
+            finally:
+                os.close(fd)
+    return executor._load_stable(app, world)

@@ -1,0 +1,82 @@
+"""Transactional management times: the write half of a Workspace session.
+
+``Workspace.management()`` yields a ``ManagementTransaction``. All staged
+mutations go through it; the context manager commits (``end_mgmt`` +
+materialization) on clean exit and rolls the staged world back
+(``Manager.abort_mgmt``) if the body raises — the committed world, epoch
+counter, and every materialized table of the current epoch are untouched by
+a failed transaction.
+
+Payload bytes already written into the content-addressed store by a rolled-
+back transaction stay on disk: they are unreferenced by any world view, so
+they are invisible (and re-publishable for free, being content-addressed).
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+from repro.core.errors import ModeError
+from repro.core.manager import Manager
+from repro.core.objects import StoreObject
+from repro.core.registry import World
+
+
+class ManagementTransaction:
+    """Handle for staging world mutations inside one management time."""
+
+    def __init__(self, manager: Manager):
+        self._manager = manager
+        self._open = True
+        self.epoch: Optional[int] = None  # set on commit
+
+    # ------------------------------------------------------------- guards
+    def _check_open(self) -> None:
+        if not self._open:
+            raise ModeError(
+                "management transaction already closed "
+                "(commit/rollback happened)"
+            )
+
+    @property
+    def active(self) -> bool:
+        return self._open
+
+    # ---------------------------------------------------------- mutations
+    def publish(self, obj: StoreObject, payload: bytes = b"") -> StoreObject:
+        """Stage an object (and optional payload bytes) into the world."""
+        self._check_open()
+        return self._manager.update_obj(obj, payload)
+
+    def publish_file(self, obj: StoreObject, payload_file: Path) -> StoreObject:
+        """Stage an object whose payload was pre-written to a file."""
+        self._check_open()
+        return self._manager.update_obj_file(obj, payload_file)
+
+    def remove(self, name: str) -> None:
+        """Unbind ``name`` from the staged world."""
+        self._check_open()
+        self._manager.remove_obj(name)
+
+    # ------------------------------------------------------------- views
+    def world(self) -> World:
+        """The staged world view as this transaction currently sees it."""
+        self._check_open()
+        return self._manager.world()
+
+    # ----------------------------------------------------- lifecycle (ws)
+    def _commit(self, *, materialize: bool) -> int:
+        self._check_open()
+        # Close only after end_mgmt succeeds: a commit-time materialization
+        # failure must leave the transaction open so _rollback still runs.
+        epoch = self._manager.end_mgmt(materialize=materialize)
+        self._open = False
+        self.epoch = epoch
+        return epoch
+
+    def _rollback(self) -> None:
+        if not self._open:
+            return
+        self._open = False
+        self._manager.abort_mgmt()

@@ -1,0 +1,195 @@
+"""Workspace — the one public entry point to a stable-linking session.
+
+A ``Workspace`` owns and wires the four engine-room pieces that every caller
+previously assembled by hand (``Registry`` + ``Manager`` + ``Executor`` +
+``CompileCache``, including the ``on_materialize`` hook), and exposes the
+paper's lifecycle as three verbs:
+
+    ws = Workspace.open(root)          # or Workspace.ephemeral()
+
+    with ws.management() as tx:        # management time, transactional
+        tx.publish(bundle, payload)
+        tx.publish(app)
+        tx.remove("old:model")
+    # clean exit  -> end_mgmt: commit + materialize, epoch += 1
+    # exception   -> abort_mgmt: staged world discarded, epoch untouched
+
+    img = ws.load("serve:model")               # epoch: table-driven
+    img = ws.load("serve:model", strategy="lazy")   # by-name via registry
+
+    report = ws.explain("serve:model")         # observable mid-epoch
+    report.to_sqlite(); report.summary()
+
+The engine-room objects stay reachable (``ws.registry`` etc.) for tooling
+and benchmarks that measure below the facade, but application code should
+not construct them directly any more.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+from repro.core.compile_cache import CompileCache
+from repro.core.executor import Executor, Initializer, LoadStats, _zeros_init
+from repro.core.manager import Manager, Mode
+from repro.core.objects import StoreObject
+from repro.core.registry import Registry, World
+from repro.core.relocation import RelocationTable, build_table
+from repro.core.resolver import DynamicResolver
+
+from .report import LinkReport, report_from_table
+from .transaction import ManagementTransaction
+
+
+class Workspace:
+    """A wired stable-linking session over one registry root."""
+
+    def __init__(
+        self,
+        root: str | os.PathLike,
+        *,
+        initializer: Initializer = _zeros_init,
+        io_threads: int = 0,
+        loader: str = "paged",
+        table_format: str = "raw",
+        _ephemeral: bool = False,
+    ):
+        self.root = os.fspath(root)
+        self.registry = Registry(self.root)
+        self.manager = Manager(self.registry)
+        self.executor = Executor(
+            self.registry,
+            self.manager,
+            initializer=initializer,
+            io_threads=io_threads,
+            loader=loader,
+            table_format=table_format,
+        )
+        self.compile_cache = CompileCache(self.registry.root / "executables")
+        self._ephemeral = _ephemeral
+        self._last_stats: dict[str, LoadStats] = {}
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def open(cls, root: str | os.PathLike, **kw) -> "Workspace":
+        """Open (or create) the workspace at ``root``."""
+        return cls(root, **kw)
+
+    @classmethod
+    def ephemeral(cls, prefix: str = "repro-ws-", **kw) -> "Workspace":
+        """A throwaway workspace in a temp directory (examples, tests,
+        benchmarks). ``close()`` deletes it."""
+        return cls(tempfile.mkdtemp(prefix=prefix), _ephemeral=True, **kw)
+
+    def close(self) -> None:
+        """Release the workspace; deletes the store if ephemeral."""
+        if self._ephemeral:
+            shutil.rmtree(self.root, ignore_errors=True)
+
+    def __enter__(self) -> "Workspace":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return (
+            f"Workspace(root={self.root!r}, mode={self.mode.value}, "
+            f"epoch={self.epoch})"
+        )
+
+    # ----------------------------------------------------------- properties
+    @property
+    def mode(self) -> Mode:
+        return self.manager.mode
+
+    @property
+    def epoch(self) -> int:
+        return self.manager.epoch
+
+    def world(self) -> World:
+        """The world view current loads resolve against."""
+        return self.manager.world()
+
+    def objects(self) -> Iterator[StoreObject]:
+        return self.registry.iter_objects()
+
+    # ------------------------------------------------------------ management
+    @contextmanager
+    def management(self, *, materialize: bool = True, resume: bool = False):
+        """One transactional management time.
+
+        Entering from an epoch runs ``begin_mgmt``. Entering while already
+        in management (a fresh store, or a crashed session's leftovers)
+        starts from a clean staged world unless ``resume=True`` explicitly
+        adopts the pending snapshot. Clean exit commits and materializes;
+        any exception rolls the staged world back and re-raises.
+        """
+        mgr = self.manager
+        if mgr.mode == Mode.MANAGEMENT:
+            if not resume:
+                mgr.reset_staged()
+        else:
+            mgr.begin_mgmt()
+        tx = ManagementTransaction(mgr)
+        try:
+            yield tx
+            tx._commit(materialize=materialize)
+        except BaseException:
+            # Covers both body exceptions and commit-time materialization
+            # failures: either way the staged world is discarded and the
+            # committed epoch stays authoritative.
+            tx._rollback()
+            raise
+
+    # ----------------------------------------------------------------- load
+    def load(
+        self,
+        name: str,
+        *,
+        strategy: str = "auto",
+        world: Optional[World] = None,
+    ):
+        """Load an application image; dispatches via the strategy registry."""
+        image = self.executor.load(name, strategy=strategy, world=world)
+        stats = getattr(image, "stats", None)
+        if stats is not None:
+            self._last_stats[name] = stats
+        return image
+
+    # -------------------------------------------------------------- explain
+    def explain(self, name: str) -> LinkReport:
+        """The app's relocation mapping, observable at any time.
+
+        Reads the materialized table when the current world has one (the
+        epoch path — no resolution happens); otherwise resolves dynamically
+        to preview the mapping, without writing anything.
+        """
+        world = self.world()
+        app = world.resolve(name)
+        path = self.registry.table_path(app.content_hash, world.world_hash)
+        if path.exists():
+            table = RelocationTable.load(path)
+            source = "materialized-table"
+        else:
+            resolver = DynamicResolver(world)
+            table = build_table(
+                app,
+                resolver.resolve(app),
+                world_hash=world.world_hash,
+                epoch=self.epoch,
+            )
+            source = "dynamic-resolution"
+        return report_from_table(
+            table,
+            app=app.name,
+            epoch=self.epoch,
+            world_hash=world.world_hash,
+            mode=self.mode.value,
+            source=source,
+            stats=self._last_stats.get(name),
+        )

@@ -34,19 +34,10 @@ import numpy as np
 
 from repro import models
 from repro.ckpt import Checkpointer, bundle_from_params
-from repro.core import (
-    CompileCache,
-    Executor,
-    Manager,
-    Mode,
-    ObjectKind,
-    Registry,
-    SymbolRef,
-    cache_key,
-    make_object,
-)
+from repro.core import ObjectKind, SymbolRef, cache_key, make_object
 from repro.data import Prefetcher, SyntheticTokens
 from repro.launch.steps import build_step
+from repro.link import Workspace
 from repro.optim import OptConfig
 
 
@@ -83,10 +74,12 @@ def _opt_refs(cfg) -> list[SymbolRef]:
 
 class Trainer:
     def __init__(self, registry_root, cfg, shape, mesh, tcfg: TrainConfig):
-        self.registry = Registry(registry_root)
-        self.manager = Manager(self.registry)
-        self.executor = Executor(self.registry, self.manager)
-        self.compile_cache = CompileCache(self.registry.root / "executables")
+        self.ws = Workspace.open(registry_root)
+        # engine-room views of the workspace (Checkpointer + tests use them)
+        self.registry = self.ws.registry
+        self.manager = self.ws.manager
+        self.executor = self.ws.executor
+        self.compile_cache = self.ws.compile_cache
         self.cfg = cfg
         self.shape = shape
         self.mesh = mesh
@@ -98,10 +91,7 @@ class Trainer:
 
     # ------------------------------------------------------------- publish
     def publish(self, params_np: Optional[dict] = None) -> None:
-        """Initial management time: app + bundles into the registry."""
-        m = self.manager
-        if m.mode != Mode.MANAGEMENT:
-            m.begin_mgmt()
+        """Initial management time: app + bundles, one transaction."""
         if params_np is None:
             params_np = {
                 n: np.asarray(v)
@@ -110,9 +100,7 @@ class Trainer:
         wobj, wpl = bundle_from_params(
             self.weights_name, "init", params_np, meta={"step": 0}
         )
-        m.update_obj(wobj, wpl)
         oobj, opl = bundle_from_params(self.opt_name, "init", {}, meta={})
-        m.update_obj(oobj, opl)
         app, _ = make_object(
             name=self.app_name,
             version="1",
@@ -121,14 +109,16 @@ class Trainer:
             needed=[self.weights_name, self.opt_name],
             meta={"arch": self.cfg.name, "shape": self.shape.name},
         )
-        m.update_obj(app)
-        m.end_mgmt()
+        with self.ws.management() as tx:
+            tx.publish(wobj, wpl)
+            tx.publish(oobj, opl)
+            tx.publish(app)
 
     # --------------------------------------------------------------- start
     def _startup(self):
         """Epoch-path startup: table-driven load + AOT-compile cache."""
         t0 = time.perf_counter()
-        image = self.executor.load(self.app_name, strategy="stable")
+        image = self.ws.load(self.app_name, strategy="stable")
         bundle = build_step(
             self.cfg,
             self.shape,

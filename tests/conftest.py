@@ -1,30 +1,44 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device
-(the dry-run subprocess sets its own fake-device count)."""
+"""Shared fixtures. NOTE: no device-count XLA_FLAGS here — tests must see
+1 real device (the dry-run subprocess sets its own fake-device count)."""
 
 from __future__ import annotations
+
+import os
+
+# XLA CPU's parallel LLVM codegen intermittently segfaults (native crash,
+# no Python frame) on this container's old kernel, both mid-compile and at
+# interpreter teardown. Single-threaded codegen is marginally slower and
+# stable. This must be set before jax first initializes; it does not touch
+# the device count.
+_CODEGEN_FLAG = "--xla_cpu_parallel_codegen_split_count=1"
+if _CODEGEN_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _CODEGEN_FLAG
+    ).strip()
 
 import numpy as np
 import pytest
 
 from repro.core import (
-    Executor,
-    Manager,
     ObjectKind,
     PAGE_BYTES,
-    Registry,
     SymbolDef,
     SymbolRef,
     align_up,
     make_object,
 )
+from repro.link import Workspace
 
 
 @pytest.fixture()
-def linker(tmp_path):
-    reg = Registry(tmp_path / "store")
-    mgr = Manager(reg)
-    ex = Executor(reg, mgr)
-    return reg, mgr, ex
+def workspace(tmp_path):
+    return Workspace.open(tmp_path / "store")
+
+
+@pytest.fixture()
+def linker(workspace):
+    """Legacy-shaped fixture: the engine-room triple, wired by Workspace."""
+    return workspace.registry, workspace.manager, workspace.executor
 
 
 def build_bundle(name: str, tensors: dict[str, np.ndarray], version="1"):

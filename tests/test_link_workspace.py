@@ -1,0 +1,266 @@
+"""The unified session API: Workspace transactions, strategy registry,
+and LinkReport observability."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Manager,
+    Mode,
+    ModeError,
+    StableLinkingError,
+    SymbolRef,
+    UnknownStrategyError,
+)
+from repro.link import (
+    Workspace,
+    available_strategies,
+    register_strategy,
+    unregister_strategy,
+)
+
+from conftest import build_app, build_bundle
+
+
+def _publish_demo(ws, value=1.0, version="1"):
+    tensors = {
+        "s/a": np.full(8, value, np.float32),
+        "s/b": np.arange(6, dtype=np.float32).reshape(2, 3),
+    }
+    bundle = build_bundle("w", tensors, version=version)
+    app = build_app(
+        "app",
+        [
+            SymbolRef("s/a", (8,), "float32"),
+            SymbolRef("s/b", (2, 3), "float32"),
+        ],
+        ["w"],
+    )
+    with ws.management() as tx:
+        tx.publish(*bundle)
+        tx.publish(app)
+    return tensors
+
+
+# ----------------------------------------------------------- transactions
+def test_commit_materializes_and_bumps_epoch(workspace):
+    ws = workspace
+    assert ws.epoch == 0 and ws.mode == Mode.MANAGEMENT
+    tensors = _publish_demo(ws)
+    assert ws.epoch == 1 and ws.mode == Mode.EPOCH
+    img = ws.load("app")  # auto -> stable during the epoch
+    assert img.stats.strategy == "stable"
+    np.testing.assert_array_equal(img["s/a"], tensors["s/a"])
+
+
+def test_rollback_restores_pre_transaction_state(workspace):
+    ws = workspace
+    _publish_demo(ws)
+    epoch = ws.epoch
+    bindings = ws.world().bindings
+    baseline = {k: np.array(v) for k, v in ws.load("app").tensors.items()}
+
+    class Boom(Exception):
+        pass
+
+    with pytest.raises(Boom):
+        with ws.management() as tx:
+            tx.remove("w")
+            tx.publish(*build_bundle("w2", {"s/z": np.zeros(4, np.float32)}))
+            assert "w" not in tx.world()
+            raise Boom()
+
+    assert ws.epoch == epoch
+    assert ws.mode == Mode.EPOCH
+    assert ws.world().bindings == bindings
+    img = ws.load("app")
+    for name, arr in baseline.items():
+        np.testing.assert_array_equal(np.asarray(img[name]), arr, err_msg=name)
+
+
+def test_commit_time_materialization_failure_rolls_back(workspace):
+    """An unresolvable app staged in a transaction fails at end_mgmt's
+    materialization; the failure must not half-commit the staged world."""
+    from repro.core import UnresolvedSymbolError
+
+    ws = workspace
+    _publish_demo(ws)
+    epoch = ws.epoch
+    bindings = ws.world().bindings
+    bad_app = build_app(
+        "bad", [SymbolRef("missing/sym", (4,), "float32")], ["w"]
+    )
+    with pytest.raises(UnresolvedSymbolError):
+        with ws.management() as tx:
+            tx.publish(bad_app)
+    assert ws.epoch == epoch
+    assert ws.mode == Mode.EPOCH
+    assert ws.world().bindings == bindings
+    assert ws.load("app").stats.strategy == "stable"
+
+
+def test_rollback_on_virgin_workspace_stays_in_management(workspace):
+    ws = workspace
+    with pytest.raises(RuntimeError):
+        with ws.management() as tx:
+            tx.publish(*build_bundle("w", {"s/a": np.ones(4, np.float32)}))
+            raise RuntimeError()
+    # no epoch was ever committed: nothing to return to
+    assert ws.epoch == 0 and ws.mode == Mode.MANAGEMENT
+    assert ws.world().bindings == {}
+
+
+def test_transaction_handle_closes_after_exit(workspace):
+    ws = workspace
+    with ws.management() as tx:
+        tx.publish(*build_bundle("w", {"s/a": np.ones(4, np.float32)}))
+    assert tx.epoch == 1
+    assert not tx.active
+    with pytest.raises(ModeError):
+        tx.publish(*build_bundle("x", {"s/a": np.ones(4, np.float32)}))
+
+
+def test_management_restarts_clean_over_crashed_pending(tmp_path):
+    """A leftover pending snapshot is not silently committed by the next
+    transaction (resume=True opts in explicitly)."""
+    ws = Workspace.open(tmp_path / "store")
+    _publish_demo(ws)
+    # simulate a crash mid-management: staged removal persisted, process died
+    ws.manager.begin_mgmt()
+    ws.manager.remove_obj("w")
+    ws2 = Workspace.open(tmp_path / "store")  # new process, same store
+    with ws2.management() as tx:
+        pass  # default: starts from the committed world, not the pending one
+    assert "w" in ws2.world()
+    assert "app" in ws2.world()
+
+
+def test_stale_pending_cannot_leak_into_epoch_state(tmp_path):
+    ws = Workspace.open(tmp_path / "store")
+    _publish_demo(ws)
+    # hand-corrupt the state file: epoch mode but a half-staged pending
+    state = json.loads(ws.registry.state_path.read_text())
+    state["pending"] = {}
+    ws.registry.state_path.write_text(json.dumps(state))
+    mgr = Manager(Workspace.open(tmp_path / "store").registry)
+    assert mgr.world().bindings == state["world"]
+    mgr.begin_mgmt()
+    assert mgr.world().bindings == state["world"]  # staged starts from world
+
+
+def test_abort_mgmt_outside_management_raises(workspace):
+    _publish_demo(workspace)
+    with pytest.raises(ModeError):
+        workspace.manager.abort_mgmt()
+
+
+# ------------------------------------------------------- strategy registry
+def test_auto_dispatch_follows_mode(workspace):
+    ws = workspace
+    tensors = {"s/a": np.ones(8, np.float32)}
+    with ws.management() as tx:
+        tx.publish(*build_bundle("w", tensors))
+        tx.publish(build_app("app", [SymbolRef("s/a", (8,), "float32")], ["w"]))
+        img = ws.load("app")  # management time -> dynamic
+        assert img.stats.strategy == "dynamic"
+    img = ws.load("app")      # epoch -> stable
+    assert img.stats.strategy == "stable"
+
+
+def test_unknown_strategy_raises_stable_linking_error(workspace):
+    _publish_demo(workspace)
+    with pytest.raises(UnknownStrategyError) as exc:
+        workspace.load("app", strategy="warp-speed")
+    assert isinstance(exc.value, StableLinkingError)
+    for name in ("stable", "dynamic", "lazy"):
+        assert name in str(exc.value)
+
+
+def test_registered_strategy_is_drop_in(workspace):
+    ws = workspace
+    tensors = _publish_demo(ws)
+    calls = []
+
+    @register_strategy("counting-stable")
+    def _counting(executor, app, world):
+        calls.append(app.name)
+        return executor._load_stable(app, world)
+
+    try:
+        assert "counting-stable" in available_strategies()
+        img = ws.load("app", strategy="counting-stable")
+        np.testing.assert_array_equal(img["s/a"], tensors["s/a"])
+        assert calls == ["app"]
+    finally:
+        unregister_strategy("counting-stable")
+    assert "counting-stable" not in available_strategies()
+
+
+def test_builtin_strategies_agree(workspace):
+    ws = workspace
+    _publish_demo(ws)
+    stable = ws.load("app", strategy="stable")
+    dynamic = ws.load("app", strategy="dynamic")
+    prefetch = ws.load("app", strategy="prefetch")
+    lazy = ws.load("app", strategy="lazy")
+    for name in stable.tensors:
+        a = np.asarray(stable[name])
+        np.testing.assert_array_equal(a, np.asarray(dynamic[name]))
+        np.testing.assert_array_equal(a, np.asarray(prefetch[name]))
+        np.testing.assert_array_equal(a, np.asarray(lazy[name]))
+
+
+# --------------------------------------------------------------- explain
+def test_explain_reads_materialized_table_mid_epoch(workspace):
+    ws = workspace
+    _publish_demo(ws)
+    rep = ws.explain("app")
+    assert rep.source == "materialized-table"
+    assert rep.epoch == 1
+    assert rep.relocations == 2
+    assert rep.by_type == {"DIRECT": 2}
+    assert rep.providers == {"w": 2}
+    assert rep.world_hash == ws.world().world_hash
+    assert rep.stats is None  # nothing loaded through the workspace yet
+
+    ws.load("app")
+    rep2 = ws.explain("app")
+    assert rep2.stats is not None and rep2.stats.strategy == "stable"
+    assert rep2.summary()["last_load"]["relocations"] == 2
+
+    conn = rep2.to_sqlite()
+    n = conn.execute("SELECT COUNT(*) FROM relocations").fetchone()[0]
+    assert n == 2
+    assert len(rep2.records()) == 2
+    assert "s/a" in rep2.to_csv()
+
+
+def test_explain_tracks_epoch_bump(workspace):
+    ws = workspace
+    _publish_demo(ws, value=1.0, version="1")
+    rep1 = ws.explain("app")
+    _publish_demo(ws, value=2.0, version="2")  # upgrade bundle -> new epoch
+    rep2 = ws.explain("app")
+    assert rep2.epoch == rep1.epoch + 1
+    assert rep2.world_hash != rep1.world_hash
+    assert rep2.source == "materialized-table"
+    img = ws.load("app")
+    np.testing.assert_array_equal(img["s/a"], np.full(8, 2.0, np.float32))
+
+
+def test_explain_previews_staged_world_during_management(workspace):
+    ws = workspace
+    _publish_demo(ws)
+    with ws.management() as tx:
+        tx.publish(*build_bundle("w", {
+            "s/a": np.full(8, 9.0, np.float32),
+            "s/b": np.zeros((2, 3), np.float32),
+        }, version="9"))
+        rep = tx and ws.explain("app")
+        assert rep.mode == "management"
+        assert rep.source == "dynamic-resolution"  # no table committed yet
+    assert ws.explain("app").source == "materialized-table"

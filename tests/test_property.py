@@ -12,6 +12,11 @@ P5: arena layouts never overlap and are page-aligned.
 from __future__ import annotations
 
 import numpy as np
+import pytest
+
+# hypothesis is an optional dev dependency; environments without it skip the
+# property suite instead of failing collection.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
