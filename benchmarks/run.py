@@ -22,7 +22,12 @@ import sys
 
 
 def smoke() -> None:
-    """Tiny end-to-end pass: publish one world, run every strategy."""
+    """Tiny end-to-end pass: publish one world, run every strategy.
+
+    Also proves the management-time journal stays off the epoch hot path:
+    the journal file must not change by a single byte across the whole
+    strategy sweep (``smoke/journal_epoch_overhead``).
+    """
     from repro.configs.paper_microbench import make_world_spec
     from repro.link import available_strategies
 
@@ -32,6 +37,12 @@ def smoke() -> None:
     ws = fresh_workspace()
     bundles, app = make_world_spec(8, 16)
     publish_world(ws, bundles + [(app, b"")])
+
+    def journal_size() -> int:
+        p = ws.registry.journal_path
+        return p.stat().st_size if p.exists() else 0
+
+    jsize0 = journal_size()
     for strategy in available_strategies():
         if strategy == "lazy":
             def load():
@@ -43,9 +54,31 @@ def smoke() -> None:
                 ws.load(app.name, strategy=strategy)
         mean, *_ = timeit(load, warmup=1, trials=2)
         emit(f"smoke/{strategy}", mean, f"relocs={8 * 16}")
+    jdelta = journal_size() - jsize0
+    assert jdelta == 0, f"epoch loads wrote {jdelta} journal bytes"
+    emit("smoke/journal_epoch_overhead", 0.0, f"bytes_delta={jdelta}")
+
     rep = ws.explain(app.name)
     emit("smoke/explain", 0.0,
          f"source={rep.source};relocations={rep.relocations}")
+
+    # management-time observability: journaled upgrade + pre-commit preview
+    class _Abort(Exception):
+        pass
+
+    def preview_roll():
+        try:
+            with ws.management() as tx:
+                for obj, payload in bundles[:1]:
+                    tx.publish(obj, payload)
+                tx.diff()
+                tx.preview()
+                raise _Abort  # preview only; keep the world stable
+        except _Abort:
+            pass
+
+    mean, *_ = timeit(preview_roll, warmup=1, trials=2)
+    emit("smoke/journal_preview", mean, f"apps={1}")
     ws.close()
 
 

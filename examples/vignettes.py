@@ -8,6 +8,10 @@ Vignette 2 — CVE audit: which apps bind the "vulnerable" expert tensor from
              a specific bundle? (per-expert symbols <- fragmented manifests)
 Vignette 3 — fine-grained interposition: route ONE layer's norm scale to an
              instrumented bundle for ONE app, leaving everything else alone.
+Vignette 4 — preflight a risky library roll: stage the v2 bundle in a
+             management transaction, read tx.diff()/tx.preview() to see the
+             exact per-app relocation delta BEFORE commit, and abort when
+             the preview shows broken bindings — epoch untouched.
 """
 
 import numpy as np
@@ -102,3 +106,50 @@ print(
 )
 edited = [r for r in inspector.table_records(t_moe) if r["flags"]]
 print(f"  inspector shows {len(edited)} edited row(s) -> fully auditable")
+
+# ---------------------------------------------------------------- vignette 4
+print("=== Vignette 4: preflight a risky library roll (Dana) ===")
+# Dana wants to roll weights:olmoe to the v2 params from vignette 1 (which
+# drop a norm scale and reshape the router). Stage it, preview, decide.
+roll_bundle, roll_pl = bundle_from_params(
+    "weights:olmoe", "v2", v2_params,
+    fragment_layers=True, fragment_experts=True,
+)
+
+
+class AbortRoll(Exception):
+    pass
+
+
+epoch_before = ws.epoch
+try:
+    with ws.management() as tx:
+        tx.publish(roll_bundle, roll_pl)
+        diff = tx.diff()
+        print(f"  staged diff: upgraded={sorted(diff.upgraded)}")
+        preview = tx.preview()
+        d = preview.delta_for("serve:olmoe")
+        print(
+            f"  preview for serve:olmoe: {len(d.changed)} changed, "
+            f"{len(d.unresolved)} unresolved, "
+            f"tables to rebuild: {preview.tables_to_rebuild}"
+        )
+        for u in d.unresolved[:3]:
+            print(f"    would break: {u['symbol']}")
+        # the same delta is visible through the one-call surface:
+        rep = ws.explain("serve:olmoe", pending=True)
+        assert rep.pending and rep.delta is not None
+        if d.unresolved:
+            raise AbortRoll  # commit would strand these relocations
+except AbortRoll:
+    print(
+        f"  roll aborted pre-commit; epoch still {ws.epoch} "
+        f"(was {epoch_before}), journal truncated "
+        f"({len(ws.journal.entries())} entries)"
+    )
+assert ws.epoch == epoch_before
+np.testing.assert_array_equal(
+    np.asarray(ws.load("serve:olmoe")["blocks/router/w[0]"]),
+    moe_params["blocks/router/w"][0],
+)
+print("  committed world unchanged -> jobs keep loading the v1 mapping")

@@ -26,12 +26,13 @@ from .errors import (
     PayloadIntegrityError,
     StableLinkingError,
     StaleTableError,
+    StateSchemaError,
     SymbolMismatchError,
     UnknownObjectError,
     UnknownStrategyError,
     UnresolvedSymbolError,
 )
-from .executor import Executor, LazyImage, LoadedImage, LoadStats
+from .executor import WEAK_KERNEL_NOOP, Executor, LazyImage, LoadedImage, LoadStats
 from .manager import Manager, Mode
 from .objects import (
     PAGE_BYTES,
@@ -62,11 +63,13 @@ __all__ = [
     "PayloadIntegrityError",
     "StableLinkingError",
     "StaleTableError",
+    "StateSchemaError",
     "SymbolMismatchError",
     "UnknownObjectError",
     "UnknownStrategyError",
     "UnresolvedSymbolError",
     "Executor",
+    "WEAK_KERNEL_NOOP",
     "LazyImage",
     "LoadedImage",
     "LoadStats",

@@ -61,3 +61,7 @@ class StaleTableError(StableLinkingError):
 
 class PayloadIntegrityError(StableLinkingError):
     """Bundle payload digest does not match its manifest (corrupt store)."""
+
+
+class StateSchemaError(StableLinkingError):
+    """state.json was written by a newer schema than this build supports."""

@@ -40,6 +40,14 @@ from .resolver import DynamicResolver, Relocation, np_dtype
 
 Initializer = Callable[[str, tuple[int, ...], str], np.ndarray]
 
+# Binding recorded for a weak kernel-dtype ref that resolved nowhere
+# (RelocType.INIT with no arena slot). Kernel symbols bind to entry points,
+# not tensor bytes, so the numeric initializer can never produce a value for
+# them — the explicit no-op entry keeps ``LoadedImage.kernels`` total and
+# lets callers detect the unbound op (`provider, entry = v.rsplit(":", 1)`
+# still parses, with entry "-1").
+WEAK_KERNEL_NOOP = "noop:-1"
+
 
 def _zeros_init(name: str, shape: tuple[int, ...], dtype: str) -> np.ndarray:
     return np.zeros(shape, dtype=np_dtype(dtype))
@@ -89,11 +97,11 @@ class LazyImage:
         self._world = world
         self._resolver = DynamicResolver(world)
         self._scope = None
-        self._cache: dict[str, np.ndarray] = {}
+        self._cache: dict[str, object] = {}   # ndarray, or str for kernels
         self._refs = {r.name: r for r in app.refs}
         self.stats = LoadStats(strategy="lazy")
 
-    def __getitem__(self, name: str) -> np.ndarray:
+    def __getitem__(self, name: str):
         hit = self._cache.get(name)
         if hit is not None:
             return hit
@@ -107,12 +115,24 @@ class LazyImage:
             raise UnknownObjectError(f"{self._app.name} has no symbol {name!r}")
         reloc = self._resolver.resolve_ref(ref, self._app, self._scope)
         self.stats.resolve_s += time.perf_counter() - t0
+        self.stats.probes = self._resolver.probe_count
+        if ref.dtype == "kernel":
+            # kernel symbols bind to entry points, not tensor bytes; an
+            # unresolved weak one binds the explicit no-op entry instead of
+            # faulting through the numeric initializer
+            val = (
+                WEAK_KERNEL_NOOP
+                if reloc.provider is None
+                else f"{reloc.provider.name}:{reloc.st_value}"
+            )
+            self.stats.relocations += 1
+            self._cache[name] = val
+            return val
         t1 = time.perf_counter()
         arr = self._executor._read_single(reloc)
         self.stats.io_s += time.perf_counter() - t1
         self.stats.relocations += 1
         self.stats.bytes_loaded += arr.nbytes
-        self.stats.probes = self._resolver.probe_count
         self._cache[name] = arr
         return arr
 
@@ -285,13 +305,24 @@ class Executor:
                     prov = table.object_by_uuid(int(r["provides_so_uuid"]))
                     kernels[name] = f"{prov['name']}:{int(r['st_value'])}"
                     continue
-                slot = slots[name]
-                dst = arena[slot.offset : slot.offset + slot.nbytes]
                 if rt == RelocType.INIT:
+                    slot = slots.get(name)
+                    if slot is None and int(r["st_size"]) == 0:
+                        # unbound weak kernel ref (only kernel refs carry
+                        # st_size 0): no arena slot exists and the
+                        # initializer cannot make a "kernel" array — bind
+                        # an explicit no-op entry instead
+                        kernels[name] = WEAK_KERNEL_NOOP
+                        continue
+                    if slot is None:
+                        slot = slots[name]  # slotless tensor ref: loud
+                    dst = arena[slot.offset : slot.offset + slot.nbytes]
                     init = self.initializer(name, slot.shape, slot.dtype)
                     dst[:] = np.ascontiguousarray(init).view(np.uint8).ravel()
                     nbytes += slot.nbytes
                     continue
+                slot = slots[name]
+                dst = arena[slot.offset : slot.offset + slot.nbytes]
                 src0 = int(r["st_value"]) + int(r["addend"])
                 size = int(r["st_size"])
                 src = payload()[src0 : src0 + size]
@@ -395,12 +426,19 @@ class Executor:
                 prov = table.object_by_uuid(int(r["provides_so_uuid"]))
                 kernels[name] = f"{prov['name']}:{int(r['st_value'])}"
                 continue
-            slot = slots[name]
-            dstb = arena[slot.offset : slot.offset + slot.nbytes]
             if rt == RelocType.INIT:
+                slot = slots.get(name)
+                if slot is None and int(r["st_size"]) == 0:
+                    kernels[name] = WEAK_KERNEL_NOOP  # unbound weak kernel
+                    continue
+                if slot is None:
+                    slot = slots[name]  # slotless tensor ref: loud
+                dstb = arena[slot.offset : slot.offset + slot.nbytes]
                 init = self.initializer(name, slot.shape, slot.dtype)
                 dstb[:] = np.ascontiguousarray(init).view(np.uint8).ravel()
                 continue
+            slot = slots[name]
+            dstb = arena[slot.offset : slot.offset + slot.nbytes]
             prov = table.object_by_uuid(int(r["provides_so_uuid"]))
             mm = self._payload_mmap(prov["store_name"])
             src0 = int(r["st_value"]) + int(r["addend"])

@@ -15,6 +15,11 @@ SQL schema:
                 st_size, requires_so, provides_so, requires_uuid,
                 provides_uuid, flags)
     abi(object_name, version, symbol_name, shape, dtype, nbytes, offset)
+    pending_changes(app, kind, symbol, old_provider, new_provider,
+                    old_addend, new_addend, detail)
+        — the management-time preview view (``preview_to_sqlite``): one row
+          per relocation a staged-but-uncommitted world would change, so the
+          vignette queries can be run against a roll *before* it lands.
 """
 
 from __future__ import annotations
@@ -127,6 +132,46 @@ def to_sqlite(
                (:object_name,:version,:symbol_name,:shape,:dtype,:nbytes,
                 :offset)""",
             abi_records(o),
+        )
+    conn.commit()
+    return conn
+
+
+def preview_records(preview) -> list[dict]:
+    """Flat rows of a management-time preview (``tx.preview()``): one row per
+    changed / unresolved relocation and per missing dependency. ``preview``
+    is any object with the ``repro.link.journal.PreviewReport`` protocol."""
+    return list(preview.records())
+
+
+def preview_to_sqlite(
+    preview,
+    *,
+    conn: Optional[sqlite3.Connection] = None,
+    path: str = ":memory:",
+) -> sqlite3.Connection:
+    """Load a pre-commit preview into a queryable ``pending_changes`` table
+    (optionally into an existing connection beside ``relocations``/``abi``).
+
+    The table always holds exactly the *latest* preview: previous rows are
+    dropped first, so iterating on a roll (preview, restage, preview again
+    on the same connection) never mixes stale pending rows with fresh ones.
+    """
+    if conn is None:
+        conn = sqlite3.connect(path)
+    conn.execute(
+        """CREATE TABLE IF NOT EXISTS pending_changes (
+             app TEXT, kind TEXT, symbol TEXT, old_provider TEXT,
+             new_provider TEXT, old_addend INT, new_addend INT, detail TEXT)"""
+    )
+    conn.execute("DELETE FROM pending_changes")
+    recs = preview_records(preview)
+    if recs:
+        conn.executemany(
+            """INSERT INTO pending_changes VALUES
+               (:app,:kind,:symbol,:old_provider,:new_provider,
+                :old_addend,:new_addend,:detail)""",
+            [{"detail": "", **r} for r in recs],
         )
     conn.commit()
     return conn

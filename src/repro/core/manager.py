@@ -28,6 +28,13 @@ explicit resume), and a state that claims ``mode=epoch`` has its pending
 forced back to the committed world — a half-staged snapshot can never leak
 into the next epoch's bindings.
 
+Journal hooks: an optional ``journal`` sink (``repro.link.journal.Journal``
+or anything with ``record``/``clear``/``last_seq``) receives one entry per
+staged op and is truncated at every session boundary (begin/commit/abort/
+reset). The Manager itself stays journal-agnostic — with ``journal=None``
+(direct engine-room wiring, benchmarks below the facade) behaviour and cost
+are exactly as before, and nothing is journaled on the epoch load path.
+
 Direct ``Manager`` wiring is deprecated for application code — use
 ``repro.link.Workspace``, which adds transactional management times on top.
 """
@@ -63,6 +70,9 @@ class Manager:
             self._staged = dict(st.get("pending", self._world))
         # Hook invoked by end_mgmt; wired to Executor.materialize_all.
         self.on_materialize: Optional[Callable[[World, int], None]] = None
+        # Optional journal sink (record/clear/last_seq); wired by Workspace.
+        self.journal = None
+        self._journal_seq = int(st.get("journal_seq", 0))
 
     # ------------------------------------------------------------- properties
     @property
@@ -82,12 +92,30 @@ class Manager:
     def committed_world(self) -> World:
         return World(self.registry, self._world)
 
+    @property
+    def journal_seq(self) -> int:
+        """Last journal sequence number the persisted state has seen.
+
+        A journal whose tail is *behind* this value lost entries relative
+        to the state file (swapped or truncated out-of-band) and must not
+        be replayed over it; one at or ahead of it is authoritative."""
+        return self._journal_seq
+
+    @property
+    def committed_bindings(self) -> dict[str, str]:
+        return dict(self._world)
+
+    @property
+    def staged_bindings(self) -> dict[str, str]:
+        return dict(self._staged)
+
     # ------------------------------------------------------------- operations
     def begin_mgmt(self) -> None:
         if self._mode == Mode.MANAGEMENT:
             raise ModeError("already in management time")
         self._mode = Mode.MANAGEMENT
         self._staged = dict(self._world)
+        self._journal_clear()
         self._persist()
 
     def update_obj(self, obj: StoreObject, payload: bytes = b"") -> StoreObject:
@@ -99,6 +127,7 @@ class Manager:
             )
         self.registry.add(obj, payload)
         self._staged[obj.name] = obj.content_hash
+        self._journal_record("publish", obj)
         self._persist()
         return obj
 
@@ -109,6 +138,7 @@ class Manager:
             )
         self.registry.add_with_payload_file(obj, payload_file)
         self._staged[obj.name] = obj.content_hash
+        self._journal_record("publish-file", obj)
         self._persist()
         return obj
 
@@ -117,7 +147,9 @@ class Manager:
             raise ImmutableEpochError(f"remove_obj({name!r}) during epoch")
         if name not in self._staged:
             raise UnknownObjectError(name)
-        del self._staged[name]
+        old_hash = self._staged.pop(name)
+        if self.journal is not None:
+            self.journal.record("remove", name=name, content_hash=old_hash)
         self._persist()
 
     def reset_staged(self) -> None:
@@ -129,6 +161,14 @@ class Manager:
         if self._mode != Mode.MANAGEMENT:
             raise ModeError("reset_staged outside management time")
         self._staged = dict(self._world)
+        self._journal_clear()
+        self._persist()
+
+    def restore_staged(self, bindings: dict[str, str]) -> None:
+        """Adopt an explicit staged world (journal replay on resume)."""
+        if self._mode != Mode.MANAGEMENT:
+            raise ModeError("restore_staged outside management time")
+        self._staged = dict(bindings)
         self._persist()
 
     def abort_mgmt(self) -> None:
@@ -145,6 +185,7 @@ class Manager:
         self._staged = dict(self._world)
         if self._epoch > 0:
             self._mode = Mode.EPOCH
+        self._journal_clear()
         self._persist()
 
     def end_mgmt(self, materialize: bool = True) -> int:
@@ -169,17 +210,36 @@ class Manager:
         self._world = dict(self._staged)
         self._epoch = new_epoch
         self._mode = Mode.EPOCH
+        self._journal_clear()
         self._persist()
         return self._epoch
 
     # --------------------------------------------------------------- internal
+    def _journal_record(self, op: str, obj: StoreObject) -> None:
+        if self.journal is not None:
+            self.journal.record(
+                op,
+                name=obj.name,
+                content_hash=obj.content_hash,
+                payload_size=obj.payload_size,
+                kind=int(obj.kind),
+                version=obj.version,
+            )
+
+    def _journal_clear(self) -> None:
+        if self.journal is not None:
+            self.journal.clear()
+
     def _persist(self) -> None:
+        if self.journal is not None:
+            self._journal_seq = int(self.journal.last_seq)
         self.registry.write_state(
             {
                 "mode": self._mode.value,
                 "epoch": self._epoch,
                 "world": self._world,
                 "pending": self._staged,
+                "journal_seq": self._journal_seq,
                 "mtime": time.time(),
             }
         )

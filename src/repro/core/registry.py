@@ -9,6 +9,7 @@ Layout on disk::
       tables/<app_hash>-<world_hash>.npz     (materialized relocation tables)
       executables/<key>.jaxexe               (AOT compile cache, optional)
       state.json               (mode, epoch counter, world view)
+      journal.jsonl            (staged ops of the open management session)
 
 The *world view* is the set of (object name -> content hash) bindings that is
 current for the running epoch — the analogue of /nix/var/nix/profiles. The
@@ -17,6 +18,13 @@ current for the running epoch — the analogue of /nix/var/nix/profiles. The
 world it was not materialized for (StaleTableError otherwise).
 
 The registry itself is mode-agnostic; mutation gating lives in Manager.
+
+State schema versioning: ``state.json`` carries a ``schema`` integer.
+v1 (unversioned) predates the management journal; ``read_state`` migrates it
+in place by filling the v2 fields (``schema``, ``journal_seq``), so stores
+written by older builds keep working. A state written by a *newer* schema
+than this build understands raises ``StateSchemaError`` instead of being
+silently misread.
 """
 
 from __future__ import annotations
@@ -28,8 +36,12 @@ import tempfile
 from pathlib import Path
 from typing import Iterator, Optional
 
-from .errors import PayloadIntegrityError, UnknownObjectError
+from .errors import PayloadIntegrityError, StateSchemaError, UnknownObjectError
 from .objects import StoreObject, payload_digest
+
+# Current state.json schema. v1 = unversioned (pre-journal); v2 adds the
+# `schema` stamp and `journal_seq` (last journal entry the state has seen).
+STATE_SCHEMA = 2
 
 
 class Registry:
@@ -126,13 +138,43 @@ class Registry:
 
     def read_state(self) -> dict:
         if self.state_path.exists():
-            return json.loads(self.state_path.read_text())
-        return {"mode": "management", "epoch": 0, "world": {}, "pending": {}}
+            return migrate_state(json.loads(self.state_path.read_text()))
+        return {
+            "schema": STATE_SCHEMA,
+            "mode": "management",
+            "epoch": 0,
+            "world": {},
+            "pending": {},
+            "journal_seq": 0,
+        }
 
     def write_state(self, state: dict) -> None:
+        state = dict(state)
+        state.setdefault("schema", STATE_SCHEMA)
         tmp = self.state_path.with_suffix(".tmp")
         tmp.write_text(json.dumps(state, indent=1, sort_keys=True))
         os.replace(tmp, self.state_path)
+
+    @property
+    def journal_path(self) -> Path:
+        return self.root / "journal.jsonl"
+
+
+def migrate_state(state: dict) -> dict:
+    """Upgrade a loaded state dict to the current schema (in memory only;
+    the next write persists the upgraded form)."""
+    schema = int(state.get("schema", 1))
+    if schema > STATE_SCHEMA:
+        raise StateSchemaError(
+            f"state.json schema {schema} is newer than this build's "
+            f"{STATE_SCHEMA}; refusing to guess at its meaning"
+        )
+    if schema < 2:
+        state = dict(state)
+        state["schema"] = 2
+        state.setdefault("journal_seq", 0)
+        state.setdefault("pending", dict(state.get("world", {})))
+    return state
 
 
 class World:

@@ -167,24 +167,27 @@ class DynamicResolver:
             sdef = obj.symbols.get(ref.name)
             if sdef is not None:
                 m = _match(ref, sdef)
-                if m is None:
-                    if self.on_mismatch == "error":
-                        raise SymbolMismatchError(
-                            f"symbol {ref.name!r}: required shape "
-                            f"{ref.shape}/{ref.dtype}, {obj.name} provides "
-                            f"{tuple(sdef.shape)}/{sdef.dtype}"
-                        )
-                    continue  # skip: keep searching later objects
-                rtype, addend, nbytes = m
-                return Relocation(
-                    ref=ref,
-                    requirer=requirer,
-                    provider=obj,
-                    rtype=rtype,
-                    addend=addend,
-                    st_value=sdef.offset,
-                    st_size=nbytes,
-                )
+                if m is not None:
+                    rtype, addend, nbytes = m
+                    return Relocation(
+                        ref=ref,
+                        requirer=requirer,
+                        provider=obj,
+                        rtype=rtype,
+                        addend=addend,
+                        st_value=sdef.offset,
+                        st_size=nbytes,
+                    )
+                if self.on_mismatch == "error":
+                    raise SymbolMismatchError(
+                        f"symbol {ref.name!r}: required shape "
+                        f"{ref.shape}/{ref.dtype}, {obj.name} provides "
+                        f"{tuple(sdef.shape)}/{sdef.dtype}"
+                    )
+                # skip: fall through to slice probing on this SAME object —
+                # a provider may export a mismatched whole-name `X[i]` AND a
+                # stacked base `X` the sliced ref can still bind against;
+                # `continue` here would wrongly pass the object over.
             # sliced reference: try every split point — a provider may
             # export "X" (fully stacked) or "X[l]" (expert-stacked) etc.
             for k in range(1, len(idxs) + 1):

@@ -11,33 +11,57 @@ one-call observability:
     with ws.management() as tx:                # commit-or-rollback
         tx.publish(bundle, payload)
         tx.publish(app)
+        tx.diff()                              # staged vs committed bindings
+        tx.preview()                           # relocation-delta dry run
     img = ws.load("serve:model")               # strategy registry dispatch
     ws.explain("serve:model").summary()        # observable mid-epoch
+
+Management times are journaled (``journal.jsonl`` beside the state file):
+``Workspace.management(resume=True)`` replays a crashed session's staged
+ops so the operator sees its diff before continuing or resetting.
 
 Direct Registry/Manager/Executor wiring remains available in ``repro.core``
 for tooling that measures below the facade, but is deprecated for
 application code.
 """
 
+from .journal import (
+    Journal,
+    JournalEntry,
+    PreviewReport,
+    RelocationDelta,
+    WorldDiff,
+    preview_world,
+    world_diff,
+)
 from .report import LinkReport, report_from_table
 from .strategies import (
     available_strategies,
     get_strategy,
     register_strategy,
     resolve_strategy,
+    strategy_overrides,
     unregister_strategy,
 )
 from .transaction import ManagementTransaction
 from .workspace import Workspace
 
 __all__ = [
+    "Journal",
+    "JournalEntry",
     "LinkReport",
     "ManagementTransaction",
+    "PreviewReport",
+    "RelocationDelta",
     "Workspace",
+    "WorldDiff",
     "available_strategies",
     "get_strategy",
+    "preview_world",
     "register_strategy",
     "report_from_table",
     "resolve_strategy",
+    "strategy_overrides",
     "unregister_strategy",
+    "world_diff",
 ]

@@ -44,6 +44,14 @@ class LinkReport:
     providers: dict[str, int] = field(default_factory=dict)
     stats: Optional[LoadStats] = None   # last observed load, if any
     table: RelocationTable = None       # the full mapping (not in summary())
+    # pre-commit only (explain(pending=True)): the app's relocation delta
+    # versus the committed epoch — a repro.link.journal.RelocationDelta
+    delta: Optional[object] = None
+
+    @property
+    def pending(self) -> bool:
+        """True when this report explains a staged, uncommitted world."""
+        return self.source == "staged-preview"
 
     # ------------------------------------------------------------ summary
     def summary(self) -> dict:
@@ -59,6 +67,8 @@ class LinkReport:
             "by_type": dict(self.by_type),
             "providers": dict(self.providers),
         }
+        if self.delta is not None:
+            out["pending_delta"] = self.delta.summary()
         if self.stats is not None:
             out["last_load"] = {
                 "strategy": self.stats.strategy,
@@ -103,6 +113,7 @@ def report_from_table(
     mode: str,
     source: str,
     stats: Optional[LoadStats] = None,
+    delta: Optional[object] = None,
 ) -> LinkReport:
     """Build the summary breakdowns from a relocation table."""
     rows = table.rows
@@ -126,4 +137,5 @@ def report_from_table(
         providers=providers,
         stats=stats,
         table=table,
+        delta=delta,
     )

@@ -25,6 +25,7 @@ time, stable during an epoch.
 from __future__ import annotations
 
 import os
+from contextlib import contextmanager
 from typing import Callable, Optional
 
 from repro.core.errors import UnknownStrategyError
@@ -52,6 +53,43 @@ def register_strategy(name: str, fn: Optional[LoadStrategy] = None):
 
 def unregister_strategy(name: str) -> None:
     _STRATEGIES.pop(name, None)
+
+
+@contextmanager
+def strategy_overrides(**strategies: Optional[LoadStrategy]):
+    """Scoped strategy shadowing: snapshot the registry, apply ``name=fn``
+    overrides (``name=None`` unregisters), and restore the exact previous
+    registry on exit — even on exception.
+
+    Bare ``register_strategy``/``unregister_strategy`` mutate process-global
+    state: a test that shadows ``stable`` and forgets to restore it poisons
+    every later test and benchmark sweep in the process. Use this instead::
+
+        with strategy_overrides(stable=my_instrumented_stable):
+            ws.load("app")          # dispatches to the shadow
+        # built-in `stable` is back, along with anything else touched
+    """
+    saved = dict(_STRATEGIES)
+    try:
+        for name, fn in strategies.items():
+            if fn is None:
+                _STRATEGIES.pop(name, None)
+            else:
+                _STRATEGIES[name] = fn
+        yield
+    finally:
+        _STRATEGIES.clear()
+        _STRATEGIES.update(saved)
+
+
+def snapshot_strategies() -> dict[str, LoadStrategy]:
+    """Copy of the current registry (test fixtures snapshot/restore it)."""
+    return dict(_STRATEGIES)
+
+
+def restore_strategies(snapshot: dict[str, LoadStrategy]) -> None:
+    _STRATEGIES.clear()
+    _STRATEGIES.update(snapshot)
 
 
 def available_strategies() -> list[str]:

@@ -10,6 +10,11 @@ a failed transaction.
 Payload bytes already written into the content-addressed store by a rolled-
 back transaction stay on disk: they are unreferenced by any world view, so
 they are invisible (and re-publishable for free, being content-addressed).
+
+Observability: every staged op is journaled (``repro.link.journal``) and the
+transaction exposes pre-commit views — ``tx.diff()`` for the binding-level
+``WorldDiff`` and ``tx.preview()`` for the per-application relocation delta
+a commit would produce. Both are read-only dry runs.
 """
 
 from __future__ import annotations
@@ -22,14 +27,23 @@ from repro.core.manager import Manager
 from repro.core.objects import StoreObject
 from repro.core.registry import World
 
+from .journal import (
+    JournalEntry,
+    PreviewReport,
+    WorldDiff,
+    preview_world,
+    world_diff,
+)
+
 
 class ManagementTransaction:
     """Handle for staging world mutations inside one management time."""
 
-    def __init__(self, manager: Manager):
+    def __init__(self, manager: Manager, *, resumed: bool = False):
         self._manager = manager
         self._open = True
         self.epoch: Optional[int] = None  # set on commit
+        self.resumed = resumed            # adopted a crashed session's staging
 
     # ------------------------------------------------------------- guards
     def _check_open(self) -> None:
@@ -64,6 +78,30 @@ class ManagementTransaction:
         """The staged world view as this transaction currently sees it."""
         self._check_open()
         return self._manager.world()
+
+    def diff(self) -> WorldDiff:
+        """Staged-vs-committed binding delta (added/removed/upgraded)."""
+        self._check_open()
+        return world_diff(
+            self._manager.committed_bindings,
+            self._manager.staged_bindings,
+            committed_world_hash=self._manager.committed_world().world_hash,
+            staged_world_hash=self._manager.world().world_hash,
+        )
+
+    def preview(self) -> PreviewReport:
+        """Relocation-delta preview: dry-run materialization against the
+        staged world. Reports, per application, which relocations change
+        provider/addend, which go unresolved, and which tables will be
+        rebuilt at commit. Writes nothing."""
+        self._check_open()
+        return preview_world(self._manager)
+
+    def journal_entries(self) -> list[JournalEntry]:
+        """The staged ops journaled so far in this management session."""
+        self._check_open()
+        journal = self._manager.journal
+        return journal.entries() if journal is not None else []
 
     # ----------------------------------------------------- lifecycle (ws)
     def _commit(self, *, materialize: bool) -> int:

@@ -41,6 +41,9 @@ from repro.core.registry import Registry, World
 from repro.core.relocation import RelocationTable, build_table
 from repro.core.resolver import DynamicResolver
 
+from repro.core.errors import ModeError
+
+from .journal import Journal
 from .report import LinkReport, report_from_table
 from .transaction import ManagementTransaction
 
@@ -70,6 +73,10 @@ class Workspace:
             table_format=table_format,
         )
         self.compile_cache = CompileCache(self.registry.root / "executables")
+        # Management-time journal: staged ops persisted beside state.json so
+        # a crashed session's staging is operator-visible on the next open.
+        self.journal = Journal(self.registry.journal_path)
+        self.manager.journal = self.journal
         self._ephemeral = _ephemeral
         self._last_stats: dict[str, LoadStats] = {}
 
@@ -126,16 +133,41 @@ class Workspace:
         Entering from an epoch runs ``begin_mgmt``. Entering while already
         in management (a fresh store, or a crashed session's leftovers)
         starts from a clean staged world unless ``resume=True`` explicitly
-        adopts the pending snapshot. Clean exit commits and materializes;
-        any exception rolls the staged world back and re-raises.
+        adopts the dead session's staging: the journal is replayed over the
+        committed world so ``tx.diff()`` / ``tx.preview()`` show exactly
+        what was staged before the operator continues or resets. Clean exit
+        commits and materializes; any exception rolls the staged world back
+        and re-raises.
         """
         mgr = self.manager
+        resumed = False
         if mgr.mode == Mode.MANAGEMENT:
-            if not resume:
+            if resume:
+                entries = self.journal.entries()
+                if entries and entries[-1].seq >= mgr.journal_seq:
+                    # The journal is authoritative on resume: replaying it
+                    # over the committed world reproduces the staged world
+                    # op by op (and heals a pending snapshot that lost the
+                    # crashing op's write).
+                    mgr.restore_staged(
+                        self.journal.replay(mgr.committed_bindings)
+                    )
+                    resumed = True
+                else:
+                    # The journal is absent (pre-journal store, direct-
+                    # Manager staging) or *behind* the persisted state
+                    # (swapped/truncated out-of-band): the pending snapshot
+                    # is the better record and is already live in staged.
+                    # Resync the journal to describe it, so ops staged from
+                    # here build on a complete record — otherwise a later
+                    # crash+resume would replay a journal that silently
+                    # drops the snapshot-adopted ops.
+                    resumed = self._resync_journal_from_staged(mgr)
+            else:
                 mgr.reset_staged()
         else:
             mgr.begin_mgmt()
-        tx = ManagementTransaction(mgr)
+        tx = ManagementTransaction(mgr, resumed=resumed)
         try:
             yield tx
             tx._commit(materialize=materialize)
@@ -145,6 +177,40 @@ class Workspace:
             # committed epoch stays authoritative.
             tx._rollback()
             raise
+
+    def _resync_journal_from_staged(self, mgr: Manager) -> bool:
+        """Rewrite the journal to describe the currently adopted staged
+        world (synthetic publish/remove entries from the staged-vs-committed
+        delta). Returns True when the adopted staging is non-empty."""
+        from .journal import world_diff
+
+        self.journal.clear()
+        d = world_diff(mgr.committed_bindings, mgr.staged_bindings)
+        if d.is_empty:
+            return False
+        published = {**d.added, **{n: nh for n, (_, nh) in d.upgraded.items()}}
+        for name in sorted(published):
+            h = published[name]
+            try:
+                obj = self.registry.get(h)
+                self.journal.record(
+                    "publish",
+                    name=name,
+                    content_hash=h,
+                    payload_size=obj.payload_size,
+                    kind=int(obj.kind),
+                    version=obj.version,
+                )
+            except Exception:
+                # manifest unreadable: record the binding itself at least
+                self.journal.record("publish", name=name, content_hash=h)
+        for name in sorted(d.removed):
+            self.journal.record(
+                "remove", name=name, content_hash=d.removed[name]
+            )
+        # persist the new journal_seq into state.json (staged unchanged)
+        mgr.restore_staged(mgr.staged_bindings)
+        return True
 
     # ----------------------------------------------------------------- load
     def load(
@@ -162,17 +228,43 @@ class Workspace:
         return image
 
     # -------------------------------------------------------------- explain
-    def explain(self, name: str) -> LinkReport:
+    def explain(self, name: str, *, pending: bool = False) -> LinkReport:
         """The app's relocation mapping, observable at any time.
 
         Reads the materialized table when the current world has one (the
         epoch path — no resolution happens); otherwise resolves dynamically
         to preview the mapping, without writing anything.
+
+        ``pending=True`` (management time only) explains the *staged*,
+        uncommitted world and attaches the app's relocation delta versus
+        the committed epoch (``report.delta``), so an operator can inspect
+        exactly what a commit would change before it lands.
         """
+        if pending and self.mode != Mode.MANAGEMENT:
+            raise ModeError(
+                "explain(pending=True) outside management time: there is "
+                "no staged world to preview"
+            )
         world = self.world()
         app = world.resolve(name)
         path = self.registry.table_path(app.content_hash, world.world_hash)
-        if path.exists():
+        delta = None
+        if pending:
+            # Staged-world dry run for this app only. Tolerant: a staged
+            # world with broken refs still explains (the breakage shows up
+            # in delta.unresolved, not as a raise); the dry run's
+            # relocations are reused for the preview table.
+            from .journal import app_relocation_delta
+
+            delta, relocations = app_relocation_delta(self.manager, app)
+            table = build_table(
+                app,
+                relocations,
+                world_hash=world.world_hash,
+                epoch=self.epoch,
+            )
+            source = "staged-preview"
+        elif path.exists():
             table = RelocationTable.load(path)
             source = "materialized-table"
         else:
@@ -192,4 +284,5 @@ class Workspace:
             mode=self.mode.value,
             source=source,
             stats=self._last_stats.get(name),
+            delta=delta,
         )

@@ -30,6 +30,18 @@ from repro.core import (
 from repro.link import Workspace
 
 
+@pytest.fixture(autouse=True)
+def _strategy_registry_guard():
+    """The strategy registry is process-global: a test that shadows a
+    built-in (e.g. `stable`) must not poison later tests or benchmark
+    sweeps. Snapshot before and restore after every test."""
+    from repro.link.strategies import restore_strategies, snapshot_strategies
+
+    snap = snapshot_strategies()
+    yield
+    restore_strategies(snap)
+
+
 @pytest.fixture()
 def workspace(tmp_path):
     return Workspace.open(tmp_path / "store")

@@ -113,6 +113,44 @@ def test_shape_mismatch_error_vs_skip(linker):
     assert r[0].provider.name == "libgood"
 
 
+def test_skip_mismatch_falls_through_to_slice_on_same_object(linker):
+    """Regression: with on_mismatch="skip", a whole-name match that fails
+    `_match` must not skip slice-probing on the SAME object — a provider
+    exporting both a mismatched `x[1]` and a stacked base `x` that the
+    sliced ref can bind against was wrongly passed over."""
+    stacked = np.arange(24, dtype=np.float32).reshape(3, 8)
+    from repro.core import ObjectKind, SymbolDef, make_object
+    from repro.core.objects import PAGE_BYTES, align_up
+
+    payload = bytearray(stacked.tobytes())
+    payload.extend(b"\x00" * (align_up(len(payload), PAGE_BYTES) - len(payload)))
+    bad_off = len(payload)
+    bad = np.zeros(3, np.float64)  # wrong shape AND dtype for the ref
+    payload.extend(bad.tobytes())
+    lib = make_object(
+        name="lib", version="1", kind=ObjectKind.BUNDLE,
+        symbols=[
+            SymbolDef("x", (3, 8), "float32", 0, stacked.nbytes),
+            # literal whole-name export that does NOT match the ref
+            SymbolDef("x[1]", (3,), "float64", bad_off, bad.nbytes),
+        ],
+        payload=bytes(payload),
+    )
+    app = build_app("app", [SymbolRef("x[1]", (8,), "float32")], ["lib"])
+    world = _world(linker, lib, (app, b""))
+    r = DynamicResolver(world, on_mismatch="skip").resolve(
+        world.resolve("app")
+    )[0]
+    assert r.rtype == RelocType.SLICE
+    assert r.provider.name == "lib"
+    assert r.addend == 1 * 8 * 4  # slice-bound against the stacked base
+    # error mode still reports the incompatible whole-name export loudly
+    with pytest.raises(SymbolMismatchError):
+        DynamicResolver(world, on_mismatch="error").resolve(
+            world.resolve("app")
+        )
+
+
 def test_direct_binding_hints_reduce_probes(linker):
     libs = [
         build_bundle(f"lib{i}", {f"s{i}": np.zeros(2, np.float32)})

@@ -5,7 +5,7 @@ the ML form of vignette 3's "DUMA only for libmpm"."""
 import numpy as np
 
 from repro.ckpt import make_kernel_lib
-from repro.core import RelocType, SymbolRef, interpose
+from repro.core import WEAK_KERNEL_NOOP, RelocType, SymbolRef, interpose
 from repro.core.executor import LoadStats
 
 from conftest import build_app, build_bundle
@@ -57,6 +57,101 @@ def test_kernel_symbols_bind_and_interpose(linker):
     assert img2.kernels["kernel:rmsnorm"] == "kernels:debug:7"
     assert img2.kernels["kernel:flash_attention"] == "kernels:prod:0"
     assert np.array_equal(img2["w"], np.ones(8, np.float32))
+
+
+def test_weak_kernel_ref_binds_noop_on_stable_path(linker):
+    """Regression: a weak kernel ref that resolves nowhere becomes
+    RelocType.INIT with st_size=0 — the numeric initializer cannot produce
+    a 'kernel' array, so the loader must bind an explicit no-op entry in
+    LoadedImage.kernels instead of crashing in np_dtype("kernel")."""
+    _, mgr, ex = linker
+    klib, _ = make_kernel_lib("kernels:prod", "v1", {"rmsnorm": 1})
+    w, pw = build_bundle("weights", {"w": np.ones(8, np.float32)})
+    app = build_app(
+        "app",
+        [
+            SymbolRef("w", (8,), "float32"),
+            SymbolRef("kernel:rmsnorm", (), "kernel"),
+            # optional fused op: no provider anywhere in the world
+            SymbolRef("kernel:fused_swiglu", (), "kernel", weak=True),
+        ],
+        ["weights", "kernels:prod"],
+    )
+    mgr.update_obj(klib)
+    mgr.update_obj(w, pw)
+    mgr.update_obj(app)
+    mgr.end_mgmt()
+
+    for strategy in ("stable", "dynamic"):
+        img = ex.load("app", strategy=strategy)
+        assert img.kernels["kernel:rmsnorm"] == "kernels:prod:1"
+        assert img.kernels["kernel:fused_swiglu"] == WEAK_KERNEL_NOOP
+        np.testing.assert_array_equal(img["w"], np.ones(8, np.float32))
+        # INIT row with st_size=0 is what the table records for it
+        init_rows = [
+            r for r in img.table.rows
+            if img.table.name_at(r["symbol_name"]) == "kernel:fused_swiglu"
+        ]
+        assert len(init_rows) == 1
+        assert int(init_rows[0]["type"]) == int(RelocType.INIT)
+        assert int(init_rows[0]["st_size"]) == 0
+    # the sentinel still parses like a normal binding string
+    provider, entry = img.kernels["kernel:fused_swiglu"].rsplit(":", 1)
+    assert provider == "noop" and entry == "-1"
+
+
+def test_weak_kernel_ref_lazy_path_does_not_crash(linker):
+    _, mgr, ex = linker
+    klib, _ = make_kernel_lib("kernels:prod", "v1", {"rmsnorm": 1})
+    w, pw = build_bundle("weights", {"w": np.ones(8, np.float32)})
+    app = build_app(
+        "app",
+        [
+            SymbolRef("w", (8,), "float32"),
+            SymbolRef("kernel:rmsnorm", (), "kernel"),
+            SymbolRef("kernel:fused_swiglu", (), "kernel", weak=True),
+        ],
+        ["weights", "kernels:prod"],
+    )
+    mgr.update_obj(klib)
+    mgr.update_obj(w, pw)
+    mgr.update_obj(app)
+    mgr.end_mgmt()
+
+    img = ex.load("app", strategy="lazy")
+    assert img["kernel:fused_swiglu"] == WEAK_KERNEL_NOOP
+    assert img["kernel:rmsnorm"] == "kernels:prod:1"   # bound kernels too
+    assert img["kernel:rmsnorm"] is img["kernel:rmsnorm"]  # cached
+    np.testing.assert_array_equal(img["w"], np.ones(8, np.float32))
+    assert img.stats.relocations == 3
+
+
+def test_weak_tensor_ref_from_dependency_stays_loud(linker):
+    """An INIT row with no arena slot is only a weak-kernel no-op when its
+    st_size is 0; a dependency bundle's unresolved weak *tensor* ref (no
+    slot, nonzero size) must still fail loudly, not masquerade as a
+    kernel binding."""
+    import pytest
+
+    from repro.core import ObjectKind, SymbolDef, make_object
+    from repro.core.objects import PAGE_BYTES, align_up
+
+    _, mgr, ex = linker
+    arr = np.ones(8, np.float32)
+    payload = arr.tobytes()
+    payload += b"\x00" * (align_up(len(payload), PAGE_BYTES) - len(payload))
+    lib, lib_pl = make_object(
+        name="lib", version="1", kind=ObjectKind.BUNDLE,
+        symbols=[SymbolDef("w", (8,), "float32", 0, arr.nbytes)],
+        refs=[SymbolRef("ghost", (4,), "float32", weak=True)],
+        payload=payload,
+    )
+    app = build_app("app", [SymbolRef("w", (8,), "float32")], ["lib"])
+    mgr.update_obj(lib, lib_pl)
+    mgr.update_obj(app)
+    mgr.end_mgmt()
+    with pytest.raises(KeyError):
+        ex.load("app", strategy="stable")
 
 
 def test_kernel_registry_dispatch(linker):

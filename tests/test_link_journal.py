@@ -1,0 +1,498 @@
+"""Management-time journal: staged-op persistence, operator-visible diffs,
+relocation-delta previews, and the crash-recovery matrix."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Mode,
+    ModeError,
+    ObjectKind,
+    StateSchemaError,
+    SymbolRef,
+    make_object,
+)
+from repro.core.registry import STATE_SCHEMA, Registry
+from repro.link import Workspace
+
+from conftest import build_app, build_bundle
+
+
+class OperatorAbort(Exception):
+    """Raised by test bodies to roll a transaction back on purpose."""
+
+
+def _publish_base(ws):
+    tensors = {
+        "s/a": np.full(8, 1.0, np.float32),
+        "s/b": np.arange(6, dtype=np.float32).reshape(2, 3),
+    }
+    bundle = build_bundle("w", tensors, version="1")
+    app = build_app(
+        "app",
+        [
+            SymbolRef("s/a", (8,), "float32"),
+            SymbolRef("s/b", (2, 3), "float32"),
+        ],
+        ["w"],
+    )
+    with ws.management() as tx:
+        tx.publish(*bundle)
+        tx.publish(app)
+    return tensors
+
+
+# --------------------------------------------------------------- journaling
+def test_journal_records_every_staged_op(workspace):
+    ws = workspace
+    _publish_base(ws)
+    with ws.management() as tx:
+        b2 = build_bundle("w2", {"s/c": np.zeros(4, np.float32)})
+        tx.publish(*b2)
+        tx.remove("w2")
+        entries = tx.journal_entries()
+        assert [e.op for e in entries] == ["publish", "remove"]
+        assert entries[0].name == "w2"
+        assert entries[0].content_hash == b2[0].content_hash
+        assert entries[0].payload_size == b2[0].payload_size
+        assert entries[0].seq == 1 and entries[1].seq == 2
+        assert entries[1].content_hash == b2[0].content_hash
+        assert all(e.ts > 0 for e in entries)
+    # session boundary (commit) truncates the journal
+    assert ws.journal.entries() == []
+
+
+def test_journal_file_lives_beside_state(workspace):
+    ws = workspace
+    with ws.management() as tx:
+        tx.publish(*build_bundle("w", {"s/a": np.ones(4, np.float32)}))
+        assert ws.registry.journal_path.exists()
+        raw = ws.registry.journal_path.read_text().strip().splitlines()
+        assert len(raw) == 1
+        rec = json.loads(raw[0])
+        assert rec["op"] == "publish" and rec["name"] == "w"
+
+
+def test_journal_cleared_on_abort(workspace):
+    ws = workspace
+    _publish_base(ws)
+    with pytest.raises(RuntimeError):
+        with ws.management() as tx:
+            tx.publish(*build_bundle("w2", {"s/c": np.zeros(4, np.float32)}))
+            raise RuntimeError()
+    assert ws.journal.entries() == []
+
+
+# --------------------------------------------------------------------- diff
+def test_tx_diff_reports_added_removed_upgraded(workspace):
+    ws = workspace
+    _publish_base(ws)
+    with pytest.raises(OperatorAbort):
+        with ws.management() as tx:
+            assert tx.diff().is_empty
+            w_v2 = build_bundle(
+                "w",
+                {"s/a": np.full(8, 2.0, np.float32),
+                 "s/b": np.zeros((2, 3), np.float32)},
+                version="2",
+            )
+            new = build_bundle("extra", {"s/x": np.ones(2, np.float32)})
+            tx.publish(*w_v2)
+            tx.publish(*new)
+            tx.remove("app")
+            d = tx.diff()
+            assert set(d.added) == {"extra"}
+            assert set(d.removed) == {"app"}
+            assert set(d.upgraded) == {"w"}
+            old_hash, new_hash = d.upgraded["w"]
+            assert new_hash == w_v2[0].content_hash and old_hash != new_hash
+            assert d.staged_world_hash != d.committed_world_hash
+            js = json.loads(d.to_json())
+            assert js["added"] == {"extra": new[0].content_hash}
+            raise OperatorAbort("do not commit this mess")
+    assert ws.mode == Mode.EPOCH
+    assert "app" in ws.world() and "extra" not in ws.world()
+
+
+# ------------------------------------------------------------------ preview
+def test_preview_reports_relocation_delta_on_upgrade(workspace):
+    """A staged library upgrade reports the exact per-app delta *before*
+    commit: changed providers, new unresolved refs, tables-to-rebuild."""
+    from repro.core import SymbolRef
+
+    ws = workspace
+    _publish_base(ws)
+    epoch = ws.epoch
+    with pytest.raises(OperatorAbort):
+        with ws.management() as tx:
+            # v2 drops s/b (app's strong ref goes unresolved), keeps s/a
+            w_v2 = build_bundle(
+                "w", {"s/a": np.full(8, 2.0, np.float32)}, version="2"
+            )
+            tx.publish(*w_v2)
+            p = tx.preview()
+            assert set(p.diff.upgraded) == {"w"}
+            d = p.delta_for("app")
+            assert d is not None and not d.new_app
+            changed_syms = {c["symbol"] for c in d.changed}
+            assert "s/a" in changed_syms      # provider hash changed (v1->v2)
+            sa = next(c for c in d.changed if c["symbol"] == "s/a")
+            assert sa["old_provider"] == "w@1" and sa["new_provider"] == "w@2"
+            assert [u["symbol"] for u in d.unresolved] == ["s/b"]
+            assert d.table_rebuilt
+            assert p.tables_to_rebuild == ["app"]
+            assert not p.is_clean
+            # JSON / CSV views
+            js = json.loads(p.to_json())
+            kinds = {r["kind"] for r in js["records"]}
+            assert kinds == {"changed", "unresolved"}
+            csv_text = p.to_csv()
+            assert "s/b" in csv_text and "unresolved" in csv_text
+            raise OperatorAbort("operator aborts the bad roll")
+    # rollback happened; the preview never wrote anything
+    assert ws.epoch == epoch
+    np.testing.assert_array_equal(
+        ws.load("app")["s/a"], np.full(8, 1.0, np.float32)
+    )
+
+
+def test_preview_clean_upgrade_and_sqlite_view(workspace):
+    from repro.core import inspector
+
+    ws = workspace
+    _publish_base(ws)
+    with ws.management() as tx:
+        w_v2 = build_bundle(
+            "w",
+            {"s/a": np.full(8, 3.0, np.float32),
+             "s/b": np.ones((2, 3), np.float32)},
+            version="2",
+        )
+        tx.publish(*w_v2)
+        p = tx.preview()
+        d = p.delta_for("app")
+        assert d.unresolved == []
+        assert {c["symbol"] for c in d.changed} == {"s/a", "s/b"}
+        assert d.relocations == 2
+        conn = inspector.preview_to_sqlite(p)
+        n = conn.execute(
+            "SELECT COUNT(*) FROM pending_changes WHERE kind='changed'"
+        ).fetchone()[0]
+        assert n == 2
+    # commit happened; the preview matched what materialization now did
+    img = ws.load("app")
+    np.testing.assert_array_equal(img["s/a"], np.full(8, 3.0, np.float32))
+
+
+def test_preview_new_app_and_addend_change(workspace):
+    from repro.core import SymbolRef
+
+    ws = workspace
+    stacked = np.arange(32, dtype=np.float32).reshape(4, 8)
+    with ws.management() as tx:
+        tx.publish(*build_bundle("lib", {"x": stacked}))
+        tx.publish(
+            build_app("app", [SymbolRef("x[1]", (8,), "float32")], ["lib"])
+        )
+    with pytest.raises(OperatorAbort):
+        with ws.management() as tx:
+            # re-stack: x grows a row in front, so x[1] keeps shape but the
+            # provider content (hence hash) changes
+            restacked = np.concatenate(
+                [np.zeros((1, 8), np.float32), stacked]
+            )
+            tx.publish(*build_bundle("lib", {"x": restacked}, version="2"))
+            app2 = build_app(
+                "app2", [SymbolRef("x[2]", (8,), "float32")], ["lib"]
+            )
+            tx.publish(app2)
+            p = tx.preview()
+            d2 = p.delta_for("app2")
+            assert d2.new_app and d2.table_rebuilt
+            d1 = p.delta_for("app")
+            assert {c["symbol"] for c in d1.changed} == {"x[1]"}
+            raise OperatorAbort("preview only")
+
+
+def test_preview_upgraded_app_is_not_treated_as_new(workspace):
+    """Staging a new version of an application itself must preview against
+    the committed version's mapping — an app roll is exactly what the
+    preview exists to expose, not a 'new app' with an empty delta."""
+    ws = workspace
+    _publish_base(ws)
+    with pytest.raises(OperatorAbort):
+        with ws.management() as tx:
+            # app v2 drops its s/b ref
+            app_v2, _ = make_object(
+                name="app", version="2", kind=ObjectKind.APPLICATION,
+                refs=[SymbolRef("s/a", (8,), "float32")],
+                needed=("w",),
+            )
+            tx.publish(app_v2)
+            d = tx.preview().delta_for("app")
+            assert not d.new_app            # upgraded, not new
+            assert d.changed == []          # s/a still binds w@1 unchanged
+            vanished = [u for u in d.unresolved if u["symbol"] == "s/b"]
+            assert len(vanished) == 1
+            assert vanished[0]["detail"] == "binding vanished from staged world"
+            raise OperatorAbort("preview only")
+
+
+def test_journal_append_after_torn_tail_repairs_file(tmp_path):
+    """A torn trailing line must be dropped on reopen BEFORE the next
+    append — otherwise fragment+entry merge into one unparseable line and
+    every later op silently disappears from replay."""
+    from repro.link import Journal
+
+    p = tmp_path / "journal.jsonl"
+    j = Journal(p)
+    j.record("publish", name="a", content_hash="h1")
+    j.record("publish", name="b", content_hash="h2")
+    with p.open("a") as f:
+        f.write('{"seq": 3, "op": "pub')  # torn mid-write, no newline
+    j2 = Journal(p)  # reopen repairs the tail
+    assert [e.name for e in j2.entries()] == ["a", "b"]
+    assert j2.last_seq == 2
+    j2.record("publish", name="c", content_hash="h3")
+    entries = Journal(p).entries()  # fully parseable from a fresh reader
+    assert [e.name for e in entries] == ["a", "b", "c"]
+    assert entries[-1].seq == 3
+
+
+def test_explain_pending_previews_staged_world(workspace):
+    ws = workspace
+    _publish_base(ws)
+    with pytest.raises(ModeError):
+        ws.explain("app", pending=True)  # no staged world during an epoch
+    with pytest.raises(OperatorAbort):
+        with ws.management() as tx:
+            tx.publish(
+                *build_bundle("w", {"s/a": np.full(8, 5.0, np.float32)},
+                              version="2")
+            )
+            rep = ws.explain("app", pending=True)
+            assert rep.pending and rep.source == "staged-preview"
+            assert rep.delta is not None
+            assert [u["symbol"] for u in rep.delta.unresolved] == ["s/b"]
+            assert rep.summary()["pending_delta"]["unresolved"] == 1
+            # tolerant: the broken staged world still explains (s/a bound)
+            assert rep.relocations == 1
+            raise OperatorAbort("abort the roll")
+    rep = ws.explain("app")
+    assert not rep.pending and rep.source == "materialized-table"
+
+
+# ------------------------------------------------------- crash recovery
+def _crash_mid_management(tmp_path, n_ops=3):
+    """Simulate a session that staged n ops and died before commit."""
+    ws = Workspace.open(tmp_path / "store")
+    _publish_base(ws)
+    ws.manager.begin_mgmt()
+    staged_hashes = {}
+    for i in range(n_ops - 1):
+        b, p = build_bundle(f"lib{i}", {"t": np.full(4, float(i), np.float32)})
+        ws.manager.update_obj(b, p)
+        staged_hashes[f"lib{i}"] = b.content_hash
+    ws.manager.remove_obj("app")
+    del ws  # process "dies": no commit, no abort
+    return staged_hashes
+
+
+def test_resume_replays_journal_and_diff_matches(tmp_path):
+    staged = _crash_mid_management(tmp_path, n_ops=3)
+    ws2 = Workspace.open(tmp_path / "store")  # new process, same store
+    assert ws2.mode == Mode.MANAGEMENT       # crashed state is visible
+    with pytest.raises(OperatorAbort):
+        with ws2.management(resume=True) as tx:
+            assert tx.resumed
+            entries = tx.journal_entries()
+            assert [e.op for e in entries] == ["publish", "publish", "remove"]
+            d = tx.diff()
+            assert d.added == staged
+            assert set(d.removed) == {"app"}
+            assert d.upgraded == {}
+            raise OperatorAbort("inspected the corpse; resets instead")
+    # rollback returned to the committed epoch
+    assert ws2.mode == Mode.EPOCH
+    assert "app" in ws2.world()
+
+
+def test_resume_then_commit_finishes_the_crashed_roll(tmp_path):
+    staged = _crash_mid_management(tmp_path, n_ops=2)
+    ws2 = Workspace.open(tmp_path / "store")
+    with ws2.management(resume=True) as tx:
+        assert set(tx.diff().added) == set(staged)
+    assert ws2.mode == Mode.EPOCH and ws2.epoch == 2
+    assert "lib0" in ws2.world() and "app" not in ws2.world()
+
+
+def test_no_resume_resets_staged_and_truncates_journal(tmp_path):
+    _crash_mid_management(tmp_path, n_ops=3)
+    ws2 = Workspace.open(tmp_path / "store")
+    assert len(ws2.journal.entries()) == 3
+    with ws2.management() as tx:  # resume=False: start clean
+        assert not tx.resumed
+        assert tx.diff().is_empty
+        assert tx.journal_entries() == []
+    assert ws2.journal.entries() == []
+    assert "app" in ws2.world()  # the crashed removal did not land
+
+
+def test_resume_heals_pending_snapshot_from_journal(tmp_path):
+    """The journal is authoritative on resume: a pending snapshot that lost
+    an op (state write raced the crash) is rebuilt by replay."""
+    _crash_mid_management(tmp_path, n_ops=3)
+    reg = Registry(tmp_path / "store")
+    state = json.loads(reg.state_path.read_text())
+    state["pending"] = dict(state["world"])  # pending lost all staged ops
+    reg.state_path.write_text(json.dumps(state))
+    ws2 = Workspace.open(tmp_path / "store")
+    with pytest.raises(OperatorAbort):
+        with ws2.management(resume=True) as tx:
+            d = tx.diff()
+            assert set(d.added) == {"lib0", "lib1"}
+            assert set(d.removed) == {"app"}
+            raise OperatorAbort("inspect only")
+
+
+def test_preview_is_clean_not_masked_by_new_app(workspace):
+    """A newly staged app with unresolved strong refs must make the preview
+    dirty — commit-time materialization would fail on it."""
+    ws = workspace
+    _publish_base(ws)
+    with pytest.raises(OperatorAbort):
+        with ws.management() as tx:
+            tx.publish(
+                build_app(
+                    "newapp",
+                    [SymbolRef("missing/sym", (4,), "float32")],
+                    ["w"],
+                )
+            )
+            p = tx.preview()
+            d = p.delta_for("newapp")
+            assert d.new_app
+            assert [u["symbol"] for u in d.unresolved] == ["missing/sym"]
+            assert not p.is_clean
+            raise OperatorAbort("preview said no")
+
+
+def test_torn_trailing_journal_line_does_not_brick_the_store(tmp_path):
+    """A crash can tear the final journal line mid-append; the store must
+    still open and resume from the intact prefix."""
+    _crash_mid_management(tmp_path, n_ops=3)
+    reg = Registry(tmp_path / "store")
+    with reg.journal_path.open("a") as f:
+        f.write('{"seq": 4, "op": "pub')  # torn mid-write
+    ws2 = Workspace.open(tmp_path / "store")  # must not raise
+    assert len(ws2.journal.entries()) == 3    # intact prefix only
+    with pytest.raises(OperatorAbort):
+        with ws2.management(resume=True) as tx:
+            assert set(tx.diff().added) == {"lib0", "lib1"}
+            raise OperatorAbort("inspect only")
+
+
+def test_stale_journal_behind_state_is_not_replayed(tmp_path):
+    """A journal that lost entries relative to state.json (swapped or
+    truncated out-of-band) must not be replayed over the newer pending
+    snapshot — the snapshot wins, and the journal is resynced to it."""
+    _crash_mid_management(tmp_path, n_ops=3)
+    reg = Registry(tmp_path / "store")
+    # drop the journal's last two entries; state.json still says seq 3
+    lines = reg.journal_path.read_text().strip().splitlines()
+    reg.journal_path.write_text(lines[0] + "\n")
+    assert json.loads(reg.state_path.read_text())["journal_seq"] == 3
+    ws2 = Workspace.open(tmp_path / "store")
+    with pytest.raises(OperatorAbort):
+        with ws2.management(resume=True) as tx:
+            assert tx.resumed  # snapshot adopted (journal not replayed)
+            d = tx.diff()
+            # full staged state from the pending snapshot, not the 1-entry
+            # journal prefix
+            assert set(d.added) == {"lib0", "lib1"}
+            assert set(d.removed) == {"app"}
+            # the journal was resynced to describe the adopted staging
+            ops = {(e.op, e.name) for e in tx.journal_entries()}
+            assert ops == {
+                ("publish", "lib0"), ("publish", "lib1"), ("remove", "app"),
+            }
+            raise OperatorAbort("inspect only")
+
+
+def test_resync_survives_crash_after_adoption(tmp_path):
+    """Regression: staging adopted from the pending snapshot (journal did
+    not describe it) must survive a later op + crash + second resume —
+    without resync, the second replay would silently drop the adopted ops."""
+    _crash_mid_management(tmp_path, n_ops=3)   # staged: +lib0 +lib1 -app
+    reg = Registry(tmp_path / "store")
+    reg.journal_path.unlink()                  # journal lost entirely
+    ws2 = Workspace.open(tmp_path / "store")
+    # adopt the snapshot via resume, stage one more op, then "die": the
+    # context is held open (never exited) while a second process reads the
+    # store — exactly what a crashed session leaves on disk
+    ctx = ws2.management(resume=True)
+    tx = ctx.__enter__()
+    assert tx.resumed
+    b, p = build_bundle("lib9", {"t": np.full(2, 9.0, np.float32)})
+    tx.publish(b, p)
+
+    ws3 = Workspace.open(tmp_path / "store")
+    with pytest.raises(OperatorAbort):
+        with ws3.management(resume=True) as tx:
+            d = tx.diff()
+            # adopted ops AND the post-adoption op all survive the replay
+            assert set(d.added) == {"lib0", "lib1", "lib9"}
+            assert set(d.removed) == {"app"}
+            raise OperatorAbort("inspect only")
+
+
+def test_abort_mgmt_at_epoch_zero_keeps_manager_usable(workspace):
+    ws = workspace
+    with pytest.raises(RuntimeError):
+        with ws.management() as tx:
+            tx.publish(*build_bundle("w", {"s/a": np.ones(4, np.float32)}))
+            raise RuntimeError()
+    assert ws.epoch == 0 and ws.mode == Mode.MANAGEMENT
+    assert ws.journal.entries() == []
+    # the manager is not wedged: a fresh session can stage and commit
+    from repro.core import SymbolRef
+
+    with ws.management() as tx:
+        tx.publish(*build_bundle("w", {"s/a": np.ones(4, np.float32)}))
+        tx.publish(build_app("app", [SymbolRef("s/a", (4,), "float32")], ["w"]))
+    assert ws.epoch == 1 and ws.mode == Mode.EPOCH
+    np.testing.assert_array_equal(
+        ws.load("app")["s/a"], np.ones(4, np.float32)
+    )
+
+
+# ------------------------------------------------------- state schema
+def test_state_schema_v1_migrates_in_place(tmp_path):
+    ws = Workspace.open(tmp_path / "store")
+    _publish_base(ws)
+    state = json.loads(ws.registry.state_path.read_text())
+    assert state["schema"] == STATE_SCHEMA
+    # strip the v2 fields: a store written by a pre-journal build
+    for k in ("schema", "journal_seq"):
+        state.pop(k)
+    ws.registry.state_path.write_text(json.dumps(state))
+    ws2 = Workspace.open(tmp_path / "store")
+    assert ws2.epoch == 1 and ws2.mode == Mode.EPOCH
+    assert "app" in ws2.world()
+    with ws2.management() as tx:
+        tx.publish(*build_bundle("w2", {"s/c": np.zeros(2, np.float32)}))
+    assert json.loads(ws2.registry.state_path.read_text())["schema"] == STATE_SCHEMA
+
+
+def test_state_schema_from_the_future_refuses(tmp_path):
+    ws = Workspace.open(tmp_path / "store")
+    _publish_base(ws)
+    state = json.loads(ws.registry.state_path.read_text())
+    state["schema"] = STATE_SCHEMA + 1
+    ws.registry.state_path.write_text(json.dumps(state))
+    with pytest.raises(StateSchemaError):
+        Workspace.open(tmp_path / "store")

@@ -20,6 +20,7 @@ from repro.link import (
     Workspace,
     available_strategies,
     register_strategy,
+    strategy_overrides,
     unregister_strategy,
 )
 
@@ -198,6 +199,39 @@ def test_registered_strategy_is_drop_in(workspace):
     finally:
         unregister_strategy("counting-stable")
     assert "counting-stable" not in available_strategies()
+
+
+def test_strategy_overrides_shadow_builtin_without_leaking(workspace):
+    """Shadowing `stable` used to leak for the rest of the process; the
+    context manager restores the exact previous registry, even when the
+    body raises."""
+    ws = workspace
+    tensors = _publish_demo(ws)
+    calls = []
+
+    def counting_stable(executor, app, world):
+        calls.append(app.name)
+        return executor._load_stable(app, world)
+
+    builtin = __import__(
+        "repro.link.strategies", fromlist=["_stable"]
+    )._stable
+    with strategy_overrides(stable=counting_stable, lazy=None):
+        img = ws.load("app", strategy="stable")
+        assert calls == ["app"]
+        assert "lazy" not in available_strategies()
+        np.testing.assert_array_equal(img["s/a"], tensors["s/a"])
+    from repro.link import get_strategy
+
+    assert get_strategy("stable") is builtin       # built-in restored
+    assert "lazy" in available_strategies()
+    ws.load("app", strategy="stable")
+    assert calls == ["app"]                        # shadow is gone
+
+    with pytest.raises(RuntimeError):
+        with strategy_overrides(stable=counting_stable):
+            raise RuntimeError("body blew up")
+    assert get_strategy("stable") is builtin       # restored on exception
 
 
 def test_builtin_strategies_agree(workspace):
