@@ -1,10 +1,20 @@
-"""Shared benchmark plumbing: timed workspace worlds + CSV emit."""
+"""Shared benchmark plumbing: timed workspace worlds + CSV emit.
+
+Every ``emit`` row is also recorded in ``RESULTS`` so ``run.py`` can dump a
+machine-readable ``BENCH_<pr>.json`` ({name: us_per_call}) next to the CSV —
+the repo's perf trajectory, one file per PR, diffable in CI.
+"""
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 from repro.link import Workspace
+
+# name -> us_per_call for every emit() of this process (in emission order)
+RESULTS: dict[str, float] = {}
 
 
 def fresh_workspace(root: str | None = None) -> Workspace:
@@ -41,5 +51,13 @@ def timeit(fn, *, warmup: int = 1, trials: int = 3):
 
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
-    """CSV row: name,us_per_call,derived"""
+    """CSV row: name,us_per_call,derived (also recorded in RESULTS)."""
+    RESULTS[name] = seconds * 1e6
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def write_bench_json(path: str | Path) -> Path:
+    """Dump everything emitted so far as {name: us_per_call}."""
+    path = Path(path)
+    path.write_text(json.dumps(RESULTS, indent=1, sort_keys=True) + "\n")
+    return path

@@ -14,6 +14,10 @@ Engine-room surface:
     Manager, Mode                — begin_mgmt / update_obj / end_mgmt / abort_mgmt
     Executor, LoadedImage        — materialize + strategy-registry loading
     DynamicResolver              — the traditional-dynamic-linking baseline
+    IndexedResolver, SymbolIndex — GNU-hash-analogue indexed resolution
+    closure_hash                 — per-app dependency-closure identity (the
+                                   key that makes re-materialization
+                                   incremental)
     RelocationTable, PageTable   — materialized tables (+ TPU page compilation)
     inspector, interpose         — observability + fine-grained rebinding
     CompileCache                 — AOT executable materialization
@@ -32,7 +36,14 @@ from .errors import (
     UnknownStrategyError,
     UnresolvedSymbolError,
 )
-from .executor import WEAK_KERNEL_NOOP, Executor, LazyImage, LoadedImage, LoadStats
+from .executor import (
+    WEAK_KERNEL_NOOP,
+    Executor,
+    LazyImage,
+    LoadedImage,
+    LoadStats,
+    MaterializationResult,
+)
 from .manager import Manager, Mode
 from .objects import (
     PAGE_BYTES,
@@ -53,6 +64,7 @@ from .relocation import (
     compile_page_table,
 )
 from .resolver import DynamicResolver, Relocation, dependency_closure, np_dtype
+from .symbol_index import IndexedResolver, SymbolIndex, closure_hash
 
 __all__ = [
     "CompileCache",
@@ -91,7 +103,11 @@ __all__ = [
     "build_table",
     "compile_page_table",
     "DynamicResolver",
+    "IndexedResolver",
+    "MaterializationResult",
     "Relocation",
+    "SymbolIndex",
+    "closure_hash",
     "dependency_closure",
     "np_dtype",
     "open_workspace",

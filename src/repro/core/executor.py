@@ -2,21 +2,37 @@
 
 Three modes of operation, exactly as the paper's Figure 5:
 
-* ``materialize``  — invoked by the Manager at ``end_mgmt``: runs the
-  traditional dynamic-linking resolution once per application, observes the
-  resulting relocation mapping, and stores it as a flat table keyed by
-  (app hash, world hash).
+* ``materialize``  — invoked by the Manager at ``end_mgmt``: resolves each
+  application once (via the indexed resolver — O(1) per ref instead of the
+  ld.so linear probe) and stores the observed relocation mapping as a flat
+  table keyed by (app hash, closure hash).  Keying by *closure* hash — the
+  digest of the app's dependency-closure content hashes — makes the step
+  incremental: a publish only invalidates apps whose closure actually
+  changed; everything else keeps its table (``tables_reused``).  The
+  remaining apps fan out over a thread pool (``materialize_workers``).
 * epoch load       — loads the stored table, verifies freshness, and applies
   relocations with grouped *sequential* reads per provider (the paper's
   prefetch-friendly access pattern), entirely skipping symbol search.
-* management load  — falls back to the dynamic path so behaviour stays
-  correct while the world is in flux.
+* management load  — falls back to per-load resolution so behaviour stays
+  correct while the world is in flux (``auto`` now dispatches to the
+  ``indexed`` strategy there; ``dynamic`` remains the untouched baseline).
+
+**Baked arenas** push the paper's thesis to its floor: with
+``bake_arenas=True`` (default) materialization also *pre-applies* the
+relocation table into a page-aligned ``.arena`` image beside it, so the
+``stable-mmap`` strategy's epoch load is a single copy-on-write
+``np.memmap`` plus view construction — zero resolve, zero table parse, zero
+payload copy.  The sidecar carries ``check_fresh``-style staleness guards
+(app hash + closure hash), so a baked arena can never be applied under the
+wrong world.
 
 Loading strategies exposed for the benchmarks:
-  ``stable``   — table-driven (the paper's contribution).
-  ``dynamic``  — traditional dynamic linking (baseline).
-  ``lazy``     — dynamic linking with per-symbol first-use faulting (the
-                 lazy-binding/PLT analogue, §6.2).
+  ``stable``      — table-driven (the paper's contribution).
+  ``stable-mmap`` — baked arena, one CoW mmap (beyond-paper fast path).
+  ``dynamic``     — traditional dynamic linking (baseline).
+  ``indexed``     — dynamic-shaped load over the symbol index (management).
+  ``lazy``        — dynamic linking with per-symbol first-use faulting (the
+                    lazy-binding/PLT analogue, §6.2).
 
 The loaded image is numpy-only; sharded ``device_put`` belongs to the train/
 serve layers (core stays substrate-independent).
@@ -24,6 +40,7 @@ serve layers (core stays substrate-independent).
 
 from __future__ import annotations
 
+import json
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -33,10 +50,11 @@ import numpy as np
 
 from .errors import StaleTableError, UnknownObjectError
 from .manager import Manager
-from .objects import ObjectKind, RelocType, StoreObject
+from .objects import PAGE_BYTES, ObjectKind, RelocType, StoreObject, align_up
 from .registry import Registry, World
 from .relocation import RelocationTable, build_table
 from .resolver import DynamicResolver, Relocation, np_dtype
+from .symbol_index import IndexedResolver, closure_hash
 
 Initializer = Callable[[str, tuple[int, ...], str], np.ndarray]
 
@@ -56,16 +74,53 @@ def _zeros_init(name: str, shape: tuple[int, ...], dtype: str) -> np.ndarray:
 @dataclass
 class LoadStats:
     strategy: str = ""
-    resolve_s: float = 0.0      # symbol search (dynamic) / 0 (stable)
-    table_load_s: float = 0.0   # table deserialize (stable) / 0 (dynamic)
+    resolve_s: float = 0.0      # symbol search (dynamic/indexed) / 0 (stable)
+    table_load_s: float = 0.0   # table/sidecar deserialize / 0 (dynamic)
     io_s: float = 0.0           # payload reads into the arena
+    index_build_s: float = 0.0  # symbol-index construction (indexed loads)
     relocations: int = 0
     probes: int = 0             # hash probes performed (search work)
-    bytes_loaded: int = 0
+    bytes_loaded: int = 0       # bytes copied (0 for mmap-backed loads)
 
     @property
     def startup_s(self) -> float:
         return self.resolve_s + self.table_load_s + self.io_s
+
+
+@dataclass
+class MaterializationResult:
+    """What one ``end_mgmt`` materialization pass actually did.
+
+    ``materialized`` lists apps whose closure changed (tables re-built);
+    ``reused`` lists apps whose (app hash, closure hash) key survived the
+    world change — their tables and baked arenas were left untouched.
+    Exposed as ``Manager.last_materialization`` / ``tx.materialization`` and
+    threaded into ``LinkReport.summary()``.
+    """
+
+    epoch: int = 0
+    materialized: list[str] = field(default_factory=list)
+    reused: list[str] = field(default_factory=list)
+    index_build_s: float = 0.0   # symbol-index builds (cache misses only)
+    bake_s: float = 0.0          # arena pre-application time
+    wall_s: float = 0.0
+    workers: int = 1
+
+    @property
+    def tables_reused(self) -> int:
+        return len(self.reused)
+
+    def summary(self) -> dict:
+        return {
+            "epoch": self.epoch,
+            "materialized": sorted(self.materialized),
+            "reused": sorted(self.reused),
+            "tables_reused": self.tables_reused,
+            "index_build_s": self.index_build_s,
+            "bake_s": self.bake_s,
+            "wall_s": self.wall_s,
+            "workers": self.workers,
+        }
 
 
 @dataclass
@@ -150,6 +205,8 @@ class Executor:
         io_threads: int = 0,
         loader: str = "paged",
         table_format: str = "raw",
+        bake_arenas: bool = True,
+        materialize_workers: int = 1,
     ):
         assert loader in ("paged", "rows")
         assert table_format in ("raw", "npz")
@@ -165,34 +222,131 @@ class Executor:
         #           execution of the paged_reloc_copy kernel's plan);
         #           CAST/INIT/unaligned rows fall back to the row loader.
         self.loader = loader
+        # Pre-apply tables into .arena images at materialization so the
+        # stable-mmap strategy can epoch-load with a single CoW mmap.
+        self.bake_arenas = bake_arenas
+        # Fan re-materializations out over a thread pool (>1). Tables are
+        # deterministic per app, so parallel == serial byte-for-byte.
+        self.materialize_workers = max(1, int(materialize_workers))
+        # scope-key -> SymbolIndex, shared across materializations so apps
+        # with the same dependency closure resolve against one index.
+        self._index_cache: dict = {}
+        # (app hash, world hash) -> closure hash; content-addressed, never
+        # stale (a changed binding changes the world hash).
+        self._closure_key_cache: dict[tuple[str, str], str] = {}
+        self.last_materialization: Optional[MaterializationResult] = None
+        # (path, mtime_ns, size) -> parsed arena sidecar (+ prebuilt slot
+        # list): warm fleet starts skip the JSON parse; any rewrite of the
+        # file changes the stat key and invalidates the entry.
+        self._sidecar_cache: dict = {}
         # Wire the Manager's end_mgmt hook (Figure 5's dashed control edge).
         manager.on_materialize = self.materialize_all
 
     # ---------------------------------------------------------- materialize
-    def materialize(self, app: StoreObject, world: World, epoch: int) -> RelocationTable:
-        resolver = DynamicResolver(world)
-        relocations = resolver.resolve(app)
-        table = build_table(
-            app, relocations, world_hash=world.world_hash, epoch=epoch
-        )
-        table.save(
-            self.registry.table_path(app.content_hash, world.world_hash),
-            format=self.table_format,
-        )
+    def closure_key(self, app: StoreObject, world: World) -> str:
+        """The app's closure hash under ``world`` (memoized per world)."""
+        ck = (app.content_hash, world.world_hash)
+        key = self._closure_key_cache.get(ck)
+        if key is None:
+            key = closure_hash(app, world)
+            self._closure_key_cache[ck] = key
+        return key
+
+    def materialize(
+        self,
+        app: StoreObject,
+        world: World,
+        epoch: int,
+        *,
+        key: Optional[str] = None,
+    ) -> RelocationTable:
+        """Resolve one app (indexed — O(1) per ref) and persist its table
+        (plus, with ``bake_arenas``, the pre-applied arena image)."""
+        key = key or self.closure_key(app, world)
+        table, _, _ = self._materialize_one(app, world, epoch, key)
         return table
 
-    def materialize_all(self, world: World, epoch: int) -> list[str]:
-        """end_mgmt hook: (re-)materialize every application whose table is
-        missing under the new world (objects updated since the last epoch
-        necessarily changed the world hash, so their tables are re-created —
-        unchanged closures keep their key and are reused)."""
-        done = []
+    def _materialize_one(
+        self, app: StoreObject, world: World, epoch: int, key: str
+    ) -> tuple[RelocationTable, float, float]:
+        """One app's materialization: returns (table, index_build_s, bake_s).
+        Thread-safe for distinct apps (shared caches are content-keyed)."""
+        resolver = IndexedResolver(world, index_cache=self._index_cache)
+        relocations = resolver.resolve(app)
+        table = build_table(
+            app,
+            relocations,
+            world_hash=world.world_hash,
+            epoch=epoch,
+            closure_hash=key,
+        )
+        table.save(
+            self.registry.table_path(app.content_hash, key),
+            format=self.table_format,
+        )
+        bake_s = self._bake_arena(app, table, key) if self.bake_arenas else 0.0
+        return table, resolver.index_build_s, bake_s
+
+    def materialize_all(self, world: World, epoch: int) -> MaterializationResult:
+        """end_mgmt hook: (re-)materialize exactly the applications whose
+        dependency closure changed under the new world.
+
+        Tables are keyed by (app hash, closure hash), so a publish that does
+        not touch an app's closure leaves its key — and its table and baked
+        arena — intact (``reused``).  The remaining apps are independent and
+        fan out over ``materialize_workers`` threads; the produced tables
+        are identical to a serial pass (content-addressed inputs, no shared
+        mutable state beyond caches keyed by content).
+        """
+        t0 = time.perf_counter()
+        result = MaterializationResult(epoch=epoch, workers=self.materialize_workers)
+        todo: list[tuple[StoreObject, str]] = []
         for app in world.applications():
-            path = self.registry.table_path(app.content_hash, world.world_hash)
-            if not path.exists():
-                self.materialize(app, world, epoch)
-                done.append(app.name)
-        return done
+            key = self.closure_key(app, world)
+            have_table = self.registry.table_path(app.content_hash, key).exists()
+            # a bake is only reusable when BOTH halves survived (a crash
+            # between the arena and sidecar renames leaves it half-baked)
+            have_arena = not self.bake_arenas or (
+                self.registry.arena_path(app.content_hash, key).exists()
+                and self.registry.arena_meta_path(app.content_hash, key).exists()
+            )
+            if have_table and have_arena:
+                result.reused.append(app.name)
+            else:
+                todo.append((app, key))
+
+        def _one(app: StoreObject, key: str) -> tuple[str, float, float]:
+            _, index_s, bake_s = self._materialize_one(app, world, epoch, key)
+            return app.name, index_s, bake_s
+
+        if self.materialize_workers > 1 and len(todo) > 1:
+            with ThreadPoolExecutor(max_workers=self.materialize_workers) as pool:
+                outs = list(pool.map(lambda ak: _one(*ak), todo))
+        else:
+            outs = [_one(app, key) for app, key in todo]
+        for name, index_s, bake_s in outs:
+            result.materialized.append(name)
+            result.index_build_s += index_s
+            result.bake_s += bake_s
+        self._prune_caches(world)
+        result.wall_s = time.perf_counter() - t0
+        self.last_materialization = result
+        return result
+
+    def _prune_caches(self, world: World) -> None:
+        """Keep the in-memory caches from growing with publish history.
+
+        Closure keys for superseded worlds can never be asked for again;
+        the index and sidecar caches are simply bounded (entries rebuild
+        cheaply on the next miss)."""
+        wh = world.world_hash
+        self._closure_key_cache = {
+            k: v for k, v in self._closure_key_cache.items() if k[1] == wh
+        }
+        if len(self._index_cache) > 64:
+            self._index_cache.clear()
+        if len(self._sidecar_cache) > 256:
+            self._sidecar_cache.clear()
 
     # ----------------------------------------------------------------- load
     def load(
@@ -222,17 +376,93 @@ class Executor:
     def _load_stable(self, app: StoreObject, world: World) -> LoadedImage:
         stats = LoadStats(strategy="stable")
         t0 = time.perf_counter()
-        path = self.registry.table_path(app.content_hash, world.world_hash)
+        key = self.closure_key(app, world)
+        path = self.registry.table_path(app.content_hash, key)
         if not path.exists():
-            raise StaleTableError(
-                f"no materialized table for {app.name} under world "
-                f"{world.world_hash[:12]}; run begin_mgmt/end_mgmt"
-            )
+            # pre-closure-hash stores keyed tables by the world hash; honour
+            # them until the next management cycle re-materializes
+            legacy = self.registry.table_path(app.content_hash, world.world_hash)
+            if legacy.exists():
+                path, key = legacy, world.world_hash
+            else:
+                raise StaleTableError(
+                    f"no materialized table for {app.name} under closure "
+                    f"{key[:12]}; run begin_mgmt/end_mgmt"
+                )
         table = RelocationTable.load(path)
-        table.check_fresh(world.world_hash, app.content_hash)
+        table.check_fresh(key, app.content_hash)
         stats.table_load_s = time.perf_counter() - t0
         image = self._apply_table(app, table, stats)
         return image
+
+    def _load_stable_mmap(self, app: StoreObject, world: World) -> LoadedImage:
+        """Baked-arena epoch load: one copy-on-write mmap + view building.
+
+        No symbol search, no table parse, no payload copy — the relocation
+        work happened at ``end_mgmt`` (``_bake_arena``).  ``mode="c"`` maps
+        the arena copy-on-write: callers may mutate tensors freely without
+        touching the baked image or other loads.
+        """
+        stats = LoadStats(strategy="stable-mmap")
+        t0 = time.perf_counter()
+        key = self.closure_key(app, world)
+        apath = self.registry.arena_path(app.content_hash, key)
+        mpath = self.registry.arena_meta_path(app.content_hash, key)
+        if not (apath.exists() and mpath.exists()):
+            raise StaleTableError(
+                f"no baked arena for {app.name} under closure {key[:12]}; "
+                "run a management cycle with bake_arenas=True"
+            )
+        st = mpath.stat()
+        ck = (str(mpath), st.st_mtime_ns, st.st_size)
+        hit = self._sidecar_cache.get(ck)
+        if hit is None:
+            meta = json.loads(mpath.read_text())
+            slot_items = [
+                (
+                    name,
+                    int(s["offset"]),
+                    int(s["nbytes"]),
+                    np_dtype(s["dtype"]),
+                    tuple(s["shape"]),
+                )
+                for name, s in meta["slots"].items()
+            ]
+            self._sidecar_cache[ck] = (meta, slot_items)
+        else:
+            meta, slot_items = hit
+        # check_fresh-style staleness guards: a baked arena can never be
+        # applied under the wrong world/app
+        if meta.get("closure_hash") != key:
+            raise StaleTableError(
+                f"baked arena for closure {str(meta.get('closure_hash'))[:12]} "
+                f"used against closure {key[:12]} — re-run end_mgmt"
+            )
+        if meta.get("app_hash") != app.content_hash:
+            raise StaleTableError("baked arena belongs to a different application")
+        stats.table_load_s = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        arena_size = int(meta["arena_size"])
+        if arena_size:
+            arena = np.memmap(apath, dtype=np.uint8, mode="c")[:arena_size]
+        else:
+            arena = np.empty(0, dtype=np.uint8)
+        tensors = {
+            name: arena[off : off + nbytes].view(dt).reshape(shape)
+            for name, off, nbytes, dt, shape in slot_items
+        }
+        stats.io_s = time.perf_counter() - t1
+        stats.relocations = int(meta.get("relocations", 0))
+        stats.bytes_loaded = 0  # mapped, not copied
+        return LoadedImage(
+            app=app,
+            arena=arena,
+            tensors=tensors,
+            kernels=dict(meta.get("kernels", {})),
+            table=None,
+            stats=stats,
+        )
 
     def _load_dynamic(self, app: StoreObject, world: World) -> LoadedImage:
         stats = LoadStats(strategy="dynamic")
@@ -246,6 +476,57 @@ class Executor:
         stats.probes = resolver.probe_count
         return self._apply_table(app, table, stats)
 
+    def _load_indexed(self, app: StoreObject, world: World) -> LoadedImage:
+        """Dynamic-shaped load that resolves through the symbol index —
+        the management-time fallback (``auto`` maps here while the world is
+        in flux), sparing the O(refs x scope) ld.so probe."""
+        stats = LoadStats(strategy="indexed")
+        t0 = time.perf_counter()
+        resolver = IndexedResolver(world, index_cache=self._index_cache)
+        relocations = resolver.resolve(app)
+        table = build_table(
+            app, relocations, world_hash=world.world_hash, epoch=self.manager.epoch
+        )
+        stats.resolve_s = time.perf_counter() - t0
+        stats.index_build_s = resolver.index_build_s
+        stats.probes = resolver.probe_count
+        return self._apply_table(app, table, stats)
+
+    def _bake_arena(self, app: StoreObject, table: RelocationTable, key: str) -> float:
+        """Pre-apply ``table`` into a page-aligned arena image on disk.
+
+        The image is the fully relocated arena the stable loader would have
+        produced; ``stable-mmap`` maps it copy-on-write at epoch load.  The
+        sidecar carries the staleness guards plus everything view building
+        needs (slots, kernel bindings), so the load path never opens the
+        table.  Returns the bake wall time.
+        """
+        t0 = time.perf_counter()
+        padded = align_up(table.arena_size, PAGE_BYTES)
+        arena = np.zeros(padded, dtype=np.uint8)
+        kernels: dict[str, str] = {}
+        self._fill_arena(table, arena[: table.arena_size], kernels)
+        apath = self.registry.arena_path(app.content_hash, key)
+        tmp = apath.with_suffix(".tmp")
+        arena.tofile(tmp)
+        tmp.rename(apath)
+        sidecar = {
+            "app": app.name,
+            "app_hash": app.content_hash,
+            "world_hash": table.meta["world_hash"],
+            "closure_hash": key,
+            "epoch": table.meta["epoch"],
+            "arena_size": table.arena_size,
+            "relocations": len(table),
+            "slots": table.meta["slots"],
+            "kernels": kernels,
+        }
+        mpath = self.registry.arena_meta_path(app.content_hash, key)
+        mtmp = mpath.with_suffix(".tmp")
+        mtmp.write_text(json.dumps(sidecar, sort_keys=True))
+        mtmp.rename(mpath)
+        return time.perf_counter() - t0
+
     def _payload_mmap(self, store_name: str) -> np.ndarray:
         path = self.registry.root / "objects" / store_name / "payload.bin"
         return np.memmap(path, dtype=np.uint8, mode="r")
@@ -255,38 +536,64 @@ class Executor:
     ) -> LoadedImage:
         t0 = time.perf_counter()
         arena = np.empty(table.arena_size, dtype=np.uint8)
-        slots = table.slots()
-        rows = table.rows
         kernels: dict[str, str] = {}
+        stats.bytes_loaded = self._fill_arena(table, arena, kernels)
+        stats.io_s = time.perf_counter() - t0
+        stats.relocations = len(table.rows)
+        slots = table.slots()
+        tensors = {
+            name: arena[s.offset : s.offset + s.nbytes]
+            .view(np_dtype(s.dtype))
+            .reshape(s.shape)
+            for name, s in slots.items()
+        }
+        return LoadedImage(
+            app=app,
+            arena=arena,
+            tensors=tensors,
+            kernels=kernels,
+            table=table,
+            stats=stats,
+        )
 
+    def _fill_arena(
+        self, table: RelocationTable, arena: np.ndarray, kernels: dict
+    ) -> int:
+        """Apply every relocation of ``table`` into ``arena`` (and bind
+        kernel symbols into ``kernels``). Shared by the stable loader and
+        the arena baker. Returns the payload bytes copied."""
+        rows = table.rows
         if (
             self.loader == "paged"
             and table._pt_src is not None
             and "host_rows" in table.meta
         ):
             self._apply_paged(table, arena, kernels)
-            stats.io_s = time.perf_counter() - t0
-            stats.relocations = len(rows)
-            tensors = {
-                name: arena[s.offset : s.offset + s.nbytes]
-                .view(np_dtype(s.dtype))
-                .reshape(s.shape)
-                for name, s in slots.items()
-            }
-            return LoadedImage(
-                app=app, arena=arena, tensors=tensors, kernels=kernels,
-                table=table, stats=stats,
+            # page-table loads copy whole pages; report the payload bytes
+            # the rows account for (vectorized: this is the per-load path)
+            copied = ~np.isin(
+                rows["type"],
+                (int(RelocType.KERNEL), int(RelocType.INIT)),
             )
+            return int(rows["st_size"][copied].sum())
+
+        slots = table.slots()
 
         # Group rows by provider, sort by source offset: each provider's
         # payload is then read strictly sequentially (§4.2's key loading
-        # optimization — "well suited for memory prefetching").
+        # optimization — "well suited for memory prefetching"). The group
+        # boundaries come from one np.unique over the lexsorted provider
+        # column instead of a per-row Python loop.
         order = np.lexsort((rows["st_value"], rows["provides_so_uuid"]))
-        groups: dict[int, list[int]] = {}
-        for i in order:
-            groups.setdefault(int(rows["provides_so_uuid"][i]), []).append(int(i))
+        sorted_uuids = rows["provides_so_uuid"][order]
+        uniq, starts = np.unique(sorted_uuids, return_index=True)
+        bounds = np.append(starts, len(order))
+        groups: dict[int, np.ndarray] = {
+            int(u): order[bounds[j] : bounds[j + 1]]
+            for j, u in enumerate(uniq)
+        }
 
-        def apply_group(uuid: int, idxs: list[int]) -> int:
+        def apply_group(uuid: int, idxs) -> int:
             nbytes = 0
             mm = None
 
@@ -344,41 +651,25 @@ class Executor:
                 futs = [
                     pool.submit(apply_group, u, idxs) for u, idxs in groups.items()
                 ]
-                stats.bytes_loaded = sum(f.result() for f in futs)
-        else:
-            stats.bytes_loaded = sum(
-                apply_group(u, idxs) for u, idxs in groups.items()
-            )
-
-        stats.io_s = time.perf_counter() - t0
-        stats.relocations = len(rows)
-
-        tensors = {
-            name: arena[s.offset : s.offset + s.nbytes]
-            .view(np_dtype(s.dtype))
-            .reshape(s.shape)
-            for name, s in slots.items()
-        }
-        return LoadedImage(
-            app=app,
-            arena=arena,
-            tensors=tensors,
-            kernels=kernels,
-            table=table,
-            stats=stats,
-        )
+                return sum(f.result() for f in futs)
+        return sum(apply_group(u, idxs) for u, idxs in groups.items())
 
     def _apply_paged(self, table: RelocationTable, arena: np.ndarray,
                      kernels: dict) -> None:
         """Vectorized page-table application (one gather per provider)."""
-        from .objects import PAGE_BYTES, align_up
-
         rows = table.rows
         src, dst = table._pt_src, table._pt_dst
         pad = align_up(arena.nbytes, PAGE_BYTES) - arena.nbytes
-        arena_pages = (
-            arena if pad == 0 else arena  # arena is page-multiple by layout
-        ).reshape(-1, PAGE_BYTES)
+        if pad:
+            # The gather writes whole destination pages; a non-page-multiple
+            # arena (e.g. a hand-trimmed table layout) would overflow its
+            # final page. Gather into a padded scratch and copy the real
+            # prefix back — correctness over the zero-copy fast path here.
+            scratch = np.zeros(arena.nbytes + pad, dtype=np.uint8)
+            arena_pages = scratch.reshape(-1, PAGE_BYTES)
+        else:
+            scratch = None
+            arena_pages = arena.reshape(-1, PAGE_BYTES)
 
         cursor = 0
         jobs = []
@@ -402,6 +693,11 @@ class Executor:
         else:
             for j in jobs:
                 copy_provider(*j)
+
+        if scratch is not None:
+            # fold the padded gather back BEFORE host rows run, so their
+            # direct writes into `arena` are not clobbered
+            arena[:] = scratch[: arena.nbytes]
 
         # host-path rows: CAST / INIT / unaligned SLICE
         host_rows = table.meta.get("host_rows", [])

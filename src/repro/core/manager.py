@@ -70,6 +70,10 @@ class Manager:
             self._staged = dict(st.get("pending", self._world))
         # Hook invoked by end_mgmt; wired to Executor.materialize_all.
         self.on_materialize: Optional[Callable[[World, int], None]] = None
+        # Result of the most recent end_mgmt materialization pass (an
+        # Executor.MaterializationResult: which apps re-materialized, which
+        # tables were reused, index/bake timings). In-memory only.
+        self.last_materialization = None
         # Optional journal sink (record/clear/last_seq); wired by Workspace.
         self.journal = None
         self._journal_seq = int(st.get("journal_seq", 0))
@@ -201,12 +205,12 @@ class Manager:
         new_epoch = self._epoch + 1
         if materialize and self.on_materialize is not None:
             # Materialization happens while still formally in management time:
-            # the Executor may run the dynamic-linking path to observe
-            # mappings. It runs BEFORE the commit below, so a failure (e.g.
-            # an unresolvable symbol in a staged app) leaves the committed
+            # the Executor may run the resolution path to observe mappings.
+            # It runs BEFORE the commit below, so a failure (e.g. an
+            # unresolvable symbol in a staged app) leaves the committed
             # world and epoch untouched — the management session stays open
             # to be fixed or aborted.
-            self.on_materialize(new_world, new_epoch)
+            self.last_materialization = self.on_materialize(new_world, new_epoch)
         self._world = dict(self._staged)
         self._epoch = new_epoch
         self._mode = Mode.EPOCH

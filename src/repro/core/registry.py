@@ -6,16 +6,21 @@ Layout on disk::
       objects/<hash16>-<name>-<version>/
         manifest.json
         payload.bin            (optional; tensors at PAGE_BYTES alignment)
-      tables/<app_hash>-<world_hash>.npz     (materialized relocation tables)
+      tables/<app_hash>-<closure_hash>.npz        (materialized tables)
+      tables/<app_hash>-<closure_hash>.arena      (baked arena images)
+      tables/<app_hash>-<closure_hash>.arena.json (baked arena sidecars)
       executables/<key>.jaxexe               (AOT compile cache, optional)
       state.json               (mode, epoch counter, world view)
       journal.jsonl            (staged ops of the open management session)
 
 The *world view* is the set of (object name -> content hash) bindings that is
 current for the running epoch — the analogue of /nix/var/nix/profiles. The
-``world_hash`` identifies it; relocation tables are keyed by
-(application content hash, world hash) so a table can never be used against a
-world it was not materialized for (StaleTableError otherwise).
+``world_hash`` identifies it. Relocation tables and baked arenas are keyed by
+(application content hash, *closure hash*) — the digest of the app's
+dependency-closure content hashes (core/symbol_index.py) — so a table can
+never be used against a world whose closure differs from the one it was
+materialized for (StaleTableError otherwise), while worlds that changed only
+outside the app's closure keep the key and reuse the table.
 
 The registry itself is mode-agnostic; mutation gating lives in Manager.
 
@@ -65,8 +70,19 @@ class Registry:
     def payload_path(self, obj: StoreObject) -> Path:
         return self.object_dir(obj) / "payload.bin"
 
-    def table_path(self, app_hash: str, world_hash: str) -> Path:
-        return self.root / "tables" / f"{app_hash[:16]}-{world_hash[:16]}.npz"
+    def table_path(self, app_hash: str, key: str) -> Path:
+        """Materialized-table path. ``key`` is the app's closure hash
+        (pre-incremental stores used the world hash; Executor._load_stable
+        still probes that legacy key as a fallback)."""
+        return self.root / "tables" / f"{app_hash[:16]}-{key[:16]}.npz"
+
+    def arena_path(self, app_hash: str, key: str) -> Path:
+        """Baked (pre-relocated) arena image for one (app, closure)."""
+        return self.root / "tables" / f"{app_hash[:16]}-{key[:16]}.arena"
+
+    def arena_meta_path(self, app_hash: str, key: str) -> Path:
+        """Sidecar (slots/kernels/staleness guards) of a baked arena."""
+        return self.root / "tables" / f"{app_hash[:16]}-{key[:16]}.arena.json"
 
     def executable_path(self, key: str) -> Path:
         return self.root / "executables" / f"{key[:32]}.jaxexe"

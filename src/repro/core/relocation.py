@@ -11,8 +11,16 @@ deviations, both noted in DESIGN.md §7:
 * UUIDs are content-hash-derived u64s (stable across machines) instead of
   per-materialization counters.
 
-A table is keyed by (application content hash, world hash): it can never be
-applied under a world it was not materialized for.
+A table is keyed by (application content hash, closure hash), where the
+closure hash (core/symbol_index.py) digests the content hashes of the app's
+dependency closure in search order — the complete input of a resolution.  A
+table can never be applied under a world whose closure differs from the one
+it was materialized for; worlds that differ only *outside* the app's closure
+share the key, which is what makes re-materialization incremental (an
+unrelated publish leaves the table — and its baked arena — reusable).  The
+world hash the table was materialized under is kept in ``meta`` for
+observability; pre-closure-hash tables (no ``closure_hash`` in meta) fall
+back to world-hash freshness, preserving old stores.
 
 ``PageTable`` is the TPU-native compilation of a relocation table: because
 bundle payloads and the destination arena are PAGE_BYTES-aligned, almost
@@ -245,11 +253,18 @@ class RelocationTable:
             t._pt_dst = np.zeros(0, np.int32)
         return t
 
-    def check_fresh(self, world_hash: str, app_hash: str) -> None:
-        if self.meta["world_hash"] != world_hash:
+    def check_fresh(self, key: str, app_hash: str) -> None:
+        """Reject a table whose resolution inputs differ from ``key``.
+
+        ``key`` is the app's closure hash under the world being loaded
+        (legacy tables without ``closure_hash`` compare their world hash —
+        the stricter pre-incremental key they were saved under).
+        """
+        mine = self.meta.get("closure_hash") or self.meta["world_hash"]
+        if mine != key:
             raise StaleTableError(
-                f"table for world {self.meta['world_hash'][:12]} used against "
-                f"world {world_hash[:12]} — re-run end_mgmt to re-materialize"
+                f"table for closure {mine[:12]} used against closure "
+                f"{key[:12]} — re-run end_mgmt to re-materialize"
             )
         if self.meta["app_hash"] != app_hash:
             raise StaleTableError("table belongs to a different application")
@@ -261,6 +276,7 @@ def build_table(
     *,
     world_hash: str,
     epoch: int,
+    closure_hash: str = "",
 ) -> RelocationTable:
     """Materialize resolved relocations into a flat table (the paper's §4.2)."""
     relocations = list(relocations)
@@ -306,6 +322,7 @@ def build_table(
         "app": app.name,
         "app_hash": app.content_hash,
         "world_hash": world_hash,
+        "closure_hash": closure_hash,
         "epoch": epoch,
         "arena_size": arena_size,
         "slots": {

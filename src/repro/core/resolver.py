@@ -25,6 +25,7 @@ analogue of an ELF addend.
 
 from __future__ import annotations
 
+import functools
 import re
 from collections import deque
 from dataclasses import dataclass
@@ -38,7 +39,12 @@ from .registry import World
 
 _SLICE_RE = re.compile(r"^(?P<base>.*)\[(?P<idx>\d+)\]$")
 
-# numpy dtype lookup that understands ml_dtypes names (bfloat16 etc.)
+
+# numpy dtype lookup that understands ml_dtypes names (bfloat16 etc.).
+# Memoized: it sits on the load hot path (once per table row and once per
+# tensor view); np.dtype instances are immutable, so sharing one per name
+# across callers is safe.
+@functools.lru_cache(maxsize=None)
 def np_dtype(name: str) -> np.dtype:
     try:
         return np.dtype(name)

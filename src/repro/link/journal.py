@@ -57,6 +57,7 @@ from repro.core.errors import UnknownObjectError, UnresolvedSymbolError
 from repro.core.objects import RelocType
 from repro.core.relocation import RelocationTable
 from repro.core.resolver import DynamicResolver, dependency_closure
+from repro.core.symbol_index import closure_hash
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.manager import Manager
@@ -313,7 +314,15 @@ class PreviewReport:
 
     @property
     def tables_to_rebuild(self) -> list[str]:
+        """Apps whose dependency closure changed: commit re-materializes
+        exactly these."""
         return [d.app for d in self.deltas if d.table_rebuilt]
+
+    @property
+    def tables_reused(self) -> list[str]:
+        """Apps untouched by this staging: their closure hash — and hence
+        their materialized table and baked arena — survives the commit."""
+        return [d.app for d in self.deltas if not d.table_rebuilt]
 
     @property
     def is_clean(self) -> bool:
@@ -337,6 +346,7 @@ class PreviewReport:
             "world_diff": self.diff.summary(),
             "apps": [d.summary() for d in self.deltas],
             "tables_to_rebuild": self.tables_to_rebuild,
+            "tables_reused": self.tables_reused,
         }
 
     # ------------------------------------------------------------- views
@@ -469,18 +479,34 @@ def app_relocation_delta(manager: "Manager", app) -> tuple[RelocationDelta, list
     committed = manager.committed_world()
     staged = manager.world()
     delta = RelocationDelta(app=app.name)
-    delta.table_rebuilt = not registry.table_path(
-        app.content_hash, staged.world_hash
-    ).exists()
+    # Tables are keyed by (app hash, closure hash): commit re-materializes
+    # exactly the apps whose dependency closure changed. A broken staged
+    # closure (missing dep) has no reusable table by definition.
+    try:
+        staged_key = closure_hash(app, staged)
+        delta.table_rebuilt = not registry.table_path(
+            app.content_hash, staged_key
+        ).exists()
+    except UnknownObjectError:
+        delta.table_rebuilt = True
     # old mapping: what the committed epoch binds (table if materialized).
     # An *upgraded* app (same name, new content hash) is not new — its old
     # mapping comes from the committed version of the app object, so the
     # preview shows exactly what the app roll changes.
     committed_app = committed.get(app.name) if app.name in committed else None
     if committed_app is not None:
+        try:
+            committed_key = closure_hash(committed_app, committed)
+        except UnknownObjectError:
+            committed_key = committed.world_hash
         table_path = registry.table_path(
-            committed_app.content_hash, committed.world_hash
+            committed_app.content_hash, committed_key
         )
+        if not table_path.exists():
+            # pre-closure-hash stores keyed tables by the world hash
+            table_path = registry.table_path(
+                committed_app.content_hash, committed.world_hash
+            )
         if table_path.exists():
             old = _mapping_from_table(RelocationTable.load(table_path))
             old_unres: list[dict] = []

@@ -47,6 +47,10 @@ class LinkReport:
     # pre-commit only (explain(pending=True)): the app's relocation delta
     # versus the committed epoch — a repro.link.journal.RelocationDelta
     delta: Optional[object] = None
+    # summary of the most recent end_mgmt materialization pass (which apps
+    # re-materialized vs reused their tables, index/bake timings), if one
+    # happened in this process — a MaterializationResult.summary() dict
+    materialization: Optional[dict] = None
 
     @property
     def pending(self) -> bool:
@@ -69,6 +73,8 @@ class LinkReport:
         }
         if self.delta is not None:
             out["pending_delta"] = self.delta.summary()
+        if self.materialization is not None:
+            out["materialization"] = dict(self.materialization)
         if self.stats is not None:
             out["last_load"] = {
                 "strategy": self.stats.strategy,
@@ -76,6 +82,7 @@ class LinkReport:
                 "resolve_s": self.stats.resolve_s,
                 "table_load_s": self.stats.table_load_s,
                 "io_s": self.stats.io_s,
+                "index_build_s": self.stats.index_build_s,
                 "relocations": self.stats.relocations,
                 "probes": self.stats.probes,
                 "bytes_loaded": self.stats.bytes_loaded,
@@ -114,6 +121,7 @@ def report_from_table(
     source: str,
     stats: Optional[LoadStats] = None,
     delta: Optional[object] = None,
+    materialization: Optional[dict] = None,
 ) -> LinkReport:
     """Build the summary breakdowns from a relocation table."""
     rows = table.rows
@@ -138,4 +146,5 @@ def report_from_table(
         stats=stats,
         table=table,
         delta=delta,
+        materialization=materialization,
     )

@@ -10,16 +10,23 @@ dispatches through this table instead of hard-coded branches, so
 * an unknown name fails with a ``StableLinkingError`` that lists what is
   registered.
 
-Built-ins mirror the paper's Figure 5:
+Built-ins mirror the paper's Figure 5 (and push past it):
 
-    stable    — table-driven epoch load (the contribution)
-    dynamic   — traditional dynamic linking (baseline)
-    lazy      — per-symbol first-use faulting (PLT analogue, §6.2)
-    prefetch  — stable + OS readahead hints on provider payloads (drop-in
-                variant, demonstrating the registry)
+    stable      — table-driven epoch load (the contribution)
+    stable-mmap — baked-arena epoch load: one copy-on-write mmap, zero
+                  resolve / table parse / payload copy (requires
+                  ``bake_arenas`` materialization, the default)
+    dynamic     — traditional dynamic linking (baseline; untouched so
+                  benchmarks keep a faithful ld.so comparison point)
+    indexed     — dynamic-shaped load resolving through the per-closure
+                  symbol index (O(1) per ref)
+    lazy        — per-symbol first-use faulting (PLT analogue, §6.2)
+    prefetch    — stable + OS readahead hints on provider payloads (drop-in
+                  variant, demonstrating the registry)
 
-``auto`` is not a strategy but a dispatch rule: dynamic during management
-time, stable during an epoch.
+``auto`` is not a strategy but a dispatch rule: indexed during management
+time (correct while the world is in flux, without the ld.so probe cost),
+stable during an epoch.
 """
 
 from __future__ import annotations
@@ -107,7 +114,7 @@ def resolve_strategy(name: str, *, mode: Mode) -> LoadStrategy:
     """Dispatch rule used by ``Executor.load``: resolve ``auto`` by mode,
     everything else by registry lookup."""
     if name == "auto":
-        name = "dynamic" if mode == Mode.MANAGEMENT else "stable"
+        name = "indexed" if mode == Mode.MANAGEMENT else "stable"
     return get_strategy(name)
 
 
@@ -117,9 +124,19 @@ def _stable(executor, app, world):
     return executor._load_stable(app, world)
 
 
+@register_strategy("stable-mmap")
+def _stable_mmap(executor, app, world):
+    return executor._load_stable_mmap(app, world)
+
+
 @register_strategy("dynamic")
 def _dynamic(executor, app, world):
     return executor._load_dynamic(app, world)
+
+
+@register_strategy("indexed")
+def _indexed(executor, app, world):
+    return executor._load_indexed(app, world)
 
 
 @register_strategy("lazy")

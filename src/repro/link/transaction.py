@@ -44,6 +44,9 @@ class ManagementTransaction:
         self._open = True
         self.epoch: Optional[int] = None  # set on commit
         self.resumed = resumed            # adopted a crashed session's staging
+        # set on commit: the Executor's MaterializationResult (which apps
+        # re-materialized vs reused their tables/baked arenas)
+        self.materialization = None
 
     # ------------------------------------------------------------- guards
     def _check_open(self) -> None:
@@ -92,8 +95,10 @@ class ManagementTransaction:
     def preview(self) -> PreviewReport:
         """Relocation-delta preview: dry-run materialization against the
         staged world. Reports, per application, which relocations change
-        provider/addend, which go unresolved, and which tables will be
-        rebuilt at commit. Writes nothing."""
+        provider/addend, which go unresolved, and exactly which tables will
+        be rebuilt at commit versus reused (``tables_to_rebuild`` /
+        ``tables_reused`` — closure-hash keyed, so an unrelated publish
+        reuses everything). Writes nothing."""
         self._check_open()
         return preview_world(self._manager)
 
@@ -111,6 +116,7 @@ class ManagementTransaction:
         epoch = self._manager.end_mgmt(materialize=materialize)
         self._open = False
         self.epoch = epoch
+        self.materialization = self._manager.last_materialization
         return epoch
 
     def _rollback(self) -> None:

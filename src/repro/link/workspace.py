@@ -41,7 +41,7 @@ from repro.core.registry import Registry, World
 from repro.core.relocation import RelocationTable, build_table
 from repro.core.resolver import DynamicResolver
 
-from repro.core.errors import ModeError
+from repro.core.errors import ModeError, UnknownObjectError
 
 from .journal import Journal
 from .report import LinkReport, report_from_table
@@ -59,6 +59,8 @@ class Workspace:
         io_threads: int = 0,
         loader: str = "paged",
         table_format: str = "raw",
+        bake_arenas: bool = True,
+        materialize_workers: int = 1,
         _ephemeral: bool = False,
     ):
         self.root = os.fspath(root)
@@ -71,6 +73,8 @@ class Workspace:
             io_threads=io_threads,
             loader=loader,
             table_format=table_format,
+            bake_arenas=bake_arenas,
+            materialize_workers=materialize_workers,
         )
         self.compile_cache = CompileCache(self.registry.root / "executables")
         # Management-time journal: staged ops persisted beside state.json so
@@ -247,7 +251,13 @@ class Workspace:
             )
         world = self.world()
         app = world.resolve(name)
-        path = self.registry.table_path(app.content_hash, world.world_hash)
+        try:
+            key = self.executor.closure_key(app, world)
+            path = self.registry.table_path(app.content_hash, key)
+        except UnknownObjectError:
+            # broken closure (a staged world missing a dependency): no
+            # materialized table can exist for it
+            path = None
         delta = None
         if pending:
             # Staged-world dry run for this app only. Tolerant: a staged
@@ -264,7 +274,7 @@ class Workspace:
                 epoch=self.epoch,
             )
             source = "staged-preview"
-        elif path.exists():
+        elif path is not None and path.exists():
             table = RelocationTable.load(path)
             source = "materialized-table"
         else:
@@ -276,6 +286,7 @@ class Workspace:
                 epoch=self.epoch,
             )
             source = "dynamic-resolution"
+        last_mat = self.manager.last_materialization
         return report_from_table(
             table,
             app=app.name,
@@ -285,4 +296,5 @@ class Workspace:
             source=source,
             stats=self._last_stats.get(name),
             delta=delta,
+            materialization=last_mat.summary() if last_mat is not None else None,
         )

@@ -87,18 +87,20 @@ def test_stale_table_rejected_after_world_change(linker):
     mgr.update_obj(app)
     mgr.end_mgmt()
     old_world = mgr.world()
-    # world changes: new bundle version
+    old_key = ex.closure_key(app, old_world)
+    # world changes: new bundle version — the app's dependency closure
+    # (and therefore its table key) changes with it
     mgr.begin_mgmt()
     b2, p2 = build_bundle("libw", {"w": a * 2}, version="2")
     mgr.update_obj(b2, p2)
     mgr.end_mgmt()
     img = ex.load("app", strategy="stable")
     assert np.array_equal(img["w"], a * 2)
-    # old world's table is not used against the new world
+    # old closure's table is not used against the new closure
     from repro.core.relocation import RelocationTable
 
-    t = RelocationTable.load(
-        reg.table_path(app.content_hash, old_world.world_hash)
-    )
+    new_key = ex.closure_key(app, mgr.world())
+    assert new_key != old_key
+    t = RelocationTable.load(reg.table_path(app.content_hash, old_key))
     with pytest.raises(StaleTableError):
-        t.check_fresh(mgr.world().world_hash, app.content_hash)
+        t.check_fresh(new_key, app.content_hash)

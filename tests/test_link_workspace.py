@@ -166,8 +166,9 @@ def test_auto_dispatch_follows_mode(workspace):
     with ws.management() as tx:
         tx.publish(*build_bundle("w", tensors))
         tx.publish(build_app("app", [SymbolRef("s/a", (8,), "float32")], ["w"]))
-        img = ws.load("app")  # management time -> dynamic
-        assert img.stats.strategy == "dynamic"
+        img = ws.load("app")  # management time -> indexed (per-load resolve)
+        assert img.stats.strategy == "indexed"
+        np.testing.assert_array_equal(img["s/a"], tensors["s/a"])
     img = ws.load("app")      # epoch -> stable
     assert img.stats.strategy == "stable"
 

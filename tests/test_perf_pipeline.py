@@ -1,0 +1,443 @@
+"""The materialize->load perf pipeline: indexed resolution equivalence,
+baked arenas (stable-mmap) + staleness guards, closure-hash incremental
+re-materialization, parallel determinism, and the _apply_paged pad fix."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DynamicResolver,
+    IndexedResolver,
+    PAGE_BYTES,
+    StaleTableError,
+    SymbolDef,
+    SymbolMismatchError,
+    SymbolRef,
+    ObjectKind,
+    align_up,
+    closure_hash,
+    make_object,
+    np_dtype,
+)
+from repro.core.executor import LoadStats
+from repro.link import Workspace
+
+from conftest import build_app, build_bundle
+
+
+# ------------------------------------------------------- indexed resolution
+def _tricky_world(ws):
+    """Interposition by search order, whole + partial stacked slices, CAST,
+    weak tensor + weak kernel refs — everything the dynamic probe handles."""
+    from repro.ckpt import make_kernel_lib
+
+    base_syms = {
+        "X": np.arange(32, dtype=np.float32).reshape(4, 8),
+        "y": np.ones(8, np.float64),          # app wants f32 -> CAST
+        "m": np.arange(24, dtype=np.float32).reshape(2, 3, 4),
+        "n[0]": np.arange(12, dtype=np.float32).reshape(3, 4),
+        # second exporter of slice base "p": overlay's soft-fails the slice
+        # match (wrong trailing shape), so the probe must continue here
+        "p": np.arange(16, dtype=np.float32).reshape(2, 8),
+    }
+    base = build_bundle("base", base_syms)
+    overlay = build_bundle(
+        "overlay",
+        {
+            "y": np.full(8, 7.0, np.float64),  # wins by search order
+            "p": np.arange(12, dtype=np.float32).reshape(3, 4),
+        },
+    )
+    klib, _ = make_kernel_lib("klib", "v1", {"rmsnorm": 3})
+    app = build_app(
+        "app",
+        [
+            SymbolRef("X[1]", (8,), "float32"),
+            SymbolRef("X[3]", (8,), "float32"),
+            SymbolRef("y", (8,), "float32"),
+            SymbolRef("m[1][2]", (4,), "float32"),
+            SymbolRef("n[0][1]", (4,), "float32"),
+            SymbolRef("p[1]", (8,), "float32"),   # binds base, not overlay
+            SymbolRef("ghost", (4,), "float32", weak=True),
+            SymbolRef("kernel:rmsnorm", (), "kernel"),
+            SymbolRef("kernel:absent", (), "kernel", weak=True),
+        ],
+        ["overlay", "base", "klib"],
+    )
+    with ws.management() as tx:
+        tx.publish(*base)
+        tx.publish(*overlay)
+        tx.publish(klib)
+        tx.publish(app)
+    return ws.world().resolve("app")
+
+
+def test_indexed_resolver_matches_dynamic_exactly(workspace):
+    app = _tricky_world(workspace)
+    world = workspace.world()
+    dyn = DynamicResolver(world)
+    idx = IndexedResolver(world)
+    got_d = dyn.resolve(app)
+    got_i = idx.resolve(app)
+
+    def flat(rs):
+        return [
+            (
+                r.ref.name,
+                r.provider.name if r.provider else None,
+                int(r.rtype),
+                r.addend,
+                r.st_value,
+                r.st_size,
+            )
+            for r in rs
+        ]
+
+    assert flat(got_i) == flat(got_d)
+    # the soft-failing first exporter of "p" was probed past, not fatal
+    p1 = next(r for r in got_i if r.ref.name == "p[1]")
+    assert p1.provider.name == "base" and p1.addend == 32
+    # the index is the point: far less search work than the linear probe
+    assert idx.probe_count < dyn.probe_count
+
+
+def test_indexed_resolver_memo_shared_across_apps(workspace):
+    """Two apps with the same closure share one index; the second app's
+    repeated refs are memo hits (no extra candidate probing)."""
+    bundle = build_bundle("lib", {"t": np.arange(16, dtype=np.float32)})
+    a = build_app("a", [SymbolRef("t", (16,), "float32")], ["lib"])
+    b = build_app("b", [SymbolRef("t", (16,), "float32")], ["lib"])
+    with workspace.management() as tx:
+        tx.publish(*bundle)
+        tx.publish(a)
+        tx.publish(b)
+    world = workspace.world()
+    cache: dict = {}
+    r1 = IndexedResolver(world, index_cache=cache)
+    r1.resolve(world.resolve("a"))
+    built_after_first = r1.index_build_s
+    r2 = IndexedResolver(world, index_cache=cache)
+    r2.resolve(world.resolve("b"))
+    assert r2.index_build_s == 0.0      # cache hit: no index rebuilt
+    assert built_after_first >= 0.0
+    assert len(cache) == 1              # same closure -> same index
+
+
+def test_indexed_resolver_raises_on_mismatch_like_dynamic(workspace):
+    mgr = workspace.manager
+    bundle = build_bundle("lib", {"q": np.zeros(3, np.float32)})
+    app = build_app("app", [SymbolRef("q", (4,), "float32")], ["lib"])
+    mgr.update_obj(*bundle)
+    mgr.update_obj(app)
+    world = mgr.world()
+    with pytest.raises(SymbolMismatchError):
+        DynamicResolver(world).resolve(world.resolve("app"))
+    with pytest.raises(SymbolMismatchError):
+        IndexedResolver(world).resolve(world.resolve("app"))
+
+
+# ------------------------------------------------------------ baked arenas
+def _demo_world(ws, value=1.0, version="1"):
+    tensors = {
+        "s/a": np.full(8, value, np.float32),
+        "s/b": np.arange(6, dtype=np.float32).reshape(2, 3),
+    }
+    bundle = build_bundle("w", tensors, version=version)
+    app = build_app(
+        "app",
+        [
+            SymbolRef("s/a", (8,), "float32"),
+            SymbolRef("s/b", (2, 3), "float32"),
+        ],
+        ["w"],
+    )
+    with ws.management() as tx:
+        tx.publish(*bundle)
+        tx.publish(app)
+    return tensors
+
+
+def test_stable_mmap_matches_stable_with_zero_copy(workspace):
+    ws = workspace
+    tensors = _demo_world(ws)
+    stable = ws.load("app", strategy="stable")
+    mm = ws.load("app", strategy="stable-mmap")
+    for name in stable.tensors:
+        np.testing.assert_array_equal(
+            np.asarray(mm[name]), np.asarray(stable[name]), err_msg=name
+        )
+    assert mm.stats.strategy == "stable-mmap"
+    assert mm.stats.resolve_s == 0.0       # zero resolve
+    assert mm.stats.bytes_loaded == 0      # zero copy: CoW mapping
+    assert mm.table is None                # table never opened
+    # copy-on-write isolation: mutating one image touches neither the baked
+    # arena nor later loads
+    mm["s/a"][:] = -1
+    again = ws.load("app", strategy="stable-mmap")
+    np.testing.assert_array_equal(again["s/a"], tensors["s/a"])
+
+
+def test_stable_mmap_rejected_after_closure_change(workspace):
+    """A baked arena can never be applied under the wrong world: once the
+    app's closure changes, the old bake is unreachable (new key) and a
+    commit without materialization leaves nothing valid to map."""
+    ws = workspace
+    _demo_world(ws)
+    mgr = ws.manager
+    mgr.begin_mgmt()
+    b2 = build_bundle("w", {
+        "s/a": np.full(8, 5.0, np.float32),
+        "s/b": np.zeros((2, 3), np.float32),
+    }, version="2")
+    mgr.update_obj(*b2)
+    mgr.end_mgmt(materialize=False)   # commit the world, skip re-bake
+    with pytest.raises(StaleTableError):
+        ws.load("app", strategy="stable-mmap")
+    with pytest.raises(StaleTableError):
+        ws.load("app", strategy="stable")
+
+
+def test_half_baked_arena_repaired_by_next_management_cycle(workspace):
+    """A crash between the arena and sidecar renames leaves a half-baked
+    arena; the next end_mgmt must notice the missing sidecar and re-bake
+    instead of counting the app as reused forever."""
+    ws = workspace
+    _demo_world(ws)
+    world = ws.world()
+    app = world.resolve("app")
+    key = ws.executor.closure_key(app, world)
+    ws.registry.arena_meta_path(app.content_hash, key).unlink()
+    with pytest.raises(StaleTableError):
+        ws.load("app", strategy="stable-mmap")
+    with ws.management():
+        pass  # no staged change: closure key identical
+    assert "app" in ws.manager.last_materialization.materialized
+    img = ws.load("app", strategy="stable-mmap")
+    np.testing.assert_array_equal(img["s/a"], np.full(8, 1.0, np.float32))
+
+
+def test_stable_mmap_rejects_tampered_sidecar(workspace):
+    ws = workspace
+    _demo_world(ws)
+    world = ws.world()
+    app = world.resolve("app")
+    key = ws.executor.closure_key(app, world)
+    mpath = ws.registry.arena_meta_path(app.content_hash, key)
+    sidecar = json.loads(mpath.read_text())
+    sidecar["closure_hash"] = "0" * 32
+    mpath.write_text(json.dumps(sidecar))
+    with pytest.raises(StaleTableError):
+        ws.load("app", strategy="stable-mmap")
+    sidecar["closure_hash"] = key
+    sidecar["app_hash"] = "f" * 32
+    mpath.write_text(json.dumps(sidecar))
+    with pytest.raises(StaleTableError):
+        ws.load("app", strategy="stable-mmap")
+
+
+# ----------------------------------------- incremental re-materialization
+def _two_island_world(ws):
+    """Two apps with disjoint dependency closures."""
+    lib_a = build_bundle("libA", {"a": np.arange(8, dtype=np.float32)})
+    lib_b = build_bundle("libB", {"b": np.ones(8, np.float32)})
+    app_a = build_app("appA", [SymbolRef("a", (8,), "float32")], ["libA"])
+    app_b = build_app("appB", [SymbolRef("b", (8,), "float32")], ["libB"])
+    with ws.management() as tx:
+        for o in (lib_a, lib_b):
+            tx.publish(*o)
+        tx.publish(app_a)
+        tx.publish(app_b)
+    return tx
+
+
+def test_unrelated_publish_reuses_tables_dependency_upgrade_does_not(workspace):
+    """The closure-hash matrix: publishing a library needed by only one app
+    re-materializes exactly that app; the other's table (and baked arena)
+    is reused as-is."""
+    ws = workspace
+    tx0 = _two_island_world(ws)
+    assert sorted(tx0.materialization.materialized) == ["appA", "appB"]
+
+    world1 = ws.world()
+    app_a = world1.resolve("appA")
+    key_a1 = ws.executor.closure_key(app_a, world1)
+
+    with ws.management() as tx:
+        tx.publish(*build_bundle(
+            "libB", {"b": np.full(8, 2.0, np.float32)}, version="2"
+        ))
+    mat = tx.materialization
+    assert mat.materialized == ["appB"]
+    assert mat.reused == ["appA"]
+    assert mat.tables_reused >= 1
+
+    # appA's key survived the world change: same table, no StaleTableError
+    world2 = ws.world()
+    assert world2.world_hash != world1.world_hash
+    assert ws.executor.closure_key(world2.resolve("appA"), world2) == key_a1
+    np.testing.assert_array_equal(
+        ws.load("appA", strategy="stable-mmap")["a"],
+        np.arange(8, dtype=np.float32),
+    )
+    np.testing.assert_array_equal(
+        ws.load("appB", strategy="stable-mmap")["b"],
+        np.full(8, 2.0, np.float32),
+    )
+
+    # ... while upgrading appA's own dependency re-materializes appA
+    with ws.management() as tx:
+        tx.publish(*build_bundle(
+            "libA", {"a": np.zeros(8, np.float32)}, version="2"
+        ))
+    assert tx.materialization.materialized == ["appA"]
+    assert tx.materialization.reused == ["appB"]
+
+
+def test_transitive_dependency_upgrade_invalidates(workspace):
+    """The closure hash walks the full BFS closure: a deep dependency
+    upgrade re-materializes the app even though its direct `needed` edge
+    did not change."""
+    ws = workspace
+    deep = build_bundle("deep", {"d": np.arange(4, dtype=np.float32)})
+    mid, _ = make_object(
+        name="mid", version="1", kind=ObjectKind.BUNDLE,
+        symbols=[], needed=["deep"],
+    )
+    app = build_app("app", [SymbolRef("d", (4,), "float32")], ["mid", "deep"])
+    with ws.management() as tx:
+        tx.publish(*deep)
+        tx.publish(mid)
+        tx.publish(app)
+    with ws.management() as tx:
+        tx.publish(*build_bundle(
+            "deep", {"d": np.full(4, 9.0, np.float32)}, version="2"
+        ))
+    assert tx.materialization.materialized == ["app"]
+    np.testing.assert_array_equal(
+        ws.load("app")["d"], np.full(4, 9.0, np.float32)
+    )
+
+
+def test_preview_reports_reused_vs_rebuilt_tables(workspace):
+    ws = workspace
+    _two_island_world(ws)
+    with ws.management() as tx:
+        tx.publish(*build_bundle(
+            "libB", {"b": np.full(8, 3.0, np.float32)}, version="2"
+        ))
+        p = tx.preview()
+        assert p.tables_to_rebuild == ["appB"]
+        assert p.tables_reused == ["appA"]
+        assert p.summary()["tables_reused"] == ["appA"]
+
+
+def test_parallel_materialize_matches_serial_byte_for_byte(tmp_path):
+    """Fanning materializations over a thread pool must produce exactly the
+    tables and arenas a serial pass produces."""
+
+    def build(root, workers):
+        ws = Workspace.open(root, materialize_workers=workers)
+        libs = [
+            build_bundle(f"lib{i}", {f"t{i}": np.full(64, i, np.float32)})
+            for i in range(4)
+        ]
+        apps = [
+            build_app(f"app{i}", [SymbolRef(f"t{i}", (64,), "float32")],
+                      [f"lib{i}"])
+            for i in range(4)
+        ]
+        with ws.management() as tx:
+            for o in libs:
+                tx.publish(*o)
+            for a in apps:
+                tx.publish(a)
+        return ws
+
+    ws1 = build(tmp_path / "serial", workers=1)
+    ws4 = build(tmp_path / "pool", workers=4)
+    assert ws4.manager.last_materialization.workers == 4
+    files1 = sorted(p.name for p in (ws1.registry.root / "tables").iterdir())
+    files4 = sorted(p.name for p in (ws4.registry.root / "tables").iterdir())
+    assert files1 == files4 and files1
+    for name in files1:
+        b1 = (ws1.registry.root / "tables" / name).read_bytes()
+        b4 = (ws4.registry.root / "tables" / name).read_bytes()
+        assert b1 == b4, name
+    for i in range(4):
+        np.testing.assert_array_equal(
+            ws4.load(f"app{i}", strategy="stable-mmap")[f"t{i}"],
+            np.full(64, i, np.float32),
+        )
+
+
+def test_legacy_world_hash_keyed_table_still_loads(workspace):
+    """Pre-closure-hash stores keyed tables by the world hash; the stable
+    loader falls back to that key until the next management cycle."""
+    from repro.core.relocation import RelocationTable
+
+    ws = workspace
+    _demo_world(ws)
+    world = ws.world()
+    app = world.resolve("app")
+    key = ws.executor.closure_key(app, world)
+    new = ws.registry.table_path(app.content_hash, key)
+    legacy = ws.registry.table_path(app.content_hash, world.world_hash)
+    table = RelocationTable.load(new)
+    del table.meta["closure_hash"]        # legacy tables predate the field
+    table.save(legacy)
+    new.unlink()
+    img = ws.load("app", strategy="stable")
+    np.testing.assert_array_equal(img["s/a"], np.full(8, 1.0, np.float32))
+
+
+# --------------------------------------------------- loader edge cases etc.
+def test_apply_paged_honors_non_page_multiple_arena(workspace):
+    """Regression: `pad` used to be computed then discarded and the paged
+    loader raised on any non-page-multiple arena. A trimmed layout (no
+    trailing alignment pad) must load correctly."""
+    ws = workspace
+    vals = np.arange(100, dtype=np.float32)  # 400 bytes: not a page multiple
+    with ws.management() as tx:
+        tx.publish(*build_bundle("lib", {"t": vals}))
+        tx.publish(build_app("app", [SymbolRef("t", (100,), "float32")],
+                             ["lib"]))
+    img = ws.load("app", strategy="stable")
+    table = img.table
+    slots = table.meta["slots"]
+    trimmed = max(s["offset"] + s["nbytes"] for s in slots.values())
+    assert trimmed % PAGE_BYTES != 0
+    table.meta["arena_size"] = trimmed
+    img2 = ws.executor._apply_table(
+        ws.world().resolve("app"), table, LoadStats()
+    )
+    assert img2.arena.nbytes == trimmed
+    np.testing.assert_array_equal(np.asarray(img2["t"]), vals)
+
+
+def test_np_dtype_is_memoized():
+    assert np_dtype("float32") is np_dtype("float32")
+    assert np_dtype("bfloat16") is np_dtype("bfloat16")  # ml_dtypes path
+    assert np_dtype("float32") == np.dtype("float32")
+
+
+def test_closure_hash_ignores_unrelated_bindings(workspace):
+    ws = workspace
+    _two_island_world(ws)
+    world = ws.world()
+    app_a = world.resolve("appA")
+    h1 = closure_hash(app_a, world)
+    mgr = ws.manager
+    mgr.begin_mgmt()
+    mgr.update_obj(*build_bundle("libZ", {"z": np.zeros(4, np.float32)}))
+    h2 = closure_hash(app_a, mgr.world())
+    assert h1 == h2                       # libZ is outside appA's closure
+    mgr.update_obj(*build_bundle(
+        "libA", {"a": np.ones(8, np.float32)}, version="9"
+    ))
+    h3 = closure_hash(app_a, mgr.world())
+    assert h3 != h1                       # closure content changed
+    mgr.abort_mgmt()
