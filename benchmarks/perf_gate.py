@@ -1,0 +1,118 @@
+"""Perf gate: compare this PR's bench JSON against the committed previous one.
+
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_4.json BENCH_3.json \
+        [--tolerance 1.25]
+
+Two kinds of checks, both printed as a table:
+
+* **Regression sweep** — every key present in both files (and real in both:
+  derived-only rows carry 0.0 and are skipped) must satisfy
+  ``new <= old * tolerance``. The tolerance absorbs shared-runner noise on
+  first-load paths; a genuine pipeline regression blows through it.
+* **Trajectory asserts** — the epoch-resident runtime's headline claims:
+  repeat ``stable-mmap-cached`` loads at least 5x faster than the previous
+  PR's ``stable-mmap``; ``indexed`` beating ``dynamic`` within this run;
+  ``lazy`` at least 2x faster than the previous PR (per-closure binding
+  cache + shared payload mmaps).
+
+Exits non-zero when any check fails (CI runs it as a soft gate, same
+rationale as the PR 3 gate: a slow shared runner must not silently block
+merges, but a regression is loudly visible in the job summary).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# rows whose us_per_call is a placeholder for a derived metric
+MIN_REAL_US = 1e-6
+
+
+def compare(new: dict, old: dict, tolerance: float) -> list[str]:
+    failures: list[str] = []
+    shared = sorted(
+        k
+        for k in new.keys() & old.keys()
+        if new[k] > MIN_REAL_US and old[k] > MIN_REAL_US
+    )
+    print(f"{'key':40s} {'old_us':>12s} {'new_us':>12s} {'ratio':>7s}")
+    for k in shared:
+        ratio = new[k] / old[k]
+        flag = "" if ratio <= tolerance else "  << REGRESSION"
+        print(f"{k:40s} {old[k]:12.1f} {new[k]:12.1f} {ratio:6.2f}x{flag}")
+        if ratio > tolerance:
+            failures.append(
+                f"{k}: {new[k]:.1f}us vs {old[k]:.1f}us "
+                f"({ratio:.2f}x > {tolerance:.2f}x tolerance)"
+            )
+    return failures
+
+
+def trajectory_asserts(new: dict, old: dict) -> list[str]:
+    failures: list[str] = []
+
+    def check(label: str, ok: bool) -> None:
+        print(("PASS " if ok else "FAIL ") + label)
+        if not ok:
+            failures.append(label)
+
+    def require(d: dict, key: str, which: str):
+        # a missing expected key must FAIL, not silently skip: a renamed
+        # row or unregistered strategy would otherwise pass the gate
+        # vacuously with its headline claim unenforced
+        v = d.get(key)
+        if v is None:
+            check(f"{which} has required key {key}", False)
+        return v
+
+    cached = require(new, "smoke/stable-mmap-cached", "new")
+    old_mmap = require(old, "smoke/stable-mmap", "old")
+    if cached is not None and old_mmap is not None:
+        check(
+            f"stable-mmap-cached ({cached:.1f}us) >=5x faster than previous "
+            f"stable-mmap ({old_mmap:.1f}us)",
+            cached * 5 <= old_mmap,
+        )
+    new_idx = require(new, "smoke/indexed", "new")
+    new_dyn = require(new, "smoke/dynamic", "new")
+    if new_idx is not None and new_dyn is not None:
+        check(
+            f"indexed ({new_idx:.1f}us) beats dynamic ({new_dyn:.1f}us)",
+            new_idx < new_dyn,
+        )
+    new_lazy = require(new, "smoke/lazy", "new")
+    old_lazy = require(old, "smoke/lazy", "old")
+    if new_lazy is not None and old_lazy is not None:
+        check(
+            f"lazy ({new_lazy:.1f}us) >=2x faster than previous "
+            f"({old_lazy:.1f}us)",
+            new_lazy * 2 <= old_lazy,
+        )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new_json")
+    ap.add_argument("old_json")
+    ap.add_argument("--tolerance", type=float, default=1.25)
+    args = ap.parse_args()
+    with open(args.new_json) as f:
+        new = json.load(f)
+    with open(args.old_json) as f:
+        old = json.load(f)
+    failures = compare(new, old, args.tolerance)
+    failures += trajectory_asserts(new, old)
+    if failures:
+        print(f"\nperf gate FAILED ({len(failures)}):")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

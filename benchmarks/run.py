@@ -6,12 +6,15 @@
 registered load strategy timed by name through ``Workspace.load`` (so a
 newly registered strategy shows up without touching this file), asserting
 that the baked-arena ``stable-mmap`` path beats both ``stable`` and the
-``dynamic`` baseline and that the epoch path writes zero journal bytes.
+``dynamic`` baseline, that the epoch-resident ``stable-mmap-cached`` path
+beats ``stable-mmap`` (repeat loads are EpochCache hits), that ``indexed``
+beats ``dynamic``, and that the epoch path writes zero journal bytes.
 Use it in CI to prove the benchmark path stays runnable.
 
-Both ``--smoke`` and ``--fast`` also write ``BENCH_3.json``
+Both ``--smoke`` and ``--fast`` also write ``BENCH_4.json``
 ({name: us_per_call}) — the machine-readable perf trajectory, one file per
-PR, uploaded as a CI artifact and soft-gated there.
+PR, uploaded as a CI artifact and gated against the committed previous-PR
+file by ``benchmarks/perf_gate.py``.
 
 Emits ``name,us_per_call,derived`` CSV rows:
     microbench/*   — paper Fig. 1 & 7 (n x f grid, dynamic vs stable)
@@ -26,7 +29,7 @@ from __future__ import annotations
 
 import sys
 
-BENCH_JSON = "BENCH_3.json"  # perf trajectory of this PR's benchmark pass
+BENCH_JSON = "BENCH_4.json"  # perf trajectory of this PR's benchmark pass
 
 
 def smoke() -> None:
@@ -80,6 +83,31 @@ def smoke() -> None:
     emit("smoke/mmap_speedup_vs_dynamic", 0.0,
          f"{RESULTS['smoke/dynamic'] / max(mmap_us, 1e-9):.2f}x")
 
+    # the epoch-resident cached load (repeat = EpochCache hit: no stat, no
+    # mmap, no per-slot view building) must beat even the per-load CoW mmap
+    cached_us = RESULTS["smoke/stable-mmap-cached"]
+    assert cached_us < mmap_us, (
+        f"stable-mmap-cached ({cached_us:.1f}us) not faster than "
+        f"stable-mmap ({mmap_us:.1f}us)"
+    )
+    emit("smoke/cached_speedup_vs_mmap", 0.0,
+         f"{mmap_us / max(cached_us, 1e-9):.2f}x")
+
+    # the per-closure cached table makes repeat indexed loads skip resolve
+    # + table build — indexed must no longer lose to the ld.so baseline
+    assert RESULTS["smoke/indexed"] < RESULTS["smoke/dynamic"], (
+        f"indexed ({RESULTS['smoke/indexed']:.1f}us) not faster than "
+        f"dynamic ({RESULTS['smoke/dynamic']:.1f}us)"
+    )
+
+    # fleet warm-start: one call preloads the world; mid-epoch it is all
+    # cache hits, so the wall time is the amortized floor per fleet
+    def warm():
+        ws.warmup(workers=2)
+
+    mean, *_ = timeit(warm, warmup=1, trials=3)
+    emit("smoke/warmup_fleet", mean, f"apps={1}")
+
     rep = ws.explain(app.name)
     emit("smoke/explain", 0.0,
          f"source={rep.source};relocations={rep.relocations}")
@@ -104,15 +132,27 @@ def smoke() -> None:
 
     # incremental re-materialization: re-publishing identical content leaves
     # the app's closure hash unchanged, so the commit reuses its table and
-    # baked arena outright (materialized=0, reused=1)
-    with ws.management() as tx:
-        for obj, payload in bundles[:1]:
-            tx.publish(obj, payload)
-    mat = tx.materialization
+    # baked arena outright (materialized=0, reused=1). Averaged over a few
+    # commits: a single wall_s sample is too noisy for the perf gate.
+    mats = []
+    for _ in range(3):
+        with ws.management() as tx:
+            for obj, payload in bundles[:1]:
+                tx.publish(obj, payload)
+        mats.append(tx.materialization)
+    mat = mats[-1]
     assert mat.tables_reused >= 1, "identical republish must reuse tables"
-    emit("smoke/rematerialize", mat.wall_s,
+    emit("smoke/rematerialize", sum(m.wall_s for m in mats) / len(mats),
          f"materialized={len(mat.materialized)};reused={mat.tables_reused};"
          f"bake_ms={mat.bake_s * 1e3:.1f}")
+
+    # store GC: explicit-only reclamation of dead (app, closure) entries.
+    # Nothing is orphaned here (the republish reused every key), so this
+    # asserts gc never touches live entries — loads still work after it.
+    g = ws.gc()
+    emit("smoke/gc", 0.0,
+         f"removed={g.removed_files};bytes={g.bytes_reclaimed}")
+    ws.load(app.name, strategy="stable-mmap-cached")
     ws.close()
 
 

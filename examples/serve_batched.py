@@ -38,7 +38,7 @@ N_PROCS = 8
 rng = np.random.default_rng(0)
 prompts = rng.integers(0, cfg.vocab_size, (4, 24), dtype=np.int32)
 
-for strategy in ("dynamic", "stable"):
+for strategy in ("dynamic", "stable", "stable-mmap-cached"):
     t0 = time.perf_counter()
     startups = 0.0
     for _ in range(N_PROCS):
@@ -46,23 +46,39 @@ for strategy in ("dynamic", "stable"):
         startups += img.stats.startup_s
     load_wall = time.perf_counter() - t0
     print(
-        f"{strategy:8s}: {N_PROCS} process starts, "
+        f"{strategy:18s}: {N_PROCS} process starts, "
         f"aggregate weight-resolution+load {startups*1e3:7.1f}ms "
         f"(wall {load_wall*1e3:7.1f}ms)"
     )
 
-# serve one batch to show the loaded image is the real thing
+# one-call fleet warm-start: after this, every replica load is a cache hit
+rep = ws.warmup(workers=4)
+print(
+    f"warmup: {len(rep.names)} app(s) in {rep.wall_s*1e3:.1f}ms "
+    f"(hits={rep.cache_hits}, fills={rep.cache_fills})"
+)
+
+# serve one batch to show the loaded image is the real thing; replicas
+# built via from_workspace share ONE host-side arena mapping
 import jax.numpy as jnp
 
-img = ws.load("serve:mamba", strategy="stable")
-live = {}
-for name in models.param_specs(cfg):
-    live[name] = jnp.asarray(
-        np.stack([img[f"{name}[{l}]"] for l in range(cfg.num_layers)])
-        if name.startswith("blocks/")
-        else img[name]
-    )
-engine = ServeEngine(cfg, live, cache_len=48)
+
+def stack_params(img):
+    live = {}
+    for name in models.param_specs(cfg):
+        live[name] = jnp.asarray(
+            np.stack([img[f"{name}[{l}]"] for l in range(cfg.num_layers)])
+            if name.startswith("blocks/")
+            else img[name]
+        )
+    return live
+
+
+engine = ServeEngine.from_workspace(
+    cfg, ws, "serve:mamba", cache_len=48, param_builder=stack_params
+)
+print(f"replica load: {engine.load_stats.strategy} "
+      f"cache_hit={engine.load_stats.cache_hit}")
 out, stats = engine.generate(prompts, 8)
 print(
     f"served batch={prompts.shape[0]}: prefill {stats.prefill_s*1e3:.0f}ms, "

@@ -19,11 +19,15 @@ Engine-room surface:
                                    key that makes re-materialization
                                    incremental)
     RelocationTable, PageTable   — materialized tables (+ TPU page compilation)
+    EpochCache, process_cache    — the epoch-resident runtime: process-wide
+                                   shared-arena / index / binding cache,
+                                   flash-invalidated at every end_mgmt
     inspector, interpose         — observability + fine-grained rebinding
     CompileCache                 — AOT executable materialization
 """
 
 from .compile_cache import CompileCache, CompileStats, cache_key
+from .epoch_cache import ArenaEntry, CacheStats, EpochCache, process_cache
 from .errors import (
     ImmutableEpochError,
     ModeError,
@@ -55,7 +59,7 @@ from .objects import (
     align_up,
     make_object,
 )
-from .registry import Registry, World
+from .registry import GcReport, Registry, World
 from .relocation import (
     PageTable,
     RelocationTable,
@@ -67,9 +71,14 @@ from .resolver import DynamicResolver, Relocation, dependency_closure, np_dtype
 from .symbol_index import IndexedResolver, SymbolIndex, closure_hash
 
 __all__ = [
+    "ArenaEntry",
+    "CacheStats",
     "CompileCache",
     "CompileStats",
+    "EpochCache",
+    "GcReport",
     "cache_key",
+    "process_cache",
     "ImmutableEpochError",
     "ModeError",
     "PayloadIntegrityError",

@@ -1,0 +1,296 @@
+"""Process-wide epoch-resident cache: map each arena once per epoch.
+
+PR 3 made a single load one copy-on-write mmap; this module makes the
+*second and every later* load of the same (app, closure) a dictionary hit.
+The paper's thesis — relocation work belongs at the epoch boundary, not on
+each execution — is pushed one rung further: within an epoch, everything a
+load needs that is constant for the epoch (the parsed sidecar, the shared
+read-only arena mapping, the prebuilt slot views, the per-closure symbol
+index, the lazy-binding map, the provider payload mmaps) is resolved once
+per process and then served from memory.
+
+Design:
+
+* **One cache per process** (``process_cache()``): serving replicas, test
+  fixtures, and benchmark sweeps in the same interpreter all share it, so N
+  same-process replicas of an application share ONE read-only arena mapping
+  (the MAP_SHARED analogue) instead of N private ones.
+
+* **Keys are content-addressed and root-scoped.** Entries are keyed by
+  ``(registry root, app hash, closure hash)`` (plus a section name), so two
+  workspaces over different stores never alias, while repeated loads within
+  a store always do.
+
+* **Epoch-token invalidation.** The cache carries a monotonically
+  increasing epoch token; every ``Manager.end_mgmt`` (any workspace in the
+  process) and every ``Workspace.gc`` bumps it. Entries record the token
+  they were filled under and are treated as misses once it moves on — one
+  integer compare flash-invalidates the whole cache without walking it.
+  Content-addressed keys make stale *data* impossible; the token exists so
+  that entries whose backing files were rewritten, repaired, or garbage-
+  collected at a management boundary are re-validated against disk instead
+  of trusted forever.
+
+* **Lock-free reads, double-checked-lock fills.** A hit is a plain dict
+  lookup plus one integer compare (GIL-atomic; no lock acquired). A miss
+  takes a per-key fill lock, re-checks, builds, and publishes — concurrent
+  loads of the same app during a fleet warm-start perform exactly one fill,
+  while fills of *different* keys proceed in parallel.
+
+Sections in use (see ``core/executor.py``):
+
+    ``arena``         — ``ArenaEntry``: parsed sidecar + shared read-only
+                        arena mapping + prebuilt slot views (stable-mmap /
+                        stable-mmap-cached).
+    ``symbol-index``  — per-closure ``SymbolIndex`` (indexed resolution;
+                        replaces the Executor-private index cache).
+    ``indexed-table`` — the ``RelocationTable`` an indexed load resolves,
+                        so repeat indexed loads skip resolve + table build.
+    ``lazy-bindings`` — per-closure symbol -> Relocation maps, so second-
+                        and-later lazy binds are O(1) dict hits.
+    ``payload``       — provider payload mmaps, shared across loads.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class CacheStats:
+    """Counters for observability (all monotone; reads are racy-but-safe)."""
+
+    hits: int = 0
+    fills: int = 0
+    invalidations: int = 0   # epoch-token bumps
+    evictions: int = 0       # size-bound section clears
+
+    def snapshot(self) -> dict:
+        return {
+            "hits": self.hits,
+            "fills": self.fills,
+            "invalidations": self.invalidations,
+            "evictions": self.evictions,
+        }
+
+
+@dataclass
+class ArenaEntry:
+    """One baked arena, resident for the epoch.
+
+    ``shared_views()`` lazily maps the arena read-only ONCE per entry
+    (``mode="r"``) and prebuilds the slot views over it — handing them out
+    afterwards is a dict copy, not 128 slice/view/reshape calls. The build
+    is deferred so processes that only ever use ``stable-mmap`` (private
+    copy-on-write mappings per load, ``Executor._load_stable_mmap``) never
+    pay for — or keep resident — a shared mapping they don't read.
+    """
+
+    path: Path                       # .arena image on disk
+    meta: dict                       # parsed sidecar (staleness guards etc.)
+    slot_items: list                 # (name, offset, nbytes, dtype, shape)
+    arena_size: int
+    kernels: dict
+    sidecar_stat: tuple              # (mtime_ns, size) of the sidecar at fill
+    ro_arena: Optional[np.ndarray] = None          # built by shared_views()
+    tensors: Optional[dict[str, np.ndarray]] = None
+    _views_lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False
+    )
+
+    def shared_views(self) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+        """The shared read-only mapping + prebuilt slot views, built on
+        first use (double-checked: concurrent callers build once)."""
+        tensors = self.tensors
+        if tensors is not None:
+            return self.ro_arena, tensors
+        with self._views_lock:
+            if self.tensors is not None:
+                return self.ro_arena, self.tensors
+            if self.arena_size:
+                # .view(np.ndarray) drops the memmap subclass (mapping stays
+                # alive via .base): the per-slot views below skip numpy's
+                # memmap __array_finalize__, and writes still fault (the
+                # WRITEABLE flag carries over from mode="r").
+                ro = (
+                    np.memmap(self.path, dtype=np.uint8, mode="r")
+                    .view(np.ndarray)[: self.arena_size]
+                )
+            else:
+                ro = np.empty(0, dtype=np.uint8)
+            self.ro_arena = ro
+            self.tensors = {
+                name: ro[off : off + nbytes].view(dt).reshape(shape)
+                for name, off, nbytes, dt, shape in self.slot_items
+            }
+            return self.ro_arena, self.tensors
+
+
+class _SectionView:
+    """Dict-shaped view of one cache section (token checks included).
+
+    Exists so code written against a plain ``dict`` cache — notably
+    ``IndexedResolver(index_cache=...)`` and ``Executor._prune_caches`` —
+    can be pointed at the process-wide cache unchanged.
+    """
+
+    def __init__(self, cache: "EpochCache", section: str):
+        self._cache = cache
+        self._section = section
+
+    def get(self, key, default=None):
+        hit = self._cache.get(self._section, key)
+        return default if hit is None else hit
+
+    def __getitem__(self, key):
+        hit = self._cache.get(self._section, key)
+        if hit is None:
+            raise KeyError(key)
+        return hit
+
+    def __setitem__(self, key, value) -> None:
+        self._cache.put(self._section, key, value)
+
+    def __contains__(self, key) -> bool:
+        return self._cache.get(self._section, key) is not None
+
+    def __len__(self) -> int:
+        return len(self._cache._sections.get(self._section, {}))
+
+    def clear(self) -> None:
+        self._cache.clear_section(self._section)
+
+
+class EpochCache:
+    """Process-wide epoch-resident cache (see module docstring).
+
+    Thread-safety contract: ``get`` is lock-free (one dict read + one int
+    compare under the GIL); ``get_or_fill`` serializes builders per key via
+    double-checked locking, so concurrent loads fill each entry exactly
+    once; ``bump_epoch`` is a single atomic increment that invalidates
+    every entry at once (entries carry their fill token).
+    """
+
+    def __init__(self, *, max_section_entries: int = 512):
+        self._mu = threading.Lock()              # guards fill-lock table
+        self._fill_locks: dict = {}
+        self._sections: dict[str, dict] = {}
+        self._token = 0
+        self.max_section_entries = max_section_entries
+        self.stats = CacheStats()
+
+    # ---------------------------------------------------------------- token
+    @property
+    def token(self) -> int:
+        """The current epoch token. Entries filled under an older token are
+        invisible to every read."""
+        return self._token
+
+    def bump_epoch(self) -> int:
+        """Flash-invalidate the whole cache (one integer increment).
+
+        Called by ``Manager.end_mgmt`` — any management commit in the
+        process — and by ``Workspace.gc`` after deleting store entries.
+        Every entry is stale by definition once the token moves, so the
+        sections and fill-lock table are dropped too: dead arena mappings
+        (potentially gigabytes, possibly of unlinked files) must not stay
+        resident until a size-bound eviction. A fill racing this bump
+        publishes under its pre-bump token and is simply invisible.
+        """
+        with self._mu:
+            self._token += 1
+            self._sections.clear()
+            self._fill_locks.clear()
+            self.stats.invalidations += 1
+            return self._token
+
+    # ---------------------------------------------------------------- reads
+    def get(self, section: str, key) -> Optional[Any]:
+        """Lock-free read: returns the entry or None (miss / stale token)."""
+        e = self._sections.get(section, {}).get(key)
+        if e is not None and e[0] == self._token:
+            self.stats.hits += 1
+            return e[1]
+        return None
+
+    # ---------------------------------------------------------------- fills
+    def put(self, section: str, key, value) -> None:
+        """Publish ``value`` under the *current* token."""
+        self._publish(section, key, value, self._token)
+
+    def get_or_fill(self, section: str, key, build: Callable[[], Any]) -> Any:
+        """The double-checked-lock fill path.
+
+        The token is captured *before* ``build`` runs: if a management
+        commit lands mid-build, the published entry is born stale and the
+        next read refills — a cached entry can never outlive the epoch it
+        was built in.
+        """
+        hit = self.get(section, key)
+        if hit is not None:
+            return hit
+        with self._fill_lock(section, key):
+            hit = self.get(section, key)
+            if hit is not None:
+                return hit
+            token = self._token
+            value = build()
+            self._publish(section, key, value, token)
+            self.stats.fills += 1
+            return value
+
+    def _publish(self, section: str, key, value, token: int) -> None:
+        sec = self._sections.setdefault(section, {})
+        if len(sec) >= self.max_section_entries:
+            # Size bound, not LRU: entries rebuild cheaply on the next miss
+            # and real worlds have far fewer live keys than the bound.
+            sec.clear()
+            self.stats.evictions += 1
+        sec[key] = (token, value)
+
+    def invalidate(self, section: str, key) -> None:
+        """Drop one entry (e.g. its backing file failed re-validation)."""
+        self._sections.get(section, {}).pop(key, None)
+
+    def clear_section(self, section: str) -> None:
+        self._sections.pop(section, None)
+
+    def clear(self) -> None:
+        """Drop everything (tests; equivalent to a token bump + walk)."""
+        with self._mu:
+            self._sections.clear()
+            self._fill_locks.clear()
+
+    # ------------------------------------------------------------- plumbing
+    def section(self, name: str) -> _SectionView:
+        """A dict-shaped view of one section (for dict-cache call sites)."""
+        return _SectionView(self, name)
+
+    def _fill_lock(self, section: str, key) -> threading.Lock:
+        with self._mu:
+            return self._fill_locks.setdefault(
+                (section, key), threading.Lock()
+            )
+
+    def entry_count(self, section: str) -> int:
+        """Live (current-token) entries in a section (tests/observability)."""
+        tok = self._token
+        return sum(
+            1 for e in self._sections.get(section, {}).values() if e[0] == tok
+        )
+
+
+# The process-wide instance. Every Executor defaults to it, which is what
+# makes N same-process replicas share one arena mapping; tests that need
+# isolation construct their own EpochCache and pass it down.
+_PROCESS_CACHE = EpochCache()
+
+
+def process_cache() -> EpochCache:
+    """The process-wide ``EpochCache`` singleton."""
+    return _PROCESS_CACHE

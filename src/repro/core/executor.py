@@ -26,9 +26,21 @@ payload copy.  The sidecar carries ``check_fresh``-style staleness guards
 (app hash + closure hash), so a baked arena can never be applied under the
 wrong world.
 
+**The epoch-resident runtime** (``core/epoch_cache.py``) amortizes what is
+left: every Executor shares the process-wide ``EpochCache``, so the parsed
+sidecar, the read-only arena mapping, the prebuilt slot views, the
+per-closure symbol index, the indexed load's resolved table, the lazy
+binding map, and the provider payload mmaps are each produced once per
+(app, closure) per epoch and then served as dictionary hits — flash-
+invalidated by the epoch token any ``end_mgmt`` bumps.  ``load_all``
+batch-preloads a whole world in parallel (fleet warm-start is one call).
+
 Loading strategies exposed for the benchmarks:
   ``stable``      — table-driven (the paper's contribution).
   ``stable-mmap`` — baked arena, one CoW mmap (beyond-paper fast path).
+  ``stable-mmap-cached`` — epoch-resident: repeat loads return prebuilt
+                    read-only views over one process-shared mapping (the
+                    amortized floor; tensors are immutable by design).
   ``dynamic``     — traditional dynamic linking (baseline).
   ``indexed``     — dynamic-shaped load over the symbol index (management).
   ``lazy``        — dynamic linking with per-symbol first-use faulting (the
@@ -48,6 +60,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from .epoch_cache import ArenaEntry, EpochCache, process_cache
 from .errors import StaleTableError, UnknownObjectError
 from .manager import Manager
 from .objects import PAGE_BYTES, ObjectKind, RelocType, StoreObject, align_up
@@ -81,6 +94,7 @@ class LoadStats:
     relocations: int = 0
     probes: int = 0             # hash probes performed (search work)
     bytes_loaded: int = 0       # bytes copied (0 for mmap-backed loads)
+    cache_hit: bool = False     # served from the process EpochCache
 
     @property
     def startup_s(self) -> float:
@@ -144,9 +158,22 @@ class LazyImage:
     Every access goes through ``__getitem__`` — the indirection is the GOT
     jump; the first-access slow path is the PLT resolver trampoline. Eager
     stable loading eliminates both (§6.2: "disable it!").
+
+    ``bindings`` is the per-closure binding cache (an ``EpochCache``
+    section entry shared by every lazy image of the same (app, closure)
+    within the epoch): the first image pays the resolver trampoline per
+    symbol, every later image binds the same symbol with one dict hit —
+    the amortized-PLT behaviour real loaders get from a warm GOT.
     """
 
-    def __init__(self, executor: "Executor", app: StoreObject, world: World):
+    def __init__(
+        self,
+        executor: "Executor",
+        app: StoreObject,
+        world: World,
+        *,
+        bindings: Optional[dict] = None,
+    ):
         self._executor = executor
         self._app = app
         self._world = world
@@ -154,23 +181,30 @@ class LazyImage:
         self._scope = None
         self._cache: dict[str, object] = {}   # ndarray, or str for kernels
         self._refs = {r.name: r for r in app.refs}
+        # symbol -> Relocation, shared across images of this closure
+        self._bindings = bindings if bindings is not None else {}
         self.stats = LoadStats(strategy="lazy")
 
     def __getitem__(self, name: str):
         hit = self._cache.get(name)
         if hit is not None:
             return hit
-        t0 = time.perf_counter()
-        if self._scope is None:
-            from .resolver import dependency_closure
-
-            self._scope = dependency_closure(self._app, self._world)
         ref = self._refs.get(name)
         if ref is None:
             raise UnknownObjectError(f"{self._app.name} has no symbol {name!r}")
-        reloc = self._resolver.resolve_ref(ref, self._app, self._scope)
-        self.stats.resolve_s += time.perf_counter() - t0
-        self.stats.probes = self._resolver.probe_count
+        reloc = self._bindings.get(name)
+        if reloc is None:
+            t0 = time.perf_counter()
+            if self._scope is None:
+                from .resolver import dependency_closure
+
+                self._scope = dependency_closure(self._app, self._world)
+            reloc = self._resolver.resolve_ref(ref, self._app, self._scope)
+            self.stats.resolve_s += time.perf_counter() - t0
+            self.stats.probes = self._resolver.probe_count
+            self._bindings[name] = reloc
+        else:
+            self.stats.cache_hit = True
         if ref.dtype == "kernel":
             # kernel symbols bind to entry points, not tensor bytes; an
             # unresolved weak one binds the explicit no-op entry instead of
@@ -207,6 +241,7 @@ class Executor:
         table_format: str = "raw",
         bake_arenas: bool = True,
         materialize_workers: int = 1,
+        epoch_cache: Optional[EpochCache] = None,
     ):
         assert loader in ("paged", "rows")
         assert table_format in ("raw", "npz")
@@ -228,19 +263,23 @@ class Executor:
         # Fan re-materializations out over a thread pool (>1). Tables are
         # deterministic per app, so parallel == serial byte-for-byte.
         self.materialize_workers = max(1, int(materialize_workers))
-        # scope-key -> SymbolIndex, shared across materializations so apps
-        # with the same dependency closure resolve against one index.
-        self._index_cache: dict = {}
+        # The epoch-resident runtime: arena mappings, symbol indexes,
+        # indexed tables, lazy bindings, and payload mmaps all live here,
+        # process-wide by default (N same-process replicas share one
+        # mapping) and flash-invalidated by any end_mgmt's token bump.
+        self.epoch_cache = epoch_cache if epoch_cache is not None else process_cache()
+        # scope-key -> SymbolIndex, shared across materializations AND
+        # processes-wide via the EpochCache, so apps with the same
+        # dependency closure resolve against one index (epoch-invalidated).
+        self._index_cache = self.epoch_cache.section("symbol-index")
         # (app hash, world hash) -> closure hash; content-addressed, never
         # stale (a changed binding changes the world hash).
         self._closure_key_cache: dict[tuple[str, str], str] = {}
         self.last_materialization: Optional[MaterializationResult] = None
-        # (path, mtime_ns, size) -> parsed arena sidecar (+ prebuilt slot
-        # list): warm fleet starts skip the JSON parse; any rewrite of the
-        # file changes the stat key and invalidates the entry.
-        self._sidecar_cache: dict = {}
-        # Wire the Manager's end_mgmt hook (Figure 5's dashed control edge).
+        # Wire the Manager's end_mgmt hook (Figure 5's dashed control edge)
+        # and point its commit-time invalidation at our cache.
         manager.on_materialize = self.materialize_all
+        manager.epoch_cache = self.epoch_cache
 
     # ---------------------------------------------------------- materialize
     def closure_key(self, app: StoreObject, world: World) -> str:
@@ -301,14 +340,24 @@ class Executor:
         t0 = time.perf_counter()
         result = MaterializationResult(epoch=epoch, workers=self.materialize_workers)
         todo: list[tuple[StoreObject, str]] = []
+        # one readdir instead of 3 stats per app: the reuse check is pure
+        # existence, and a commit with a large fleet would otherwise pay
+        # O(apps) syscalls just to discover nothing changed
+        tables_dir = self.registry.root / "tables"
+        existing = (
+            {p.name for p in tables_dir.iterdir()} if tables_dir.exists() else set()
+        )
         for app in world.applications():
             key = self.closure_key(app, world)
-            have_table = self.registry.table_path(app.content_hash, key).exists()
+            have_table = (
+                self.registry.table_path(app.content_hash, key).name in existing
+            )
             # a bake is only reusable when BOTH halves survived (a crash
             # between the arena and sidecar renames leaves it half-baked)
             have_arena = not self.bake_arenas or (
-                self.registry.arena_path(app.content_hash, key).exists()
-                and self.registry.arena_meta_path(app.content_hash, key).exists()
+                self.registry.arena_path(app.content_hash, key).name in existing
+                and self.registry.arena_meta_path(app.content_hash, key).name
+                in existing
             )
             if have_table and have_arena:
                 result.reused.append(app.name)
@@ -337,16 +386,15 @@ class Executor:
         """Keep the in-memory caches from growing with publish history.
 
         Closure keys for superseded worlds can never be asked for again;
-        the index and sidecar caches are simply bounded (entries rebuild
-        cheaply on the next miss)."""
+        the shared symbol-index section is simply bounded (entries rebuild
+        cheaply on the next miss). Everything else on the EpochCache is
+        epoch-token invalidated by the commit that triggered this pass."""
         wh = world.world_hash
         self._closure_key_cache = {
             k: v for k, v in self._closure_key_cache.items() if k[1] == wh
         }
         if len(self._index_cache) > 64:
             self._index_cache.clear()
-        if len(self._sidecar_cache) > 256:
-            self._sidecar_cache.clear()
 
     # ----------------------------------------------------------------- load
     def load(
@@ -372,6 +420,38 @@ class Executor:
         fn = resolve_strategy(strategy, mode=self.manager.mode)
         return fn(self, app, world)
 
+    def load_all(
+        self,
+        names=None,
+        *,
+        strategy: str = "stable-mmap-cached",
+        workers: int = 4,
+        world: Optional[World] = None,
+    ) -> dict:
+        """Batch-preload applications in parallel (fleet warm-start).
+
+        ``names=None`` loads every application of the current world. Loads
+        fan out over ``workers`` threads; the EpochCache's per-key fill
+        locks guarantee each (app, closure) arena is mapped exactly once no
+        matter how many threads race on it, so warming a whole fleet at
+        epoch start is one call against one world snapshot. Returns
+        ``{name: image}``.
+        """
+        world = world or self.manager.world()
+        if names is None:
+            names = [a.name for a in world.applications()]
+        names = list(names)
+
+        def _one(name: str):
+            return self.load(name, strategy=strategy, world=world)
+
+        if workers > 1 and len(names) > 1:
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                images = list(pool.map(_one, names))
+        else:
+            images = [_one(n) for n in names]
+        return dict(zip(names, images))
+
     # ------------------------------------------------------------- internals
     def _load_stable(self, app: StoreObject, world: World) -> LoadedImage:
         stats = LoadStats(strategy="stable")
@@ -395,17 +475,11 @@ class Executor:
         image = self._apply_table(app, table, stats)
         return image
 
-    def _load_stable_mmap(self, app: StoreObject, world: World) -> LoadedImage:
-        """Baked-arena epoch load: one copy-on-write mmap + view building.
-
-        No symbol search, no table parse, no payload copy — the relocation
-        work happened at ``end_mgmt`` (``_bake_arena``).  ``mode="c"`` maps
-        the arena copy-on-write: callers may mutate tensors freely without
-        touching the baked image or other loads.
-        """
-        stats = LoadStats(strategy="stable-mmap")
-        t0 = time.perf_counter()
-        key = self.closure_key(app, world)
+    def _build_arena_entry(self, app: StoreObject, key: str) -> ArenaEntry:
+        """Fill path of the epoch-resident arena cache: parse the sidecar
+        and verify the ``check_fresh``-style staleness guards. The shared
+        read-only mapping + prebuilt slot views build lazily on the first
+        ``stable-mmap-cached`` load (``ArenaEntry.shared_views``)."""
         apath = self.registry.arena_path(app.content_hash, key)
         mpath = self.registry.arena_meta_path(app.content_hash, key)
         if not (apath.exists() and mpath.exists()):
@@ -414,25 +488,8 @@ class Executor:
                 "run a management cycle with bake_arenas=True"
             )
         st = mpath.stat()
-        ck = (str(mpath), st.st_mtime_ns, st.st_size)
-        hit = self._sidecar_cache.get(ck)
-        if hit is None:
-            meta = json.loads(mpath.read_text())
-            slot_items = [
-                (
-                    name,
-                    int(s["offset"]),
-                    int(s["nbytes"]),
-                    np_dtype(s["dtype"]),
-                    tuple(s["shape"]),
-                )
-                for name, s in meta["slots"].items()
-            ]
-            self._sidecar_cache[ck] = (meta, slot_items)
-        else:
-            meta, slot_items = hit
-        # check_fresh-style staleness guards: a baked arena can never be
-        # applied under the wrong world/app
+        meta = json.loads(mpath.read_text())
+        # a baked arena can never be applied under the wrong world/app
         if meta.get("closure_hash") != key:
             raise StaleTableError(
                 f"baked arena for closure {str(meta.get('closure_hash'))[:12]} "
@@ -440,26 +497,124 @@ class Executor:
             )
         if meta.get("app_hash") != app.content_hash:
             raise StaleTableError("baked arena belongs to a different application")
+        slot_items = [
+            (
+                name,
+                int(s["offset"]),
+                int(s["nbytes"]),
+                np_dtype(s["dtype"]),
+                tuple(s["shape"]),
+            )
+            for name, s in meta["slots"].items()
+        ]
+        return ArenaEntry(
+            path=apath,
+            meta=meta,
+            slot_items=slot_items,
+            arena_size=int(meta["arena_size"]),
+            kernels=dict(meta.get("kernels", {})),
+            sidecar_stat=(st.st_mtime_ns, st.st_size),
+        )
+
+    def _arena_entry(
+        self, app: StoreObject, key: str, *, validate_stat: bool
+    ) -> tuple[ArenaEntry, bool]:
+        """The (app, closure) arena entry, filled at most once per epoch.
+
+        ``validate_stat=True`` re-stats the sidecar on every hit (one
+        syscall) so an out-of-band rewrite is caught immediately — the
+        ``stable-mmap`` contract. The cached strategy passes False and
+        trusts the epoch token alone: like a running process whose ELF
+        mappings survive an unlink, the entry stays valid until the next
+        management boundary. Returns ``(entry, was_hit)``.
+        """
+        ckey = (str(self.registry.root), app.content_hash, key)
+        entry = self.epoch_cache.get("arena", ckey)
+        hit = entry is not None
+        if hit and validate_stat:
+            try:
+                st = self.registry.arena_meta_path(app.content_hash, key).stat()
+                stale = (st.st_mtime_ns, st.st_size) != entry.sidecar_stat
+            except OSError:
+                stale = True
+            if stale:
+                self.epoch_cache.invalidate("arena", ckey)
+                entry, hit = None, False
+        if entry is None:
+            entry = self.epoch_cache.get_or_fill(
+                "arena", ckey, lambda: self._build_arena_entry(app, key)
+            )
+        return entry, hit
+
+    def _load_stable_mmap(self, app: StoreObject, world: World) -> LoadedImage:
+        """Baked-arena epoch load: one copy-on-write mmap + view building.
+
+        No symbol search, no table parse, no payload copy — the relocation
+        work happened at ``end_mgmt`` (``_bake_arena``) and the sidecar
+        parse at the epoch's first load (EpochCache).  ``mode="c"`` maps
+        the arena copy-on-write: callers may mutate tensors freely without
+        touching the baked image or other loads.
+        """
+        stats = LoadStats(strategy="stable-mmap")
+        t0 = time.perf_counter()
+        key = self.closure_key(app, world)
+        entry, stats.cache_hit = self._arena_entry(app, key, validate_stat=True)
         stats.table_load_s = time.perf_counter() - t0
 
         t1 = time.perf_counter()
-        arena_size = int(meta["arena_size"])
-        if arena_size:
-            arena = np.memmap(apath, dtype=np.uint8, mode="c")[:arena_size]
+        if entry.arena_size:
+            # plain-ndarray view of the CoW mapping: mutability and privacy
+            # come from mmap mode="c"; dropping the subclass makes the 100+
+            # per-slot views below plain (cheap) ndarray slices
+            arena = (
+                np.memmap(entry.path, dtype=np.uint8, mode="c")
+                .view(np.ndarray)[: entry.arena_size]
+            )
         else:
             arena = np.empty(0, dtype=np.uint8)
         tensors = {
             name: arena[off : off + nbytes].view(dt).reshape(shape)
-            for name, off, nbytes, dt, shape in slot_items
+            for name, off, nbytes, dt, shape in entry.slot_items
         }
         stats.io_s = time.perf_counter() - t1
-        stats.relocations = int(meta.get("relocations", 0))
+        stats.relocations = int(entry.meta.get("relocations", 0))
         stats.bytes_loaded = 0  # mapped, not copied
         return LoadedImage(
             app=app,
             arena=arena,
             tensors=tensors,
-            kernels=dict(meta.get("kernels", {})),
+            kernels=dict(entry.kernels),
+            table=None,
+            stats=stats,
+        )
+
+    def _load_stable_mmap_cached(
+        self, app: StoreObject, world: World
+    ) -> LoadedImage:
+        """Epoch-resident load: the amortized floor of the whole pipeline.
+
+        The first load of an epoch fills the shared arena entry (read-only
+        mapping + prebuilt views); every later load is a dict hit plus two
+        shallow dict copies — no stat, no mmap, no per-slot view building.
+        The returned tensors are READ-ONLY views over the one process-wide
+        mapping (numpy refuses writes); callers that must mutate use
+        ``stable-mmap``, which pays for a private copy-on-write mapping.
+        """
+        stats = LoadStats(strategy="stable-mmap-cached")
+        t0 = time.perf_counter()
+        key = self.closure_key(app, world)
+        entry, stats.cache_hit = self._arena_entry(
+            app, key, validate_stat=False
+        )
+        ro_arena, tensors = entry.shared_views()
+        stats.table_load_s = time.perf_counter() - t0
+        stats.relocations = int(entry.meta.get("relocations", 0))
+        stats.bytes_loaded = 0  # shared mapping, nothing copied
+        return LoadedImage(
+            app=app,
+            arena=ro_arena,
+            tensors=dict(tensors),
+            kernels=dict(entry.kernels),
             table=None,
             stats=stats,
         )
@@ -479,17 +634,38 @@ class Executor:
     def _load_indexed(self, app: StoreObject, world: World) -> LoadedImage:
         """Dynamic-shaped load that resolves through the symbol index —
         the management-time fallback (``auto`` maps here while the world is
-        in flux), sparing the O(refs x scope) ld.so probe."""
+        in flux), sparing the O(refs x scope) ld.so probe.
+
+        The resolved table is cached per (app, closure) on the EpochCache:
+        repeat indexed loads within one closure skip resolution AND table
+        construction outright — the work that made PR 3's ``indexed`` lose
+        to ``dynamic`` on repeat loads. A staged publish that changes the
+        app's closure changes the key, so management-time correctness is
+        untouched; any commit flash-invalidates via the epoch token.
+        """
         stats = LoadStats(strategy="indexed")
         t0 = time.perf_counter()
-        resolver = IndexedResolver(world, index_cache=self._index_cache)
-        relocations = resolver.resolve(app)
-        table = build_table(
-            app, relocations, world_hash=world.world_hash, epoch=self.manager.epoch
-        )
+        key = self.closure_key(app, world)
+        ckey = (str(self.registry.root), app.content_hash, key)
+        table = self.epoch_cache.get("indexed-table", ckey)
+        if table is not None:
+            stats.cache_hit = True
+        else:
+            def build():
+                resolver = IndexedResolver(world, index_cache=self._index_cache)
+                relocations = resolver.resolve(app)
+                stats.index_build_s = resolver.index_build_s
+                stats.probes = resolver.probe_count
+                return build_table(
+                    app,
+                    relocations,
+                    world_hash=world.world_hash,
+                    epoch=self.manager.epoch,
+                    closure_hash=key,
+                )
+
+            table = self.epoch_cache.get_or_fill("indexed-table", ckey, build)
         stats.resolve_s = time.perf_counter() - t0
-        stats.index_build_s = resolver.index_build_s
-        stats.probes = resolver.probe_count
         return self._apply_table(app, table, stats)
 
     def _bake_arena(self, app: StoreObject, table: RelocationTable, key: str) -> float:
@@ -528,8 +704,46 @@ class Executor:
         return time.perf_counter() - t0
 
     def _payload_mmap(self, store_name: str) -> np.ndarray:
+        """Read-only mapping of one provider payload, shared across loads.
+
+        Payloads are content-addressed and immutable, so the mapping is
+        cached on the EpochCache (token-checked like everything else) —
+        repeat loads, and especially per-symbol lazy faults, stop paying an
+        mmap open per read."""
+        ckey = (str(self.registry.root), store_name)
+        # pre-check before get_or_fill so the hot path (lazy faults call
+        # this per symbol) skips Path construction and lambda allocation
+        hit = self.epoch_cache.get("payload", ckey)
+        if hit is not None:
+            return hit
         path = self.registry.root / "objects" / store_name / "payload.bin"
-        return np.memmap(path, dtype=np.uint8, mode="r")
+        return self.epoch_cache.get_or_fill(
+            "payload",
+            ckey,
+            # plain-ndarray view: group reads slice payloads hundreds of
+            # times per load and must not pay memmap __array_finalize__
+            lambda: np.memmap(path, dtype=np.uint8, mode="r").view(np.ndarray),
+        )
+
+    def lazy_image(self, app: StoreObject, world: World) -> LazyImage:
+        """A ``LazyImage`` wired to the per-closure binding cache.
+
+        Images of the same (app, closure) share one symbol -> Relocation
+        map for the epoch, so second-and-later lazy binds are O(1) dict
+        hits instead of re-resolution. A broken staged closure (management
+        time, missing dependency) falls back to image-private bindings —
+        exactly the worlds where cached bindings could go stale mid-session.
+        """
+        try:
+            key = self.closure_key(app, world)
+            bindings = self.epoch_cache.get_or_fill(
+                "lazy-bindings",
+                (str(self.registry.root), app.content_hash, key),
+                dict,
+            )
+        except UnknownObjectError:
+            bindings = None
+        return LazyImage(self, app, world, bindings=bindings)
 
     def _apply_table(
         self, app: StoreObject, table: RelocationTable, stats: LoadStats

@@ -45,6 +45,7 @@ import time
 from enum import Enum
 from typing import Callable, Optional
 
+from .epoch_cache import process_cache
 from .errors import ImmutableEpochError, ModeError, UnknownObjectError
 from .objects import StoreObject
 from .registry import Registry, World
@@ -77,6 +78,12 @@ class Manager:
         # Optional journal sink (record/clear/last_seq); wired by Workspace.
         self.journal = None
         self._journal_seq = int(st.get("journal_seq", 0))
+        # The epoch-resident cache this manager's commits invalidate.
+        # Executor.__init__ re-points it at its own cache when a private
+        # one is injected (tests); the process cache is bumped either way.
+        self.epoch_cache = process_cache()
+        # Memoized world view (dropped by _persist on every state change).
+        self._world_view: Optional[World] = None
 
     # ------------------------------------------------------------- properties
     @property
@@ -88,10 +95,18 @@ class Manager:
         return self._epoch
 
     def world(self) -> World:
-        """The world view current processes should link against."""
-        if self._mode == Mode.MANAGEMENT:
-            return World(self.registry, self._staged)
-        return World(self.registry, self._world)
+        """The world view current processes should link against.
+
+        The view is memoized until the next state change (``_persist``
+        drops it): ``World`` snapshots its bindings at construction, so the
+        epoch load hot path stops paying a dict copy + world-hash digest
+        per load."""
+        if self._world_view is None:
+            bindings = (
+                self._staged if self._mode == Mode.MANAGEMENT else self._world
+            )
+            self._world_view = World(self.registry, bindings)
+        return self._world_view
 
     def committed_world(self) -> World:
         return World(self.registry, self._world)
@@ -203,6 +218,16 @@ class Manager:
             raise ModeError("end_mgmt outside management time")
         new_world = World(self.registry, dict(self._staged))
         new_epoch = self._epoch + 1
+        # Flash-invalidate the epoch-resident runtime BEFORE materializing:
+        # every index/table/arena entry the materialization pass fills is
+        # then born under the new epoch token instead of being cleared
+        # microseconds after it was built. Entries other threads fill from
+        # old-epoch files in the window are content-keyed, hence still
+        # correct if their closure survives the commit and unreachable if
+        # not. A materialization failure leaves only over-invalidation.
+        self.epoch_cache.bump_epoch()
+        if self.epoch_cache is not process_cache():
+            process_cache().bump_epoch()
         if materialize and self.on_materialize is not None:
             # Materialization happens while still formally in management time:
             # the Executor may run the resolution path to observe mappings.
@@ -235,6 +260,7 @@ class Manager:
             self.journal.clear()
 
     def _persist(self) -> None:
+        self._world_view = None  # bindings may have changed: drop the memo
         if self.journal is not None:
             self._journal_seq = int(self.journal.last_seq)
         self.registry.write_state(

@@ -38,8 +38,9 @@ import hashlib
 import json
 import os
 import tempfile
+from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Iterator, Optional
+from typing import Iterable, Iterator, Optional
 
 from .errors import PayloadIntegrityError, StateSchemaError, UnknownObjectError
 from .objects import StoreObject, payload_digest
@@ -175,6 +176,58 @@ class Registry:
     def journal_path(self) -> Path:
         return self.root / "journal.jsonl"
 
+    # --------------------------------------------------------------- garbage
+    def gc_stores(self, live_keys: Iterable[tuple[str, str]]) -> "GcReport":
+        """Delete ``tables/`` entries (materialized tables, baked arenas,
+        sidecars) whose (app hash, key) is not in ``live_keys``.
+
+        Stores grow monotonically: every closure change leaves the old
+        key's ``.npz``/``.arena``/``.arena.json`` behind. Callers compute
+        the live set from every world they still honour (committed, plus
+        staged during management) — see ``Workspace.gc``, which is the
+        only caller; nothing ever runs this implicitly during an epoch.
+        Unknown file shapes in ``tables/`` are left untouched.
+        """
+        live = {f"{app_hash[:16]}-{key[:16]}" for app_hash, key in live_keys}
+        report = GcReport()
+        tables = self.root / "tables"
+        for p in sorted(tables.iterdir()) if tables.exists() else []:
+            if not p.is_file():
+                continue
+            prefix = p.name.split(".", 1)[0]
+            # every store file is "<app16>-<key16>.<ext>"
+            if "-" not in prefix:
+                continue
+            if prefix in live:
+                report.kept_files += 1
+                continue
+            size = p.stat().st_size
+            p.unlink()
+            report.removed.append(p.name)
+            report.bytes_reclaimed += size
+        return report
+
+
+@dataclass
+class GcReport:
+    """What one ``gc_stores`` pass reclaimed."""
+
+    removed: list[str] = field(default_factory=list)
+    kept_files: int = 0
+    bytes_reclaimed: int = 0
+
+    @property
+    def removed_files(self) -> int:
+        return len(self.removed)
+
+    def summary(self) -> dict:
+        return {
+            "removed_files": self.removed_files,
+            "kept_files": self.kept_files,
+            "bytes_reclaimed": self.bytes_reclaimed,
+            "removed": sorted(self.removed),
+        }
+
 
 def migrate_state(state: dict) -> dict:
     """Upgrade a loaded state dict to the current schema (in memory only;
@@ -199,6 +252,7 @@ class World:
     def __init__(self, registry: Registry, bindings: dict[str, str]):
         self._registry = registry
         self._bindings = dict(bindings)  # name -> content hash
+        self._world_hash: Optional[str] = None  # bindings are frozen: memo
 
     def __contains__(self, name: str) -> bool:
         return name in self._bindings
@@ -225,11 +279,15 @@ class World:
 
     @property
     def world_hash(self) -> str:
-        h = hashlib.blake2b(digest_size=16)
-        h.update(
-            json.dumps(self._bindings, sort_keys=True, separators=(",", ":")).encode()
-        )
-        return h.hexdigest()
+        if self._world_hash is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(
+                json.dumps(
+                    self._bindings, sort_keys=True, separators=(",", ":")
+                ).encode()
+            )
+            self._world_hash = h.hexdigest()
+        return self._world_hash
 
     def applications(self) -> list[StoreObject]:
         from .objects import ObjectKind

@@ -15,7 +15,6 @@ import argparse
 import json
 import tempfile
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro import models
@@ -61,13 +60,14 @@ def main() -> None:
             tx.publish(bundle, payload)
             tx.publish(app)
 
-    image = ws.load(app_name, strategy=args.strategy)
-    if hasattr(image, "tensors"):
-        live = {n: jnp.asarray(a) for n, a in image.tensors.items()}
-    else:  # lazy image: every symbol faults in on first access
-        live = {n: jnp.asarray(image[n]) for n in image.keys()}
-    engine = ServeEngine(
-        cfg, live, cache_len=args.prompt_len + args.max_new
+    # Replica spin-up through the epoch-resident path: params load via the
+    # process-wide EpochCache, so same-process replicas share one mapping.
+    engine = ServeEngine.from_workspace(
+        cfg,
+        ws,
+        app_name,
+        strategy=args.strategy,
+        cache_len=args.prompt_len + args.max_new,
     )
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(
@@ -79,8 +79,9 @@ def main() -> None:
             {
                 "arch": cfg.name,
                 "epoch": ws.epoch,
-                "load_strategy": image.stats.strategy,
-                "load_s": round(image.stats.startup_s, 4),
+                "load_strategy": engine.load_stats.strategy,
+                "load_s": round(engine.load_stats.startup_s, 4),
+                "load_cache_hit": engine.load_stats.cache_hit,
                 "out_shape": list(out.shape),
                 "prefill_s": round(stats.prefill_s, 4),
                 "decode_s": round(stats.decode_s, 4),

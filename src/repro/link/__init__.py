@@ -44,7 +44,7 @@ from .strategies import (
     unregister_strategy,
 )
 from .transaction import ManagementTransaction
-from .workspace import Workspace
+from .workspace import WarmupReport, Workspace
 
 __all__ = [
     "Journal",
@@ -53,6 +53,7 @@ __all__ = [
     "ManagementTransaction",
     "PreviewReport",
     "RelocationDelta",
+    "WarmupReport",
     "Workspace",
     "WorldDiff",
     "available_strategies",

@@ -106,10 +106,32 @@ class Journal:
     the op that was in flight — and that op's staging is then also absent
     from the persisted ``pending`` snapshot, so journal and state cannot
     disagree by more than the crashing op.
+
+    **Rotation** (``rotate_bytes``): a very long management session — a
+    sweep republishing the same bundles thousands of times — grows the
+    journal without bound even though its *net* staging is small. Once the
+    file exceeds ``rotate_bytes`` after an append, it is compacted in
+    place: only the LAST entry per name survives (exactly the entries
+    ``replay`` would let win), original sequence numbers are kept (so
+    ``last_seq`` and the state file's ``journal_seq`` stay consistent),
+    and the file as it stood before the MOST RECENT rotation is parked at
+    ``<path>.1`` (one generation — an earlier rotation's archive is
+    overwritten). ``management(resume=True)`` replay over a rotated journal
+    reproduces the same staged world as over the unrotated one. A session
+    whose net staging is genuinely larger than the threshold cannot be
+    shrunk and is left alone.
     """
 
-    def __init__(self, path: str | os.PathLike):
+    def __init__(
+        self, path: str | os.PathLike, *, rotate_bytes: Optional[int] = None
+    ):
         self.path = Path(path)
+        self.rotate_bytes = rotate_bytes
+        self.rotations = 0
+        # After a no-op compaction (net staging genuinely >= threshold),
+        # skip re-attempts until the file grows past this — otherwise every
+        # append would re-parse the whole journal just to find nothing.
+        self._rotate_retry_size = 0
         self._repair_torn_tail()
         self._seq = self._scan_last_seq()
 
@@ -143,13 +165,66 @@ class Journal:
             f.write(json.dumps(entry.to_json(), sort_keys=True) + "\n")
             f.flush()
             os.fsync(f.fileno())
+            size = f.tell()
+        if (
+            self.rotate_bytes is not None
+            and size > self.rotate_bytes
+            and size > self._rotate_retry_size
+        ):
+            self._rotate(size)
         return entry
 
     def clear(self) -> None:
-        """Truncate the journal (session boundary: begin/commit/abort/reset)."""
+        """Truncate the journal (session boundary: begin/commit/abort/reset).
+        The rotation archive describes the now-dead session and goes too."""
         self._seq = 0
+        self._rotate_retry_size = 0
         if self.path.exists():
             self.path.write_text("")
+        if self.archive_path.exists():
+            self.archive_path.unlink()
+
+    @property
+    def archive_path(self) -> Path:
+        """Where the most recent rotation parks the pre-compaction history."""
+        return self.path.with_name(self.path.name + ".1")
+
+    def _rotate(self, size: int) -> None:
+        """Compact the journal to its replay-equivalent minimum.
+
+        ``replay`` is last-wins per name, so only the final entry per name
+        affects the staged world it reproduces. Their original ``seq``
+        values are kept (they are already strictly increasing, and the
+        newest entry is by construction a survivor), which keeps
+        ``last_seq`` — and therefore the resume-authority check against
+        ``state.json``'s ``journal_seq`` — exactly as before rotation.
+
+        Crash safety: the old file is parked at ``archive_path`` first and
+        the compacted file lands by atomic replace. A crash in between
+        leaves no active journal — resume then falls back to the persisted
+        ``pending`` snapshot and resyncs the journal from it
+        (``Workspace._resync_journal_from_staged``), losing nothing.
+        """
+        entries = self.entries()
+        last: dict[str, JournalEntry] = {}
+        for e in entries:
+            last.pop(e.name, None)   # re-insert to keep last-occurrence order
+            last[e.name] = e
+        if len(last) >= len(entries):
+            # nothing to reclaim: net staging really is this large. Back
+            # off until the file doubles so appends stay O(1) amortized.
+            self._rotate_retry_size = size * 2
+            return
+        os.replace(self.path, self.archive_path)
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        with tmp.open("w") as f:
+            for e in last.values():
+                f.write(json.dumps(e.to_json(), sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        self.rotations += 1
+        self._rotate_retry_size = 0
 
     # ------------------------------------------------------------- reading
     def entries(self) -> list[JournalEntry]:

@@ -16,6 +16,10 @@ Built-ins mirror the paper's Figure 5 (and push past it):
     stable-mmap — baked-arena epoch load: one copy-on-write mmap, zero
                   resolve / table parse / payload copy (requires
                   ``bake_arenas`` materialization, the default)
+    stable-mmap-cached — epoch-resident load: repeat loads are EpochCache
+                  hits serving prebuilt READ-ONLY views over one process-
+                  shared mapping (fleet replicas share a single arena
+                  mapping; mutate via ``stable-mmap`` instead)
     dynamic     — traditional dynamic linking (baseline; untouched so
                   benchmarks keep a faithful ld.so comparison point)
     indexed     — dynamic-shaped load resolving through the per-closure
@@ -129,6 +133,11 @@ def _stable_mmap(executor, app, world):
     return executor._load_stable_mmap(app, world)
 
 
+@register_strategy("stable-mmap-cached")
+def _stable_mmap_cached(executor, app, world):
+    return executor._load_stable_mmap_cached(app, world)
+
+
 @register_strategy("dynamic")
 def _dynamic(executor, app, world):
     return executor._load_dynamic(app, world)
@@ -141,9 +150,9 @@ def _indexed(executor, app, world):
 
 @register_strategy("lazy")
 def _lazy(executor, app, world):
-    from repro.core.executor import LazyImage
-
-    return LazyImage(executor, app, world)
+    # Wired through the per-closure binding cache: the first image pays the
+    # PLT-analogue resolver per symbol, later images bind in O(1).
+    return executor.lazy_image(app, world)
 
 
 @register_strategy("prefetch")

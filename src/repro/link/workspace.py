@@ -16,6 +16,9 @@ paper's lifecycle as three verbs:
 
     img = ws.load("serve:model")               # epoch: table-driven
     img = ws.load("serve:model", strategy="lazy")   # by-name via registry
+    ws.warmup(workers=8)                       # fleet warm-start: preload
+                                               # the whole world in parallel
+    ws.gc()                                    # reclaim dead tables/arenas
 
     report = ws.explain("serve:model")         # observable mid-epoch
     report.to_sqlite(); report.summary()
@@ -30,14 +33,17 @@ from __future__ import annotations
 import os
 import shutil
 import tempfile
+import time
 from contextlib import contextmanager
+from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
 from repro.core.compile_cache import CompileCache
+from repro.core.epoch_cache import EpochCache
 from repro.core.executor import Executor, Initializer, LoadStats, _zeros_init
 from repro.core.manager import Manager, Mode
 from repro.core.objects import StoreObject
-from repro.core.registry import Registry, World
+from repro.core.registry import GcReport, Registry, World
 from repro.core.relocation import RelocationTable, build_table
 from repro.core.resolver import DynamicResolver
 
@@ -46,6 +52,34 @@ from repro.core.errors import ModeError, UnknownObjectError
 from .journal import Journal
 from .report import LinkReport, report_from_table
 from .transaction import ManagementTransaction
+
+# Rotate (compact) journal.jsonl once it grows past this; see
+# repro.link.journal.Journal. Long sweeps stay bounded, short sessions
+# never rotate.
+DEFAULT_JOURNAL_ROTATE_BYTES = 1 << 20
+
+
+@dataclass
+class WarmupReport:
+    """What one ``ws.warmup`` fleet preload actually did."""
+
+    strategy: str
+    workers: int
+    wall_s: float = 0.0
+    names: list[str] = field(default_factory=list)
+    cache_hits: int = 0          # EpochCache hits during the warmup
+    cache_fills: int = 0         # entries filled (first touch this epoch)
+    images: dict = field(default_factory=dict)  # name -> LoadedImage
+
+    def summary(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "workers": self.workers,
+            "wall_s": self.wall_s,
+            "names": sorted(self.names),
+            "cache_hits": self.cache_hits,
+            "cache_fills": self.cache_fills,
+        }
 
 
 class Workspace:
@@ -61,6 +95,8 @@ class Workspace:
         table_format: str = "raw",
         bake_arenas: bool = True,
         materialize_workers: int = 1,
+        epoch_cache: Optional[EpochCache] = None,
+        journal_rotate_bytes: Optional[int] = DEFAULT_JOURNAL_ROTATE_BYTES,
         _ephemeral: bool = False,
     ):
         self.root = os.fspath(root)
@@ -75,11 +111,16 @@ class Workspace:
             table_format=table_format,
             bake_arenas=bake_arenas,
             materialize_workers=materialize_workers,
+            epoch_cache=epoch_cache,
         )
         self.compile_cache = CompileCache(self.registry.root / "executables")
         # Management-time journal: staged ops persisted beside state.json so
         # a crashed session's staging is operator-visible on the next open.
-        self.journal = Journal(self.registry.journal_path)
+        # Rotated (replay-equivalent compaction) past journal_rotate_bytes
+        # so very long sessions stay bounded; None disables rotation.
+        self.journal = Journal(
+            self.registry.journal_path, rotate_bytes=journal_rotate_bytes
+        )
         self.manager.journal = self.journal
         self._ephemeral = _ephemeral
         self._last_stats: dict[str, LoadStats] = {}
@@ -230,6 +271,102 @@ class Workspace:
         if stats is not None:
             self._last_stats[name] = stats
         return image
+
+    def warmup(
+        self,
+        names=None,
+        *,
+        strategy: str = "stable-mmap-cached",
+        workers: int = 4,
+    ) -> WarmupReport:
+        """Batch-preload a world at epoch start (fleet warm-start, one call).
+
+        Every named application (default: all of them) is loaded in
+        parallel over ``workers`` threads through the process-wide
+        EpochCache, so each (app, closure) arena is parsed and mapped
+        exactly once no matter how many threads — or later replicas — ask
+        for it. After ``warmup`` returns, every ``ws.load`` of a warmed app
+        this epoch is a cache hit. The report carries the per-app images
+        (``report.images``) plus hit/fill counts for observability.
+        """
+        t0 = time.perf_counter()
+        images = self.executor.load_all(
+            names, strategy=strategy, workers=workers
+        )
+        # hit/fill accounting from the per-image LoadStats, not global
+        # cache-counter deltas: concurrent loaders (the fleet scenario)
+        # must not bleed their traffic into this report
+        flags = [
+            bool(getattr(getattr(img, "stats", None), "cache_hit", False))
+            for img in images.values()
+        ]
+        report = WarmupReport(
+            strategy=strategy,
+            workers=workers,
+            wall_s=time.perf_counter() - t0,
+            names=list(images),
+            cache_hits=sum(flags),
+            cache_fills=len(flags) - sum(flags),
+            images=images,
+        )
+        for name, image in images.items():
+            stats = getattr(image, "stats", None)
+            if stats is not None:
+                self._last_stats[name] = stats
+        return report
+
+    # -------------------------------------------------------------- garbage
+    def gc(self) -> GcReport:
+        """Reclaim dead store entries: delete every ``tables/`` file
+        (materialized table, baked arena, sidecar) whose (app, closure) key
+        appears in no world this workspace still honours.
+
+        The live set is the committed world plus — during management time —
+        the staged world, including each world's legacy world-hash keys, so
+        nothing a current or in-flight epoch could load is ever touched.
+        Only an explicit call runs this; it is never triggered implicitly
+        during an epoch. Returns a ``GcReport`` (``bytes_reclaimed``,
+        ``removed_files``). The epoch cache is flash-invalidated afterwards
+        so no mapping outlives its backing file unnoticed.
+        """
+        worlds = [self.manager.committed_world()]
+        if self.mode == Mode.MANAGEMENT:
+            worlds.append(self.manager.world())
+        # Another process may have committed (or staged) a newer world since
+        # this workspace was opened; its keys are just as live. Re-read the
+        # persisted state so a long-lived workspace can never gc a newer
+        # epoch's tables out from under a sibling process.
+        try:
+            st = self.registry.read_state()
+            worlds.append(World(self.registry, st.get("world", {})))
+            worlds.append(World(self.registry, st.get("pending", {})))
+        except Exception:
+            pass  # unreadable state: fall back to the in-memory views
+        live: set[tuple[str, str]] = set()
+        for world in worlds:
+            try:
+                apps = world.applications()
+            except UnknownObjectError:
+                continue  # world view with dangling refs: nothing resolvable
+            for app in apps:
+                # legacy pre-closure-hash stores keyed by the world hash
+                live.add((app.content_hash, world.world_hash))
+                try:
+                    live.add((app.content_hash, self.executor.closure_key(app, world)))
+                except UnknownObjectError:
+                    # broken staged closure: it has no materialized key to
+                    # protect (materialization would fail), skip it
+                    continue
+        report = self.registry.gc_stores(live)
+        # Mirror end_mgmt: a private (injected) cache is bumped AND the
+        # process-wide one, so default-wired workspaces over the same root
+        # never keep serving mappings of files this gc just unlinked.
+        from repro.core.epoch_cache import process_cache
+
+        self.executor.epoch_cache.bump_epoch()
+        if self.executor.epoch_cache is not process_cache():
+            process_cache().bump_epoch()
+        return report
 
     # -------------------------------------------------------------- explain
     def explain(self, name: str, *, pending: bool = False) -> LinkReport:

@@ -4,6 +4,12 @@ Startup follows the stable-linking epoch path (table-driven weight load +
 AOT compile cache) exactly like the trainer; request batches share one
 cache. Greedy sampling keeps tests deterministic; the decode step is the
 same jitted ``serve_step`` the dry-run lowers for decode shapes.
+
+``ServeEngine.from_workspace`` is the epoch-resident spin-up path: params
+are loaded through the process-wide ``EpochCache`` (default strategy
+``stable-mmap-cached``), so N replicas constructed in one process read
+their host-side weights from ONE shared read-only arena mapping — replica
+spin-up after the first is a cache hit, not a remap.
 """
 
 from __future__ import annotations
@@ -49,6 +55,45 @@ class ServeEngine:
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(1,))
+        # set by from_workspace: the LoadStats of the epoch load that
+        # produced self.params (None for hand-built params)
+        self.load_stats = None
+
+    @classmethod
+    def from_workspace(
+        cls,
+        cfg,
+        ws,
+        app_name: str,
+        *,
+        strategy: str = "stable-mmap-cached",
+        impl: str = "chunked",
+        cache_len: int = 0,
+        param_builder=None,
+    ) -> "ServeEngine":
+        """Spin up a replica through the stable-linking epoch path.
+
+        Loads ``app_name`` from the workspace with ``strategy`` (default:
+        the epoch-resident cached load, so every same-process replica
+        shares one arena mapping and spin-ups after the first are O(1)
+        cache hits), lifts the tensors to device arrays, and returns the
+        wired engine. ``param_builder(image) -> params`` overrides the
+        default 1:1 symbol->param lift for models that need restructuring
+        (e.g. stacking per-layer fragments); ``engine.load_stats`` carries
+        the load's ``LoadStats`` for observability.
+        """
+        image = ws.load(app_name, strategy=strategy)
+        if param_builder is not None:
+            params = param_builder(image)
+        elif hasattr(image, "tensors"):
+            # jnp.asarray copies host->device; the host source stays the
+            # one shared mapping, so N replicas never duplicate it on host
+            params = {n: jnp.asarray(a) for n, a in image.tensors.items()}
+        else:  # lazy image: every symbol faults in on first access
+            params = {n: jnp.asarray(image[n]) for n in image.keys()}
+        engine = cls(cfg, params, impl=impl, cache_len=cache_len)
+        engine.load_stats = image.stats
+        return engine
 
     def generate(
         self, prompts: np.ndarray, max_new_tokens: int
