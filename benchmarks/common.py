@@ -56,6 +56,15 @@ def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}")
 
 
+def emit_value(name: str, value: float, derived: str = "") -> None:
+    """Derived-metric row: the value is recorded as-is (a ratio or count,
+    NOT microseconds). The perf gate classifies these rows by name and
+    checks them for placeholder zeros instead of sweeping them for
+    regressions (benchmarks/perf_gate.py)."""
+    RESULTS[name] = float(value)
+    print(f"{name},{float(value):.2f},{derived}")
+
+
 def write_bench_json(path: str | Path) -> Path:
     """Dump everything emitted so far as {name: us_per_call}."""
     path = Path(path)

@@ -1,19 +1,30 @@
 """Perf gate: compare this PR's bench JSON against the committed previous one.
 
-    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_4.json BENCH_3.json \
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_5.json BENCH_4.json \
         [--tolerance 1.25]
 
-Two kinds of checks, both printed as a table:
+Three kinds of checks, all printed as a table:
 
-* **Regression sweep** — every key present in both files (and real in both:
-  derived-only rows carry 0.0 and are skipped) must satisfy
+* **Regression sweep** — every *measured* key present in both files (and
+  real in both: placeholder 0.0 rows are skipped) must satisfy
   ``new <= old * tolerance``. The tolerance absorbs shared-runner noise on
   first-load paths; a genuine pipeline regression blows through it.
-* **Trajectory asserts** — the epoch-resident runtime's headline claims:
-  repeat ``stable-mmap-cached`` loads at least 5x faster than the previous
-  PR's ``stable-mmap``; ``indexed`` beating ``dynamic`` within this run;
-  ``lazy`` at least 2x faster than the previous PR (per-closure binding
-  cache + shared payload mmaps).
+  Derived rows (``is_derived``: speedup ratios, fill counts) are excluded —
+  for a ratio, *higher* is better, so the microsecond sweep's direction
+  would punish improvements.
+* **Derived-row checks** — derived rows must be present and non-zero.
+  PR <=4 emitted literal 0.0 placeholders for ``smoke/*_speedup_*``, which
+  the sweep then silently skipped; a zero-valued derived row is now an
+  explicit failure (a placeholder leaked into the trajectory), and an
+  *absent* one is a soft failure (printed, exit code set) rather than a
+  crash.
+* **Trajectory asserts** — the cross-process runtime's headline claims:
+  repeat ``stable-shm`` loads within 2x of ``stable-mmap-cached`` (an
+  EpochCache hit over the shared segment, not a remap) and faster than
+  the per-load CoW ``stable-mmap``; a fleet of N processes amortizes to at most ONE shm
+  fill (``smoke/fleet_fills <= 1``); ``stable-mmap-cached`` at least 5x
+  faster than the previous PR's ``stable-mmap``; ``indexed`` beating
+  ``dynamic`` within this run.
 
 Exits non-zero when any check fails (CI runs it as a soft gate, same
 rationale as the PR 3 gate: a slow shared runner must not silently block
@@ -30,12 +41,22 @@ import sys
 MIN_REAL_US = 1e-6
 
 
+def is_derived(key: str) -> bool:
+    """Rows excluded from the microsecond regression sweep: ratios and
+    counts (``speedup``/``fleet_fills``), plus ``fleet_procs``, whose wall
+    time is dominated by interpreter spawn + import — far noisier across
+    runners than the 1.25x tolerance the sweep is calibrated for."""
+    return "speedup" in key or "/fleet_" in key
+
+
 def compare(new: dict, old: dict, tolerance: float) -> list[str]:
     failures: list[str] = []
     shared = sorted(
         k
         for k in new.keys() & old.keys()
-        if new[k] > MIN_REAL_US and old[k] > MIN_REAL_US
+        if not is_derived(k)
+        and new[k] > MIN_REAL_US
+        and old[k] > MIN_REAL_US
     )
     print(f"{'key':40s} {'old_us':>12s} {'new_us':>12s} {'ratio':>7s}")
     for k in shared:
@@ -47,6 +68,33 @@ def compare(new: dict, old: dict, tolerance: float) -> list[str]:
                 f"{k}: {new[k]:.1f}us vs {old[k]:.1f}us "
                 f"({ratio:.2f}x > {tolerance:.2f}x tolerance)"
             )
+    return failures
+
+
+# derived rows every new trajectory must carry with a real (non-zero) value
+REQUIRED_DERIVED = (
+    "smoke/mmap_speedup_vs_dynamic",
+    "smoke/cached_speedup_vs_mmap",
+)
+
+
+def check_derived(new: dict) -> list[str]:
+    """Derived rows must exist and must not be placeholder zeros.
+
+    Soft-failing by design: a missing or zero row adds a failure line (the
+    CI gate surfaces it) instead of raising — the gate must always produce
+    its full table."""
+    failures: list[str] = []
+    for k in REQUIRED_DERIVED:
+        v = new.get(k)
+        if v is None:
+            print(f"FAIL derived row {k} absent from new trajectory")
+            failures.append(f"derived row {k} absent")
+        elif v <= 0.0:
+            print(f"FAIL derived row {k} is a zero-valued placeholder")
+            failures.append(f"derived row {k} zero-valued ({v!r})")
+        else:
+            print(f"PASS derived row {k} = {v:.2f}")
     return failures
 
 
@@ -82,13 +130,29 @@ def trajectory_asserts(new: dict, old: dict) -> list[str]:
             f"indexed ({new_idx:.1f}us) beats dynamic ({new_dyn:.1f}us)",
             new_idx < new_dyn,
         )
-    new_lazy = require(new, "smoke/lazy", "new")
-    old_lazy = require(old, "smoke/lazy", "old")
-    if new_lazy is not None and old_lazy is not None:
+    # cross-process epoch runtime (PR 5): repeat stable-shm attach is an
+    # EpochCache hit over the shared segment — within 2x of the in-process
+    # cached floor and strictly cheaper than a private per-load CoW remap
+    new_shm = require(new, "smoke/stable-shm", "new")
+    new_mmap = require(new, "smoke/stable-mmap", "new")
+    if new_shm is not None and cached is not None:
         check(
-            f"lazy ({new_lazy:.1f}us) >=2x faster than previous "
-            f"({old_lazy:.1f}us)",
-            new_lazy * 2 <= old_lazy,
+            f"stable-shm ({new_shm:.1f}us) within 2x of stable-mmap-cached "
+            f"({cached:.1f}us)",
+            new_shm <= cached * 2,
+        )
+    if new_shm is not None and new_mmap is not None:
+        check(
+            f"stable-shm ({new_shm:.1f}us) beats stable-mmap "
+            f"({new_mmap:.1f}us)",
+            new_shm < new_mmap,
+        )
+    fleet_fills = require(new, "smoke/fleet_fills", "new")
+    if fleet_fills is not None:
+        check(
+            f"fleet of N processes amortizes to <=1 shm fill "
+            f"(fills={fleet_fills:.0f})",
+            fleet_fills <= 1.0,
         )
     return failures
 
@@ -104,6 +168,7 @@ def main() -> int:
     with open(args.old_json) as f:
         old = json.load(f)
     failures = compare(new, old, args.tolerance)
+    failures += check_derived(new)
     failures += trajectory_asserts(new, old)
     if failures:
         print(f"\nperf gate FAILED ({len(failures)}):")

@@ -20,8 +20,12 @@ Engine-room surface:
                                    incremental)
     RelocationTable, PageTable   — materialized tables (+ TPU page compilation)
     EpochCache, process_cache    — the epoch-resident runtime: process-wide
-                                   shared-arena / index / binding cache,
-                                   flash-invalidated at every end_mgmt
+                                   shared-arena / index / binding cache
+                                   (capacity-bounded LRU, flash-invalidated
+                                   at every end_mgmt)
+    shm_arena, run_fleet         — cross-process shared arenas: named POSIX
+                                   shm segments so N worker processes map
+                                   one physical copy (``stable-shm``)
     inspector, interpose         — observability + fine-grained rebinding
     CompileCache                 — AOT executable materialization
 """
@@ -68,6 +72,14 @@ from .relocation import (
     compile_page_table,
 )
 from .resolver import DynamicResolver, Relocation, dependency_closure, np_dtype
+from .shm_arena import (
+    SharedArenaSegment,
+    ShmArenaEntry,
+    list_segments,
+    run_fleet,
+    segment_exists,
+    unlink_segment,
+)
 from .symbol_index import IndexedResolver, SymbolIndex, closure_hash
 
 __all__ = [
@@ -115,11 +127,17 @@ __all__ = [
     "IndexedResolver",
     "MaterializationResult",
     "Relocation",
+    "SharedArenaSegment",
+    "ShmArenaEntry",
     "SymbolIndex",
     "closure_hash",
     "dependency_closure",
+    "list_segments",
     "np_dtype",
     "open_workspace",
+    "run_fleet",
+    "segment_exists",
+    "unlink_segment",
 ]
 
 

@@ -31,17 +31,32 @@ Design:
   collected at a management boundary are re-validated against disk instead
   of trusted forever.
 
-* **Lock-free reads, double-checked-lock fills.** A hit is a plain dict
-  lookup plus one integer compare (GIL-atomic; no lock acquired). A miss
-  takes a per-key fill lock, re-checks, builds, and publishes — concurrent
-  loads of the same app during a fleet warm-start perform exactly one fill,
-  while fills of *different* keys proceed in parallel.
+* **Capacity-bounded LRU** (PR 5). Entries carry per-entry byte accounting
+  (``cache_nbytes`` on the value, an ``nbytes`` hint at publish, or the
+  value's own ``.nbytes``), and the cache enforces an optional global
+  ``cache_bytes`` budget by evicting least-recently-used entries — the
+  large-fleet alternative to growing without bound between management
+  commits. Entries that are *pinned* — an explicit ``pin()`` count, or a
+  value whose ``cache_pinned`` property is true (arena entries whose shared
+  views are mapped out to live images) — are never evicted; the invariant
+  is therefore: resident bytes <= ``cache_bytes`` OR every resident entry
+  is pinned. Flash-clear is retained for epoch-token bumps: a management
+  commit still drops everything at once, LRU only paces the steady state.
+
+* **Lock-free reads, double-checked-lock fills.** A hit is a dict lookup
+  plus one integer compare plus an LRU touch (each a single GIL-atomic
+  operation; no lock acquired). A miss takes a per-key fill lock,
+  re-checks, builds, and publishes — concurrent loads of the same app
+  during a fleet warm-start perform exactly one fill, while fills of
+  *different* keys proceed in parallel.
 
 Sections in use (see ``core/executor.py``):
 
     ``arena``         — ``ArenaEntry``: parsed sidecar + shared read-only
                         arena mapping + prebuilt slot views (stable-mmap /
                         stable-mmap-cached).
+    ``shm-arena``     — ``shm_arena.ShmArenaEntry``: the cross-process
+                        variant over a named POSIX shm segment (stable-shm).
     ``symbol-index``  — per-closure ``SymbolIndex`` (indexed resolution;
                         replaces the Executor-private index cache).
     ``indexed-table`` — the ``RelocationTable`` an indexed load resolves,
@@ -54,11 +69,15 @@ Sections in use (see ``core/executor.py``):
 from __future__ import annotations
 
 import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import numpy as np
+
+# per-entry size hint: an int, or a callable applied to the built value
+NbytesHint = Optional[Union[int, Callable[[Any], int]]]
 
 
 @dataclass
@@ -68,7 +87,7 @@ class CacheStats:
     hits: int = 0
     fills: int = 0
     invalidations: int = 0   # epoch-token bumps
-    evictions: int = 0       # size-bound section clears
+    evictions: int = 0       # LRU evictions (budget / section-cap)
 
     def snapshot(self) -> dict:
         return {
@@ -89,6 +108,12 @@ class ArenaEntry:
     is deferred so processes that only ever use ``stable-mmap`` (private
     copy-on-write mappings per load, ``Executor._load_stable_mmap``) never
     pay for — or keep resident — a shared mapping they don't read.
+
+    LRU contract: the entry accounts for ``arena_size`` bytes and is
+    pinned (never evicted) from the moment its shared views are built —
+    live images alias that one mapping, so evicting it would only force a
+    second mapping of the same bytes. Un-mapped entries (stable-mmap's
+    sidecar-only use) stay evictable and rebuild cheaply.
     """
 
     path: Path                       # .arena image on disk
@@ -102,6 +127,14 @@ class ArenaEntry:
     _views_lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False
     )
+
+    @property
+    def cache_nbytes(self) -> int:
+        return self.arena_size
+
+    @property
+    def cache_pinned(self) -> bool:
+        return self.tensors is not None   # mapped out to live images
 
     def shared_views(self) -> tuple[np.ndarray, dict[str, np.ndarray]]:
         """The shared read-only mapping + prebuilt slot views, built on
@@ -129,6 +162,16 @@ class ArenaEntry:
                 for name, off, nbytes, dt, shape in self.slot_items
             }
             return self.ro_arena, self.tensors
+
+
+class _CacheEntry:
+    __slots__ = ("token", "value", "nbytes", "pins")
+
+    def __init__(self, token: int, value: Any, nbytes: int):
+        self.token = token
+        self.value = value
+        self.nbytes = nbytes
+        self.pins = 0
 
 
 class _SectionView:
@@ -160,28 +203,41 @@ class _SectionView:
         return self._cache.get(self._section, key) is not None
 
     def __len__(self) -> int:
-        return len(self._cache._sections.get(self._section, {}))
+        return self._cache._section_counts.get(self._section, 0)
 
     def clear(self) -> None:
         self._cache.clear_section(self._section)
 
 
 class EpochCache:
-    """Process-wide epoch-resident cache (see module docstring).
+    """Process-wide epoch-resident LRU cache (see module docstring).
 
     Thread-safety contract: ``get`` is lock-free (one dict read + one int
-    compare under the GIL); ``get_or_fill`` serializes builders per key via
-    double-checked locking, so concurrent loads fill each entry exactly
-    once; ``bump_epoch`` is a single atomic increment that invalidates
-    every entry at once (entries carry their fill token).
+    compare + one LRU touch under the GIL); ``get_or_fill`` serializes
+    builders per key via double-checked locking, so concurrent loads fill
+    each entry exactly once; ``bump_epoch`` flash-invalidates every entry
+    at once. Byte accounting, pinning, and eviction all happen under one
+    mutex on the (rare) publish/invalidate paths.
     """
 
-    def __init__(self, *, max_section_entries: int = 512):
-        self._mu = threading.Lock()              # guards fill-lock table
+    def __init__(
+        self,
+        *,
+        max_section_entries: int = 512,
+        cache_bytes: Optional[int] = None,
+    ):
+        self._mu = threading.Lock()              # guards entries + accounting
         self._fill_locks: dict = {}
-        self._sections: dict[str, dict] = {}
+        # (section, key) -> _CacheEntry, least-recently-used first
+        self._entries: "OrderedDict[tuple, _CacheEntry]" = OrderedDict()
+        self._section_counts: dict[str, int] = {}
+        self._bytes = 0
         self._token = 0
         self.max_section_entries = max_section_entries
+        # Global resident-byte budget (None = unbounded). Enforced by LRU
+        # eviction of unpinned entries at publish time; see class docstring
+        # for the pinned-entries escape hatch.
+        self.cache_bytes = cache_bytes
         self.stats = CacheStats()
 
     # ---------------------------------------------------------------- token
@@ -197,39 +253,50 @@ class EpochCache:
         Called by ``Manager.end_mgmt`` — any management commit in the
         process — and by ``Workspace.gc`` after deleting store entries.
         Every entry is stale by definition once the token moves, so the
-        sections and fill-lock table are dropped too: dead arena mappings
-        (potentially gigabytes, possibly of unlinked files) must not stay
-        resident until a size-bound eviction. A fill racing this bump
-        publishes under its pre-bump token and is simply invisible.
+        entries and fill-lock table are dropped too (pins included): dead
+        arena mappings (potentially gigabytes, possibly of unlinked files)
+        must not stay resident until an LRU eviction. A fill racing this
+        bump publishes under its pre-bump token and is simply discarded.
         """
         with self._mu:
             self._token += 1
-            self._sections.clear()
+            self._entries.clear()
+            self._section_counts.clear()
+            self._bytes = 0
             self._fill_locks.clear()
             self.stats.invalidations += 1
             return self._token
 
     # ---------------------------------------------------------------- reads
     def get(self, section: str, key) -> Optional[Any]:
-        """Lock-free read: returns the entry or None (miss / stale token)."""
-        e = self._sections.get(section, {}).get(key)
-        if e is not None and e[0] == self._token:
+        """Lock-free read: returns the entry or None (miss / stale token).
+        A hit touches the LRU order (most-recently-used last)."""
+        k = (section, key)
+        e = self._entries.get(k)
+        if e is not None and e.token == self._token:
+            try:
+                self._entries.move_to_end(k)
+            except KeyError:
+                pass  # raced an eviction/invalidation: still a valid hit
             self.stats.hits += 1
-            return e[1]
+            return e.value
         return None
 
     # ---------------------------------------------------------------- fills
-    def put(self, section: str, key, value) -> None:
+    def put(self, section: str, key, value, *, nbytes: NbytesHint = None) -> None:
         """Publish ``value`` under the *current* token."""
-        self._publish(section, key, value, self._token)
+        self._publish(section, key, value, self._token, nbytes)
 
-    def get_or_fill(self, section: str, key, build: Callable[[], Any]) -> Any:
+    def get_or_fill(
+        self, section: str, key, build: Callable[[], Any],
+        *, nbytes: NbytesHint = None,
+    ) -> Any:
         """The double-checked-lock fill path.
 
         The token is captured *before* ``build`` runs: if a management
-        commit lands mid-build, the published entry is born stale and the
-        next read refills — a cached entry can never outlive the epoch it
-        was built in.
+        commit lands mid-build, the publish is discarded and the next read
+        refills — a cached entry can never outlive the epoch it was built
+        in (the built value is still returned to this caller).
         """
         hit = self.get(section, key)
         if hit is not None:
@@ -240,30 +307,127 @@ class EpochCache:
                 return hit
             token = self._token
             value = build()
-            self._publish(section, key, value, token)
+            self._publish(section, key, value, token, nbytes)
             self.stats.fills += 1
             return value
 
-    def _publish(self, section: str, key, value, token: int) -> None:
-        sec = self._sections.setdefault(section, {})
-        if len(sec) >= self.max_section_entries:
-            # Size bound, not LRU: entries rebuild cheaply on the next miss
-            # and real worlds have far fewer live keys than the bound.
-            sec.clear()
-            self.stats.evictions += 1
-        sec[key] = (token, value)
+    @staticmethod
+    def _sizeof(value, nbytes: NbytesHint) -> int:
+        if nbytes is not None:
+            return int(nbytes(value)) if callable(nbytes) else int(nbytes)
+        v = getattr(value, "cache_nbytes", None)
+        if v is not None:
+            return int(v)
+        v = getattr(value, "nbytes", None)   # ndarrays / payload mmaps
+        if isinstance(v, (int, np.integer)):
+            return int(v)
+        return 0
 
+    @staticmethod
+    def _is_pinned(e: _CacheEntry) -> bool:
+        return e.pins > 0 or bool(getattr(e.value, "cache_pinned", False))
+
+    def _publish(
+        self, section: str, key, value, token: int, nbytes: NbytesHint = None
+    ) -> None:
+        with self._mu:
+            if token != self._token:
+                return  # born stale (commit landed mid-build): discard
+            k = (section, key)
+            old = self._entries.pop(k, None)
+            if old is not None:
+                self._bytes -= old.nbytes
+                self._section_counts[section] -= 1
+            e = _CacheEntry(token, value, self._sizeof(value, nbytes))
+            self._entries[k] = e
+            self._bytes += e.nbytes
+            self._section_counts[section] = (
+                self._section_counts.get(section, 0) + 1
+            )
+            self._evict_locked(section)
+
+    def _evict_locked(self, section: str) -> None:
+        """Enforce the per-section entry cap and the global byte budget by
+        evicting least-recently-used *unpinned* entries. Invariant on
+        return: bytes <= cache_bytes, or every resident entry is pinned.
+
+        Iteration only ever walks ``list(self._entries)`` snapshots: the
+        lock-free ``get`` calls ``move_to_end`` WITHOUT holding ``_mu``,
+        which would invalidate a live OrderedDict iterator mid-scan
+        (``list()`` is a single C call, atomic under the GIL)."""
+        if self._section_counts.get(section, 0) > self.max_section_entries:
+            for k in list(self._entries):
+                e = self._entries.get(k)
+                if e is None or k[0] != section or self._is_pinned(e):
+                    continue
+                self._remove_locked(k)
+                self.stats.evictions += 1
+                if (
+                    self._section_counts.get(section, 0)
+                    <= self.max_section_entries
+                ):
+                    break
+        if self.cache_bytes is None:
+            return
+        while self._bytes > self.cache_bytes:
+            victim = None
+            for k in list(self._entries):   # LRU order, snapshot per pass
+                e = self._entries.get(k)
+                if e is not None and not self._is_pinned(e):
+                    victim = k
+                    break
+            if victim is None:
+                break  # everything resident is pinned: budget may overshoot
+            self._remove_locked(victim)
+            self.stats.evictions += 1
+
+    def _remove_locked(self, k: tuple) -> None:
+        e = self._entries.pop(k)
+        self._bytes -= e.nbytes
+        n = self._section_counts.get(k[0], 1) - 1
+        if n:
+            self._section_counts[k[0]] = n
+        else:
+            self._section_counts.pop(k[0], None)
+
+    # ------------------------------------------------------------- pinning
+    def pin(self, section: str, key) -> bool:
+        """Pin one live entry against eviction (counted; see ``unpin``).
+        Returns False when there is no current-token entry to pin."""
+        with self._mu:
+            e = self._entries.get((section, key))
+            if e is None or e.token != self._token:
+                return False
+            e.pins += 1
+            return True
+
+    def unpin(self, section: str, key) -> None:
+        with self._mu:
+            e = self._entries.get((section, key))
+            if e is not None and e.pins > 0:
+                e.pins -= 1
+
+    # -------------------------------------------------------- invalidation
     def invalidate(self, section: str, key) -> None:
         """Drop one entry (e.g. its backing file failed re-validation)."""
-        self._sections.get(section, {}).pop(key, None)
+        with self._mu:
+            if (section, key) in self._entries:
+                self._remove_locked((section, key))
 
     def clear_section(self, section: str) -> None:
-        self._sections.pop(section, None)
+        with self._mu:
+            # snapshot first: a lock-free get()'s move_to_end must not
+            # invalidate this scan (see _evict_locked)
+            for k in [k for k in list(self._entries) if k[0] == section]:
+                if k in self._entries:
+                    self._remove_locked(k)
 
     def clear(self) -> None:
         """Drop everything (tests; equivalent to a token bump + walk)."""
         with self._mu:
-            self._sections.clear()
+            self._entries.clear()
+            self._section_counts.clear()
+            self._bytes = 0
             self._fill_locks.clear()
 
     # ------------------------------------------------------------- plumbing
@@ -277,11 +441,17 @@ class EpochCache:
                 (section, key), threading.Lock()
             )
 
+    def resident_bytes(self) -> int:
+        """Accounted bytes currently resident (pinned entries included)."""
+        return self._bytes
+
     def entry_count(self, section: str) -> int:
         """Live (current-token) entries in a section (tests/observability)."""
         tok = self._token
         return sum(
-            1 for e in self._sections.get(section, {}).values() if e[0] == tok
+            1
+            for k, e in list(self._entries.items())
+            if k[0] == section and e.token == tok
         )
 
 

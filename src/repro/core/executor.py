@@ -41,6 +41,10 @@ Loading strategies exposed for the benchmarks:
   ``stable-mmap-cached`` — epoch-resident: repeat loads return prebuilt
                     read-only views over one process-shared mapping (the
                     amortized floor; tensors are immutable by design).
+  ``stable-shm``  — cross-process epoch-resident: the arena lives in a named
+                    POSIX shm segment, so N worker *processes* attach to one
+                    physical copy (``core/shm_arena.py``); repeat loads in a
+                    process are EpochCache hits like the cached strategy.
   ``dynamic``     — traditional dynamic linking (baseline).
   ``indexed``     — dynamic-shaped load over the symbol index (management).
   ``lazy``        — dynamic linking with per-symbol first-use faulting (the
@@ -60,6 +64,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from . import shm_arena
 from .epoch_cache import ArenaEntry, EpochCache, process_cache
 from .errors import StaleTableError, UnknownObjectError
 from .manager import Manager
@@ -95,6 +100,8 @@ class LoadStats:
     probes: int = 0             # hash probes performed (search work)
     bytes_loaded: int = 0       # bytes copied (0 for mmap-backed loads)
     cache_hit: bool = False     # served from the process EpochCache
+    shm_attached: bool = False  # stable-shm: attached an existing segment
+    shm_segment: str = ""       # stable-shm: segment name (census/debug)
 
     @property
     def startup_s(self) -> float:
@@ -242,6 +249,7 @@ class Executor:
         bake_arenas: bool = True,
         materialize_workers: int = 1,
         epoch_cache: Optional[EpochCache] = None,
+        cache_bytes: Optional[int] = None,
     ):
         assert loader in ("paged", "rows")
         assert table_format in ("raw", "npz")
@@ -268,6 +276,12 @@ class Executor:
         # process-wide by default (N same-process replicas share one
         # mapping) and flash-invalidated by any end_mgmt's token bump.
         self.epoch_cache = epoch_cache if epoch_cache is not None else process_cache()
+        # Optional resident-byte budget for the epoch cache (LRU eviction of
+        # unpinned entries). Applied to whichever cache this executor uses —
+        # with the default process-wide cache that is a process-wide knob,
+        # which is exactly the "bound the warm machine" intent.
+        if cache_bytes is not None:
+            self.epoch_cache.cache_bytes = int(cache_bytes)
         # scope-key -> SymbolIndex, shared across materializations AND
         # processes-wide via the EpochCache, so apps with the same
         # dependency closure resolve against one index (epoch-invalidated).
@@ -619,6 +633,65 @@ class Executor:
             stats=stats,
         )
 
+    def _load_stable_shm(self, app: StoreObject, world: World) -> LoadedImage:
+        """Cross-process epoch-resident load: attach the machine-shared
+        segment for this (app, closure) instead of mapping the file.
+
+        The first load on the whole MACHINE publishes the baked arena into
+        a named POSIX shm segment (exclusive create; ``core/shm_arena``);
+        every other process — and every later load in this one — attaches:
+        N worker processes share one physical copy. Within a process,
+        repeat loads are EpochCache hits returning prebuilt READ-ONLY
+        views — the same token-trusting amortized floor as
+        ``stable-mmap-cached``. Cross-process epoch changes need no stat
+        probe: a commit anywhere changes the app's *closure key* (content
+        addressing), which is a different cache key and a different
+        segment name; the generation stamp additionally guards an attach
+        against a re-baked sidecar under an unchanged key.
+        """
+        stats = LoadStats(strategy="stable-shm")
+        t0 = time.perf_counter()
+        key = self.closure_key(app, world)
+        ckey = (str(self.registry.root), app.content_hash, key)
+        entry = self.epoch_cache.get("shm-arena", ckey)
+        stats.cache_hit = entry is not None
+        if entry is None:
+
+            def build():
+                base = self._build_arena_entry(app, key)
+                segment = shm_arena.publish_or_attach(
+                    self.registry,
+                    app.content_hash,
+                    key,
+                    arena_path=base.path,
+                    arena_size=base.arena_size,
+                    generation=shm_arena.generation_stamp(base.meta),
+                )
+                return shm_arena.ShmArenaEntry(
+                    segment=segment,
+                    meta=base.meta,
+                    slot_items=base.slot_items,
+                    arena_size=base.arena_size,
+                    kernels=base.kernels,
+                    sidecar_stat=base.sidecar_stat,
+                )
+
+            entry = self.epoch_cache.get_or_fill("shm-arena", ckey, build)
+        ro_arena, tensors = entry.shared_views()
+        stats.table_load_s = time.perf_counter() - t0
+        stats.relocations = int(entry.meta.get("relocations", 0))
+        stats.bytes_loaded = 0  # shared segment, nothing copied
+        stats.shm_attached = entry.segment.attached
+        stats.shm_segment = entry.segment.name
+        return LoadedImage(
+            app=app,
+            arena=ro_arena,
+            tensors=dict(tensors),
+            kernels=dict(entry.kernels),
+            table=None,
+            stats=stats,
+        )
+
     def _load_dynamic(self, app: StoreObject, world: World) -> LoadedImage:
         stats = LoadStats(strategy="dynamic")
         t0 = time.perf_counter()
@@ -664,7 +737,10 @@ class Executor:
                     closure_hash=key,
                 )
 
-            table = self.epoch_cache.get_or_fill("indexed-table", ckey, build)
+            table = self.epoch_cache.get_or_fill(
+                "indexed-table", ckey, build,
+                nbytes=lambda t: int(getattr(t.rows, "nbytes", 0)),
+            )
         stats.resolve_s = time.perf_counter() - t0
         return self._apply_table(app, table, stats)
 

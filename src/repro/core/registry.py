@@ -10,6 +10,8 @@ Layout on disk::
       tables/<app_hash>-<closure_hash>.arena      (baked arena images)
       tables/<app_hash>-<closure_hash>.arena.json (baked arena sidecars)
       executables/<key>.jaxexe               (AOT compile cache, optional)
+      shm/<segment>.json       (records of published shared-memory arena
+                                segments; see core/shm_arena.py lifecycle)
       state.json               (mode, epoch counter, world view)
       journal.jsonl            (staged ops of the open management session)
 
@@ -176,6 +178,12 @@ class Registry:
     def journal_path(self) -> Path:
         return self.root / "journal.jsonl"
 
+    @property
+    def shm_dir(self) -> Path:
+        """Records of shared-memory arena segments this root published
+        (created lazily by ``core.shm_arena`` on first publish)."""
+        return self.root / "shm"
+
     # --------------------------------------------------------------- garbage
     def gc_stores(self, live_keys: Iterable[tuple[str, str]]) -> "GcReport":
         """Delete ``tables/`` entries (materialized tables, baked arenas,
@@ -210,19 +218,26 @@ class Registry:
 
 @dataclass
 class GcReport:
-    """What one ``gc_stores`` pass reclaimed."""
+    """What one ``gc_stores`` pass reclaimed.
+
+    ``Workspace.gc`` also folds shared-memory segment reclamation into the
+    same report: unlinked segment names land in ``removed`` (and their
+    sizes in ``bytes_reclaimed``), with ``segments_removed`` counting them
+    separately from table-store files."""
 
     removed: list[str] = field(default_factory=list)
     kept_files: int = 0
     bytes_reclaimed: int = 0
+    segments_removed: int = 0
 
     @property
     def removed_files(self) -> int:
-        return len(self.removed)
+        return len(self.removed) - self.segments_removed
 
     def summary(self) -> dict:
         return {
             "removed_files": self.removed_files,
+            "segments_removed": self.segments_removed,
             "kept_files": self.kept_files,
             "bytes_reclaimed": self.bytes_reclaimed,
             "removed": sorted(self.removed),

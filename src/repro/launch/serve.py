@@ -7,6 +7,11 @@ Startup goes through the stable-linking session API: the weight bundle and
 application are published into a ``Workspace`` (one management transaction),
 then every server start is an epoch-path ``ws.load`` — pass ``--strategy``
 to compare loaders by name (any strategy registered in ``repro.link``).
+
+``--fleet N`` additionally spawns N real worker processes that load the
+same app via the ``stable-shm`` strategy, proving the whole machine shares
+ONE physical arena copy (at most one worker fills the shm segment, the
+rest attach); the fleet summary is included in the output JSON.
 """
 
 from __future__ import annotations
@@ -34,6 +39,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--strategy", default="stable", choices=available_strategies()
+    )
+    ap.add_argument(
+        "--fleet", type=int, default=0, metavar="N",
+        help="also spawn N worker processes sharing one shm arena "
+             "(stable-shm) and report fills/attaches",
     )
     ap.add_argument("--registry", default=None)
     args = ap.parse_args()
@@ -74,23 +84,34 @@ def main() -> None:
         0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32
     )
     out, stats = engine.generate(prompts, args.max_new)
-    print(
-        json.dumps(
-            {
-                "arch": cfg.name,
-                "epoch": ws.epoch,
-                "load_strategy": engine.load_stats.strategy,
-                "load_s": round(engine.load_stats.startup_s, 4),
-                "load_cache_hit": engine.load_stats.cache_hit,
-                "out_shape": list(out.shape),
-                "prefill_s": round(stats.prefill_s, 4),
-                "decode_s": round(stats.decode_s, 4),
-                "tok_per_s": round(stats.tok_per_s, 1),
-                "sample": out[0, :8].tolist(),
-            },
-            indent=1,
+    payload = {
+        "arch": cfg.name,
+        "epoch": ws.epoch,
+        "load_strategy": engine.load_stats.strategy,
+        "load_s": round(engine.load_stats.startup_s, 4),
+        "load_cache_hit": engine.load_stats.cache_hit,
+        "out_shape": list(out.shape),
+        "prefill_s": round(stats.prefill_s, 4),
+        "decode_s": round(stats.decode_s, 4),
+        "tok_per_s": round(stats.tok_per_s, 1),
+        "sample": out[0, :8].tolist(),
+    }
+    if args.fleet:
+        # True multi-process fleet: every replica attaches to the one shm
+        # segment the first loader published (load-only probes; pass
+        # arch=cfg.name to ServeEngine.spawn_fleet for full replicas).
+        report = ServeEngine.spawn_fleet(
+            ws, app_name, processes=args.fleet, strategy="stable-shm"
         )
-    )
+        payload["fleet"] = report.summary()
+    if args.registry is None:
+        # throwaway registry: any stable-shm load (single engine OR fleet)
+        # published machine-wide segments nothing will ever reattach — a
+        # persistent --registry keeps them instead (the warm machine)
+        from repro.core import shm_arena
+
+        shm_arena.unlink_root_segments(ws.registry)
+    print(json.dumps(payload, indent=1))
 
 
 if __name__ == "__main__":

@@ -20,6 +20,12 @@ Built-ins mirror the paper's Figure 5 (and push past it):
                   hits serving prebuilt READ-ONLY views over one process-
                   shared mapping (fleet replicas share a single arena
                   mapping; mutate via ``stable-mmap`` instead)
+    stable-shm  — cross-process epoch-resident load: the baked arena is
+                  published once into a named POSIX shm segment and every
+                  worker PROCESS attaches to that one physical copy
+                  (``core/shm_arena.py``); read-only like the cached
+                  strategy, guarded by the epoch token + closure key +
+                  sidecar generation stamp
     dynamic     — traditional dynamic linking (baseline; untouched so
                   benchmarks keep a faithful ld.so comparison point)
     indexed     — dynamic-shaped load resolving through the per-closure
@@ -136,6 +142,11 @@ def _stable_mmap(executor, app, world):
 @register_strategy("stable-mmap-cached")
 def _stable_mmap_cached(executor, app, world):
     return executor._load_stable_mmap_cached(app, world)
+
+
+@register_strategy("stable-shm")
+def _stable_shm(executor, app, world):
+    return executor._load_stable_shm(app, world)
 
 
 @register_strategy("dynamic")

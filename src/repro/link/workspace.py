@@ -96,12 +96,17 @@ class Workspace:
         bake_arenas: bool = True,
         materialize_workers: int = 1,
         epoch_cache: Optional[EpochCache] = None,
+        cache_bytes: Optional[int] = None,
         journal_rotate_bytes: Optional[int] = DEFAULT_JOURNAL_ROTATE_BYTES,
         _ephemeral: bool = False,
     ):
         self.root = os.fspath(root)
         self.registry = Registry(self.root)
         self.manager = Manager(self.registry)
+        # cache_bytes bounds the epoch-resident cache (LRU eviction of
+        # unpinned entries past the budget; see core.epoch_cache). With the
+        # default process-wide cache it is a process-wide knob; pass a
+        # private epoch_cache for per-workspace budgets.
         self.executor = Executor(
             self.registry,
             self.manager,
@@ -112,6 +117,7 @@ class Workspace:
             bake_arenas=bake_arenas,
             materialize_workers=materialize_workers,
             epoch_cache=epoch_cache,
+            cache_bytes=cache_bytes,
         )
         self.compile_cache = CompileCache(self.registry.root / "executables")
         # Management-time journal: staged ops persisted beside state.json so
@@ -138,8 +144,18 @@ class Workspace:
         return cls(tempfile.mkdtemp(prefix=prefix), _ephemeral=True, **kw)
 
     def close(self) -> None:
-        """Release the workspace; deletes the store if ephemeral."""
+        """Release the workspace; deletes the store if ephemeral.
+
+        Ephemeral roots also unlink every shared-memory arena segment they
+        published — a throwaway store must not leave machine-wide segments
+        behind. Persistent roots keep their segments (the warm machine)."""
         if self._ephemeral:
+            from repro.core import shm_arena
+
+            try:
+                shm_arena.unlink_root_segments(self.registry)
+            except Exception:
+                pass  # never let teardown mask the caller's work
             shutil.rmtree(self.root, ignore_errors=True)
 
     def __enter__(self) -> "Workspace":
@@ -319,15 +335,20 @@ class Workspace:
     def gc(self) -> GcReport:
         """Reclaim dead store entries: delete every ``tables/`` file
         (materialized table, baked arena, sidecar) whose (app, closure) key
-        appears in no world this workspace still honours.
+        appears in no world this workspace still honours, and unlink every
+        shared-memory arena segment this root published whose key is dead,
+        whose generation no longer matches its sidecar, or whose creator
+        died mid-fill (``core.shm_arena.gc_segments`` — SIGKILLed workers
+        cannot leak segments past the next explicit gc).
 
         The live set is the committed world plus — during management time —
         the staged world, including each world's legacy world-hash keys, so
         nothing a current or in-flight epoch could load is ever touched.
         Only an explicit call runs this; it is never triggered implicitly
         during an epoch. Returns a ``GcReport`` (``bytes_reclaimed``,
-        ``removed_files``). The epoch cache is flash-invalidated afterwards
-        so no mapping outlives its backing file unnoticed.
+        ``removed_files``, ``segments_removed``). The epoch cache is
+        flash-invalidated afterwards so no mapping outlives its backing
+        file unnoticed.
         """
         worlds = [self.manager.committed_world()]
         if self.mode == Mode.MANAGEMENT:
@@ -358,6 +379,12 @@ class Workspace:
                     # protect (materialization would fail), skip it
                     continue
         report = self.registry.gc_stores(live)
+        from repro.core import shm_arena
+
+        seg_removed, seg_bytes = shm_arena.gc_segments(self.registry, live)
+        report.removed.extend(seg_removed)
+        report.segments_removed = len(seg_removed)
+        report.bytes_reclaimed += seg_bytes
         # Mirror end_mgmt: a private (injected) cache is bumped AND the
         # process-wide one, so default-wired workspaces over the same root
         # never keep serving mappings of files this gc just unlinked.

@@ -1,3 +1,3 @@
-from .engine import ServeEngine
+from .engine import FleetReport, ServeEngine
 
-__all__ = ["ServeEngine"]
+__all__ = ["FleetReport", "ServeEngine"]

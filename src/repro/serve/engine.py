@@ -10,6 +10,11 @@ are loaded through the process-wide ``EpochCache`` (default strategy
 ``stable-mmap-cached``), so N replicas constructed in one process read
 their host-side weights from ONE shared read-only arena mapping — replica
 spin-up after the first is a cache hit, not a remap.
+
+``ServeEngine.spawn_fleet`` is the cross-PROCESS variant: it spawns N real
+worker processes that load the same app via the ``stable-shm`` strategy, so
+the whole machine shares one physical arena copy (at most one worker fills
+the shm segment; everyone else attaches — ``repro.core.shm_arena``).
 """
 
 from __future__ import annotations
@@ -33,6 +38,42 @@ class ServeStats:
     @property
     def tok_per_s(self) -> float:
         return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+@dataclass
+class FleetReport:
+    """What one ``ServeEngine.spawn_fleet`` actually did, per worker."""
+
+    processes: int
+    strategy: str
+    wall_s: float = 0.0
+    workers: list = field(default_factory=list)   # one result dict each
+
+    @property
+    def fills(self) -> int:
+        """Workers that had to publish (fill) the shm segment — the
+        exclusive-create protocol bounds this at 1 per segment, 0 when the
+        segment was already warm."""
+        return sum(1 for w in self.workers if not w.get("shm_attached"))
+
+    @property
+    def attaches(self) -> int:
+        return len(self.workers) - self.fills
+
+    @property
+    def segments(self) -> set:
+        return {w.get("segment") for w in self.workers}
+
+    def summary(self) -> dict:
+        return {
+            "processes": self.processes,
+            "strategy": self.strategy,
+            "wall_s": self.wall_s,
+            "fills": self.fills,
+            "attaches": self.attaches,
+            "segments": sorted(s for s in self.segments if s),
+            "pids": [w.get("pid") for w in self.workers],
+        }
 
 
 class ServeEngine:
@@ -94,6 +135,51 @@ class ServeEngine:
         engine = cls(cfg, params, impl=impl, cache_len=cache_len)
         engine.load_stats = image.stats
         return engine
+
+    @classmethod
+    def spawn_fleet(
+        cls,
+        ws,
+        app_name: str,
+        *,
+        processes: int = 2,
+        strategy: str = "stable-shm",
+        arch: str | None = None,
+        max_new: int = 0,
+        timeout: float = 180.0,
+    ) -> FleetReport:
+        """Spawn a true multi-process serving fleet over one workspace.
+
+        Each of the ``processes`` workers is a real OS process (spawn
+        context — jax state is never forked) that opens the workspace at
+        ``ws.root`` and loads ``app_name`` with ``strategy`` (default
+        ``stable-shm``): the first worker on the machine publishes the
+        baked arena into a named shm segment, every other replica attaches
+        to that one physical copy instead of re-mapping. With ``arch`` set,
+        each worker additionally constructs a full ``ServeEngine`` and
+        greedy-decodes ``max_new`` tokens, proving end-to-end serving from
+        the shared segment. Returns a ``FleetReport`` (fills/attaches per
+        the one-fill-per-machine contract, per-worker load stats and
+        tensor digests for byte-identity checks).
+        """
+        from repro.core.shm_arena import run_fleet
+
+        t0 = time.perf_counter()
+        workers = run_fleet(
+            ws.root,
+            app_name,
+            processes=processes,
+            strategy=strategy,
+            arch=arch,
+            max_new=max_new,
+            timeout=timeout,
+        )
+        return FleetReport(
+            processes=processes,
+            strategy=strategy,
+            wall_s=time.perf_counter() - t0,
+            workers=workers,
+        )
 
     def generate(
         self, prompts: np.ndarray, max_new_tokens: int

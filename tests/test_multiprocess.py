@@ -1,0 +1,340 @@
+"""Cross-process epoch runtime: real OS worker processes sharing ONE shm
+arena segment per (app, closure), with fault injection.
+
+Covers the PR 5 acceptance matrix:
+
+* >=4 spawned processes concurrently load the same app via ``stable-shm``
+  and end up mapping exactly one segment (census by the root's shm records
+  + byte-identity with the baked ``.arena`` file), with exactly one fill
+  (exclusive create) no matter how the race lands.
+* A mid-flight ``end_mgmt`` epoch bump is observed by a running worker:
+  its next loads attach a NEW segment (the closure key changed), and
+  ``ws.gc()`` reclaims the dead epoch's segment.
+* Fault injection: a SIGKILLed worker cannot leak its segment past the
+  next ``ws.gc()``; a creator that dies mid-fill leaves a husk that gc
+  reclaims even while its key is live.
+* ``ServeEngine.spawn_fleet`` reports the one-fill amortization.
+
+Every worker body is a module-level function (spawn pickles by qualified
+name); every wait carries a timeout so a wedged child fails the test
+instead of hanging the suite.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import multiprocessing as mp
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+pytest.importorskip("_posixshmem")  # POSIX shared memory required
+
+from repro.core import EpochCache, StaleTableError, SymbolRef
+from repro.core import shm_arena
+from repro.link import Workspace
+
+from conftest import build_app, build_bundle
+
+# spawn: workers must never inherit the parent's jax/XLA or cache state
+CTX = mp.get_context("spawn")
+JOIN_S = 90.0
+
+
+def _publish(ws, value=1.0, version="1"):
+    tensors = {
+        "s/a": np.full(64, value, np.float32),
+        "s/b": np.arange(24, dtype=np.float32).reshape(4, 6),
+    }
+    bundle = build_bundle("w", tensors, version=version)
+    app = build_app(
+        "app",
+        [
+            SymbolRef("s/a", (64,), "float32"),
+            SymbolRef("s/b", (4, 6), "float32"),
+        ],
+        ["w"],
+    )
+    with ws.management() as tx:
+        tx.publish(*bundle)
+        tx.publish(app)
+    return tensors
+
+
+@pytest.fixture()
+def shm_ws(tmp_path):
+    """Workspace whose published segments are force-unlinked on teardown —
+    a test failure must not leak machine-wide segments."""
+    ws = Workspace.open(tmp_path / "store", epoch_cache=EpochCache())
+    try:
+        yield ws
+    finally:
+        shm_arena.unlink_root_segments(ws.registry)
+
+
+def _drain(queue, n, timeout=JOIN_S):
+    out = []
+    deadline = time.monotonic() + timeout
+    while len(out) < n and time.monotonic() < deadline:
+        try:
+            out.append(queue.get(timeout=0.25))
+        except Exception:
+            continue
+    return out
+
+
+def _join_all(procs):
+    for p in procs:
+        p.join(timeout=JOIN_S)
+    for p in procs:
+        if p.is_alive():  # pragma: no cover - hang diagnostics
+            p.kill()
+            p.join(timeout=5)
+            pytest.fail("worker process hung")
+
+
+# ------------------------------------------------------------ worker bodies
+def _probe_worker(root, app_name, barrier, queue):
+    from repro.link import Workspace
+
+    ws = Workspace.open(root)
+    barrier.wait(timeout=60)
+    img = ws.load(app_name, strategy="stable-shm")
+    queue.put(
+        {
+            "pid": os.getpid(),
+            "segment": img.stats.shm_segment,
+            "attached": img.stats.shm_attached,
+            "digest": hashlib.blake2b(
+                np.ascontiguousarray(img.arena).tobytes(), digest_size=16
+            ).hexdigest(),
+            "value": float(np.asarray(img["s/a"])[0]),
+        }
+    )
+
+
+def _reload_worker(root, expect_value, queue):
+    """Keep re-opening the workspace and loading until the committed world
+    serves ``expect_value`` — the long-running replica that must observe a
+    mid-flight epoch bump and re-attach."""
+    from repro.core.errors import StaleTableError
+    from repro.link import Workspace
+
+    seen = []  # (value, segment) transitions, in order
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
+        ws = Workspace.open(root)
+        try:
+            img = ws.load("app", strategy="stable-shm")
+        except StaleTableError:
+            time.sleep(0.01)  # parent mid-commit: staged world has no bake
+            continue
+        v = float(np.asarray(img["s/a"])[0])
+        if not seen or seen[-1][0] != v:
+            seen.append((v, img.stats.shm_segment))
+        if v == expect_value:
+            queue.put({"seen": seen})
+            return
+        time.sleep(0.01)
+    queue.put({"seen": seen, "timeout": True})
+
+
+def _hold_worker(root, queue):
+    """Load, report, then hold the attachment until SIGKILLed."""
+    from repro.link import Workspace
+
+    ws = Workspace.open(root)
+    img = ws.load("app", strategy="stable-shm")
+    queue.put({"pid": os.getpid(), "segment": img.stats.shm_segment})
+    time.sleep(120)  # killed long before this expires
+
+
+# ------------------------------------------------------------------- tests
+def test_four_processes_share_one_segment(shm_ws):
+    ws = shm_ws
+    _publish(ws, value=3.0)
+    n = 4
+    queue = CTX.Queue()
+    barrier = CTX.Barrier(n)
+    procs = [
+        CTX.Process(
+            target=_probe_worker, args=(ws.root, "app", barrier, queue),
+            daemon=True,
+        )
+        for _ in range(n)
+    ]
+    for p in procs:
+        p.start()
+    results = _drain(queue, n)
+    _join_all(procs)
+    assert len(results) == n, f"only {len(results)}/{n} workers reported"
+    assert all(p.exitcode == 0 for p in procs)
+
+    # one segment, one fill (exclusive create), identical bytes everywhere
+    segments = {r["segment"] for r in results}
+    assert len(segments) == 1
+    fills = [r for r in results if not r["attached"]]
+    assert len(fills) == 1, f"expected exactly 1 filler, got {len(fills)}"
+    assert len({r["digest"] for r in results}) == 1
+    assert all(r["value"] == 3.0 for r in results)
+
+    # census: the root recorded exactly that segment, and it exists
+    records = shm_arena.list_segments(ws.registry)
+    assert [r["name"] for r in records] == sorted(segments)
+    (name,) = segments
+    assert shm_arena.segment_exists(name)
+
+    # byte-identity: the segment payload IS the baked .arena image
+    parent = ws.load("app", strategy="stable-shm")
+    assert parent.stats.shm_attached          # parent attaches, never refills
+    arena_file = ws.registry.arena_path(
+        ws.world().resolve("app").content_hash,
+        ws.executor.closure_key(ws.world().resolve("app"), ws.world()),
+    )
+    file_bytes = np.fromfile(arena_file, dtype=np.uint8)[: parent.arena.size]
+    np.testing.assert_array_equal(np.asarray(parent.arena), file_bytes)
+
+    # workers exited: their mappings are gone, the warm segment remains —
+    # and a world change + gc reclaims it (no leaked segments)
+    with ws.management() as tx:
+        tx.remove("app")
+        tx.remove("w")
+    report = ws.gc()
+    assert report.segments_removed == 1
+    assert name in report.removed
+    assert not shm_arena.segment_exists(name)
+    assert shm_arena.list_segments(ws.registry) == []
+
+
+def test_reattach_after_mid_flight_epoch_bump(shm_ws):
+    ws = shm_ws
+    _publish(ws, value=1.0, version="1")
+    first = ws.load("app", strategy="stable-shm")
+    old_segment = first.stats.shm_segment
+
+    queue = CTX.Queue()
+    p = CTX.Process(
+        target=_reload_worker, args=(ws.root, 9.0, queue), daemon=True
+    )
+    p.start()
+    time.sleep(0.3)  # let the worker observe the old epoch at least once
+    _publish(ws, value=9.0, version="2")  # mid-flight end_mgmt epoch bump
+    results = _drain(queue, 1)
+    _join_all([p])
+    assert results and "timeout" not in results[0], (
+        f"worker never saw the new epoch: {results}"
+    )
+    seen = results[0]["seen"]
+    values = [v for v, _ in seen]
+    assert values[-1] == 9.0
+    new_segment = seen[-1][1]
+    assert new_segment != old_segment  # re-attach, not a stale read
+    # the worker only ever saw committed worlds (no half-staged bytes)
+    assert set(values) <= {1.0, 9.0}
+
+    # the dead epoch's segment is reclaimable; the live one survives
+    report = ws.gc()
+    assert old_segment in report.removed
+    assert not shm_arena.segment_exists(old_segment)
+    assert shm_arena.segment_exists(new_segment)
+    again = ws.load("app", strategy="stable-shm")
+    np.testing.assert_array_equal(
+        again["s/a"], np.full(64, 9.0, np.float32)
+    )
+
+
+def test_sigkilled_worker_segment_is_reclaimed(shm_ws):
+    ws = shm_ws
+    _publish(ws, value=2.0, version="1")
+    queue = CTX.Queue()
+    p = CTX.Process(target=_hold_worker, args=(ws.root, queue), daemon=True)
+    p.start()
+    results = _drain(queue, 1)
+    assert results, "holder never reported"
+    segment = results[0]["segment"]
+    assert shm_arena.segment_exists(segment)
+
+    os.kill(p.pid, signal.SIGKILL)  # fault injection: died while attached
+    p.join(timeout=JOIN_S)
+    assert p.exitcode == -signal.SIGKILL
+    # the kill released the worker's mapping but not the name: still warm
+    assert shm_arena.segment_exists(segment)
+
+    # key still live: gc must NOT touch the warm segment
+    assert ws.gc().segments_removed == 0
+    assert shm_arena.segment_exists(segment)
+
+    # epoch moves on: the orphan is dead and must be reclaimed despite the
+    # SIGKILLed worker never having closed anything
+    _publish(ws, value=4.0, version="2")
+    report = ws.gc()
+    assert segment in report.removed
+    assert not shm_arena.segment_exists(segment)
+
+
+def test_crashed_creator_husk_is_reclaimed_while_key_live(shm_ws):
+    """A creator that dies between create and ready leaves a never-ready
+    husk; gc reclaims it even though its (app, closure) key is live."""
+    ws = shm_ws
+    _publish(ws, value=5.0)
+    world = ws.world()
+    app = world.resolve("app")
+    key = ws.executor.closure_key(app, world)
+    meta = json.loads(
+        ws.registry.arena_meta_path(app.content_hash, key).read_text()
+    )
+    gen = shm_arena.generation_stamp(meta)
+    name = shm_arena.segment_name(ws.registry.root, app.content_hash, key, gen)
+
+    # a dead pid: a spawn child that has already exited
+    zombie = CTX.Process(target=time.sleep, args=(0,), daemon=True)
+    zombie.start()
+    zombie.join(timeout=JOIN_S)
+    dead_pid = zombie.pid
+
+    husk = shm_arena._ShmHandle(name, create=True, size=shm_arena.HEADER_BYTES)
+    husk.close()  # header never written: ready stays 0
+    rec = {
+        "name": name,
+        "app_hash": app.content_hash,
+        "closure_hash": key,
+        "generation": gen,
+        "size": shm_arena.HEADER_BYTES,
+        "arena_size": int(meta["arena_size"]),
+        "created_by_pid": dead_pid,
+        "created_ts": time.time(),
+    }
+    d = shm_arena.shm_records_dir(ws.registry)
+    d.mkdir(parents=True, exist_ok=True)
+    (d / f"{name}.json").write_text(json.dumps(rec))
+
+    report = ws.gc()
+    assert name in report.removed            # husk: not ready + creator dead
+    assert not shm_arena.segment_exists(name)
+    # and the strategy recovers: the next load republishes cleanly
+    img = ws.load("app", strategy="stable-shm")
+    np.testing.assert_array_equal(img["s/a"], np.full(64, 5.0, np.float32))
+    assert not img.stats.shm_attached        # it re-filled
+
+
+def test_spawn_fleet_amortizes_to_one_fill(shm_ws):
+    from repro.serve import ServeEngine
+
+    ws = shm_ws
+    _publish(ws, value=6.0)
+    report = ServeEngine.spawn_fleet(ws, "app", processes=4, timeout=JOIN_S)
+    assert report.processes == 4 and len(report.workers) == 4
+    assert report.fills == 1                 # nobody warmed it beforehand
+    assert report.attaches == 3
+    assert len(report.segments) == 1
+    assert len({w["tensors_digest"] for w in report.workers}) == 1
+    summary = report.summary()
+    assert summary["fills"] == 1 and summary["attaches"] == 3
+    # a second fleet over the warm machine fills nothing at all
+    again = ServeEngine.spawn_fleet(ws, "app", processes=4, timeout=JOIN_S)
+    assert again.fills == 0 and again.attaches == 4
+    assert again.segments == report.segments

@@ -1,0 +1,158 @@
+"""Unit tests for benchmarks/perf_gate.py — the gate itself gets a gate.
+
+PR <=4 emitted ``smoke/*_speedup_*`` rows as literal 0.0 placeholders, and
+the sweep's "skip zero rows" rule silently excused them: the perf gate was
+comparing nothing where it claimed to compare speedups. These tests pin the
+fixed behaviour with fixture JSON: derived rows are excluded from the
+microsecond regression sweep, zero-valued derived rows are rejected,
+absent ones soft-fail (a failure line, never a crash), and the trajectory
+asserts fire on the cross-process-era keys.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_GATE_PATH = Path(__file__).resolve().parents[1] / "benchmarks" / "perf_gate.py"
+_spec = importlib.util.spec_from_file_location("perf_gate_under_test", _GATE_PATH)
+perf_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(perf_gate)
+
+
+def _new_fixture(**overrides) -> dict:
+    base = {
+        "smoke/dynamic": 4000.0,
+        "smoke/indexed": 600.0,
+        "smoke/stable": 1100.0,
+        "smoke/stable-mmap": 700.0,
+        "smoke/stable-mmap-cached": 8.0,
+        "smoke/stable-shm": 10.0,
+        "smoke/lazy": 700.0,
+        "smoke/fleet_procs": 1.5e6,
+        "smoke/fleet_fills": 1.0,
+        "smoke/mmap_speedup_vs_dynamic": 5.7,
+        "smoke/cached_speedup_vs_mmap": 87.5,
+        "smoke/journal_epoch_overhead": 0.0,
+    }
+    base.update(overrides)
+    return base
+
+
+def _old_fixture(**overrides) -> dict:
+    base = {
+        "smoke/dynamic": 4200.0,
+        "smoke/indexed": 645.0,
+        "smoke/stable": 1100.0,
+        "smoke/stable-mmap": 747.0,
+        "smoke/stable-mmap-cached": 7.7,
+        "smoke/lazy": 739.0,
+        "smoke/mmap_speedup_vs_dynamic": 0.0,   # PR 4's placeholder zeros
+        "smoke/cached_speedup_vs_mmap": 0.0,
+        "smoke/journal_epoch_overhead": 0.0,
+    }
+    base.update(overrides)
+    return base
+
+
+# ------------------------------------------------------------- classification
+def test_is_derived_classifies_unsweepable_rows():
+    assert perf_gate.is_derived("smoke/mmap_speedup_vs_dynamic")
+    assert perf_gate.is_derived("smoke/cached_speedup_vs_mmap")
+    assert perf_gate.is_derived("smoke/fleet_fills")
+    # wall time dominated by process spawn: excluded from the 1.25x sweep
+    assert perf_gate.is_derived("smoke/fleet_procs")
+    assert not perf_gate.is_derived("smoke/stable-mmap")
+    assert not perf_gate.is_derived("smoke/stable-shm")
+
+
+# --------------------------------------------------------------- compare()
+def test_compare_passes_within_tolerance():
+    assert perf_gate.compare(_new_fixture(), _old_fixture(), 1.25) == []
+
+
+def test_compare_flags_regression_beyond_tolerance():
+    new = _new_fixture(**{"smoke/stable": 1100.0 * 1.6})
+    failures = perf_gate.compare(new, _old_fixture(), 1.25)
+    assert len(failures) == 1 and "smoke/stable" in failures[0]
+
+
+def test_compare_never_sweeps_derived_rows():
+    """A speedup ratio that *improved* (grew) must not read as a
+    microsecond regression — derived rows are excluded by name, even when
+    both sides are non-zero."""
+    new = _new_fixture(**{"smoke/cached_speedup_vs_mmap": 500.0})
+    old = _old_fixture(**{"smoke/cached_speedup_vs_mmap": 90.0})
+    assert perf_gate.compare(new, old, 1.25) == []
+
+
+def test_compare_skips_placeholder_zero_rows():
+    # journal_epoch_overhead is 0.0 in both: skipped, not divided by zero
+    assert perf_gate.compare(_new_fixture(), _old_fixture(), 1.25) == []
+
+
+# ---------------------------------------------------------- check_derived()
+def test_check_derived_rejects_zero_valued_rows():
+    new = _new_fixture(**{"smoke/mmap_speedup_vs_dynamic": 0.0})
+    failures = perf_gate.check_derived(new)
+    assert len(failures) == 1
+    assert "zero-valued" in failures[0]
+
+
+def test_check_derived_soft_fails_on_absent_rows():
+    new = _new_fixture()
+    del new["smoke/cached_speedup_vs_mmap"]
+    failures = perf_gate.check_derived(new)   # must not raise
+    assert failures == ["derived row smoke/cached_speedup_vs_mmap absent"]
+
+
+def test_check_derived_passes_real_values():
+    assert perf_gate.check_derived(_new_fixture()) == []
+
+
+# ----------------------------------------------------- trajectory_asserts()
+def test_trajectory_passes_on_good_fixtures():
+    assert perf_gate.trajectory_asserts(_new_fixture(), _old_fixture()) == []
+
+
+def test_trajectory_flags_shm_slower_than_cached_floor():
+    new = _new_fixture(**{"smoke/stable-shm": 8.0 * 2.5})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("stable-shm" in f and "within 2x" in f for f in failures)
+
+
+def test_trajectory_flags_fleet_that_fills_more_than_once():
+    new = _new_fixture(**{"smoke/fleet_fills": 3.0})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("shm fill" in f for f in failures)
+
+
+def test_trajectory_missing_key_fails_without_crashing():
+    new = _new_fixture()
+    del new["smoke/stable-shm"]
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("required key smoke/stable-shm" in f for f in failures)
+
+
+# ------------------------------------------------------------------ main()
+def test_main_exit_codes_with_fixture_files(tmp_path, monkeypatch, capsys):
+    newp = tmp_path / "new.json"
+    oldp = tmp_path / "old.json"
+    oldp.write_text(json.dumps(_old_fixture()))
+
+    newp.write_text(json.dumps(_new_fixture()))
+    monkeypatch.setattr(
+        "sys.argv", ["perf_gate", str(newp), str(oldp), "--tolerance", "1.25"]
+    )
+    assert perf_gate.main() == 0
+    assert "perf gate passed" in capsys.readouterr().out
+
+    # a zero-valued derived row flips the exit code, gracefully
+    newp.write_text(
+        json.dumps(_new_fixture(**{"smoke/mmap_speedup_vs_dynamic": 0.0}))
+    )
+    assert perf_gate.main() == 1
+    assert "zero-valued" in capsys.readouterr().out
