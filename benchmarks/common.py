@@ -65,8 +65,17 @@ def emit_value(name: str, value: float, derived: str = "") -> None:
     print(f"{name},{float(value):.2f},{derived}")
 
 
-def write_bench_json(path: str | Path) -> Path:
-    """Dump everything emitted so far as {name: us_per_call}."""
+def write_bench_json(path: str | Path, *, merge: bool = False) -> Path:
+    """Dump everything emitted so far as {name: us_per_call}.
+
+    ``merge=True`` folds this process's rows into an existing file instead
+    of overwriting it — how ``serve_load.py`` adds its serving rows to the
+    ``BENCH_<pr>.json`` that ``run.py --smoke`` already wrote in CI."""
     path = Path(path)
-    path.write_text(json.dumps(RESULTS, indent=1, sort_keys=True) + "\n")
+    rows = dict(RESULTS)
+    if merge and path.exists():
+        prior = json.loads(path.read_text())
+        prior.update(rows)
+        rows = prior
+    path.write_text(json.dumps(rows, indent=1, sort_keys=True) + "\n")
     return path

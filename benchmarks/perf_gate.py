@@ -1,6 +1,6 @@
 """Perf gate: compare this PR's bench JSON against the committed previous one.
 
-    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_5.json BENCH_4.json \
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_6.json BENCH_5.json \
         [--tolerance 1.25]
 
 Three kinds of checks, all printed as a table:
@@ -24,7 +24,9 @@ Three kinds of checks, all printed as a table:
   the per-load CoW ``stable-mmap``; a fleet of N processes amortizes to at most ONE shm
   fill (``smoke/fleet_fills <= 1``); ``stable-mmap-cached`` at least 5x
   faster than the previous PR's ``stable-mmap``; ``indexed`` beating
-  ``dynamic`` within this run.
+  ``dynamic`` within this run; and the serving tier's tail latency
+  (``serve/p99_latency``) plus sustained ``serve/req_per_s`` present,
+  nonzero, and finite (PR 6's traffic plane actually measured load).
 
 Exits non-zero when any check fails (CI runs it as a soft gate, same
 rationale as the PR 3 gate: a slow shared runner must not silently block
@@ -35,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 # rows whose us_per_call is a placeholder for a derived metric
@@ -45,8 +48,11 @@ def is_derived(key: str) -> bool:
     """Rows excluded from the microsecond regression sweep: ratios and
     counts (``speedup``/``fleet_fills``), plus ``fleet_procs``, whose wall
     time is dominated by interpreter spawn + import — far noisier across
-    runners than the 1.25x tolerance the sweep is calibrated for."""
-    return "speedup" in key or "/fleet_" in key
+    runners than the 1.25x tolerance the sweep is calibrated for.
+    Throughput rows (``*_per_s``: req/s, tok/s) are derived too — higher
+    is BETTER there, so the microsecond sweep's direction would flag an
+    improvement as a regression."""
+    return "speedup" in key or "/fleet_" in key or "_per_s" in key
 
 
 def compare(new: dict, old: dict, tolerance: float) -> list[str]:
@@ -153,6 +159,22 @@ def trajectory_asserts(new: dict, old: dict) -> list[str]:
             f"fleet of N processes amortizes to <=1 shm fill "
             f"(fills={fleet_fills:.0f})",
             fleet_fills <= 1.0,
+        )
+    # serving tier (PR 6): the traffic plane must have measured a real
+    # tail latency — present, nonzero, finite. (The p99 value itself is
+    # load- and runner-dependent; the microsecond sweep picks it up once
+    # both trajectories carry it.)
+    p99 = require(new, "serve/p99_latency", "new")
+    if p99 is not None:
+        check(
+            f"serve/p99_latency ({p99:.1f}us) is nonzero and finite",
+            p99 > 0.0 and math.isfinite(p99),
+        )
+    req_s = require(new, "serve/req_per_s", "new")
+    if req_s is not None:
+        check(
+            f"serving fleet sustained req/s is real ({req_s:.2f})",
+            req_s > 0.0 and math.isfinite(req_s),
         )
     return failures
 

@@ -13,11 +13,13 @@ amortizes to at most one shm-segment fill for the whole machine, and that
 the epoch path writes zero journal bytes. Use it in CI to prove the
 benchmark path stays runnable.
 
-Both ``--smoke`` and ``--fast`` also write ``BENCH_5.json``
+Both ``--smoke`` and ``--fast`` also write ``BENCH_6.json``
 ({name: us_per_call}, plus derived ratio/count rows such as
 ``smoke/*_speedup_*`` and ``smoke/fleet_fills``) — the machine-readable
 perf trajectory, one file per PR, uploaded as a CI artifact and gated
 against the committed previous-PR file by ``benchmarks/perf_gate.py``.
+The serving-tier rows (``serve/*``) are merged into the same file by
+``benchmarks/serve_load.py``, which CI runs after this harness.
 
 Emits ``name,us_per_call,derived`` CSV rows:
     microbench/*   — paper Fig. 1 & 7 (n x f grid, dynamic vs stable)
@@ -32,7 +34,7 @@ from __future__ import annotations
 
 import sys
 
-BENCH_JSON = "BENCH_5.json"  # perf trajectory of this PR's benchmark pass
+BENCH_JSON = "BENCH_6.json"  # perf trajectory of this PR's benchmark pass
 
 
 def smoke() -> None:

@@ -1,0 +1,156 @@
+"""Serving-tier load benchmark: p50/p99 under Poisson traffic.
+
+    PYTHONPATH=src python -m benchmarks.serve_load [--smoke]
+
+PRs 3-5 measured how fast an epoch *loads*; this harness measures what the
+loaded fleet *does*: a dispatcher drives Poisson arrivals through shm
+request/response rings (``repro.serve.traffic``) into ``workers`` real
+processes, each running the continuous-batching ``engine.serve_loop`` over
+a ``stable-shm`` arena (one physical weight copy machine-wide). Emits the
+serving numbers the roadmap's later items (blue/green rollover, remote
+arena store) will be judged against:
+
+    serve/p50_latency, serve/p99_latency   us rows (end-to-end, steady
+                                           state — workers are warmed off
+                                           the clock first)
+    serve/req_per_s, serve/tok_per_s       derived rows (higher = better;
+                                           perf_gate classifies them out
+                                           of the microsecond sweep)
+
+It also pins PR 6's satellite fix with a before/after pair on the same
+engine: ``serve/generate_hostsync`` times the OLD decode loop (a blocking
+``np.asarray`` per token — one host<->device round-trip per step) against
+``serve/generate_devacc`` (device-side accumulation, one transfer at the
+end), reported as us per decoded token.
+
+Rows are MERGED into ``BENCH_6.json`` (``run.py --smoke`` writes the load
+rows first in CI; this harness adds the serving rows), and
+``perf_gate.py`` asserts the p99 row is present, nonzero, and finite.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+BENCH_JSON = "BENCH_6.json"
+
+ARCH = "mamba2-370m"          # constant-state decode: the serving workhorse
+
+
+def _publish_serve_app(ws, arch: str):
+    """Publish the weights bundle + app for ``arch`` (smoke config)."""
+    from repro import models
+    from repro.ckpt import bundle_from_params
+    from repro.configs import get_config
+    from repro.core import ObjectKind, make_object
+
+    cfg = get_config(arch, smoke=True)
+    params = {
+        n: np.asarray(v) for n, v in models.init_params(cfg, 0).items()
+    }
+    bundle, payload = bundle_from_params(f"weights:{cfg.name}", "v1", params)
+    app, _ = make_object(
+        name=f"serve:{cfg.name}",
+        version="1",
+        kind=ObjectKind.APPLICATION,
+        refs=models.manifest_refs(cfg),
+        needed=[bundle.name],
+    )
+    with ws.management() as tx:
+        tx.publish(bundle, payload)
+        tx.publish(app)
+    return cfg, app.name
+
+
+def _bench_generate_sync_fix(cfg, ws, app_name, *, max_new: int) -> None:
+    """Satellite: the per-step host sync, before vs after, same engine."""
+    from repro.serve import ServeEngine
+
+    from .common import emit
+
+    engine = ServeEngine.from_workspace(
+        cfg, ws, app_name, cache_len=16 + max_new
+    )
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 16), dtype=np.int32)
+    # warm both code paths (jit compile off the clock), then measure
+    engine.generate(prompts, max_new, host_sync=True)
+    engine.generate(prompts, max_new, host_sync=False)
+    _, before = engine.generate(prompts, max_new, host_sync=True)
+    out_after, after = engine.generate(prompts, max_new, host_sync=False)
+    out_check, _ = engine.generate(prompts, max_new, host_sync=True)
+    np.testing.assert_array_equal(out_after, out_check)
+    emit(
+        "serve/generate_hostsync",
+        before.decode_s / max(before.tokens_out, 1),
+        f"per_token;np.asarray each step;tok_s={before.tok_per_s:.0f}",
+    )
+    emit(
+        "serve/generate_devacc",
+        after.decode_s / max(after.tokens_out, 1),
+        f"per_token;device accumulate;tok_s={after.tok_per_s:.0f}",
+    )
+
+
+def run(
+    *,
+    workers: int = 2,
+    n_requests: int = 32,
+    rate_hz: float = 200.0,
+    prompt_len: int = 12,
+    max_new_tokens: int = 8,
+    max_batch: int = 2,
+) -> None:
+    from repro.serve import run_traffic
+
+    from .common import emit, emit_value, fresh_workspace
+
+    print("name,us_per_call,derived")
+    ws = fresh_workspace()
+    try:
+        cfg, app_name = _publish_serve_app(ws, ARCH)
+        rep = run_traffic(
+            ws,
+            app_name,
+            arch=ARCH,
+            workers=workers,
+            n_requests=n_requests,
+            rate_hz=rate_hz,
+            prompt_len=prompt_len,
+            max_new_tokens=max_new_tokens,
+            max_batch=max_batch,
+        )
+        s = rep.summary()
+        assert rep.completed == n_requests, f"lost requests: {s}"
+        assert rep.failed == 0, f"worker crashes: {s}"
+        assert rep.p99_s > 0 and np.isfinite(rep.p99_s), s
+        tag = (
+            f"workers={workers};rate_hz={rate_hz};completed={rep.completed};"
+            f"stalls={rep.stalls}"
+        )
+        emit("serve/p50_latency", rep.p50_s, tag)
+        emit("serve/p99_latency", rep.p99_s, tag)
+        emit_value("serve/req_per_s", rep.req_per_s, tag)
+        emit_value("serve/tok_per_s", rep.tok_per_s, tag)
+        emit_value("serve/fleet_ready_s", max(rep.ready_s or [0.0]),
+                   "slowest worker spin-up (epoch load + first attach)")
+
+        _bench_generate_sync_fix(cfg, ws, app_name, max_new=max_new_tokens)
+    finally:
+        from .common import write_bench_json
+
+        ws.close()
+        print(f"wrote {write_bench_json(BENCH_JSON, merge=True)}")
+
+
+def main() -> None:
+    if "--smoke" in sys.argv:
+        run(workers=2, n_requests=24, rate_hz=200.0)
+        return
+    run(workers=3, n_requests=96, rate_hz=400.0, max_batch=4)
+
+
+if __name__ == "__main__":
+    main()

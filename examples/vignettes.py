@@ -17,6 +17,10 @@ Vignette 5 — warm-start a serving fleet inside an epoch: replicas spin up
              zero resolve/copy), an unrelated publish reuses every table
              (closure-hash keying), and the epoch path writes zero journal
              bytes throughout.
+Vignette 6 — serve a Poisson load over the shm fleet: spawn ring-connected
+             worker processes, drive exponential arrivals through the
+             continuous-batching ``engine.serve_loop``, and read sustained
+             req/s plus p50/p99 end-to-end latency off the TrafficReport.
 """
 
 import numpy as np
@@ -28,201 +32,249 @@ from repro.core import ObjectKind, inspector, interpose, make_object
 from repro.core.executor import LoadStats
 from repro.link import Workspace
 
-ws = Workspace.ephemeral(prefix="repro-vignettes-")
 
-# World: an MoE model (fragmented per-expert symbols) + a dense model
-moe_cfg = get_config("olmoe-1b-7b", smoke=True)
-dense_cfg = get_config("starcoder2-3b", smoke=True)
-moe_params = {n: np.asarray(v) for n, v in models.init_params(moe_cfg, 0).items()}
-dense_params = {
-    n: np.asarray(v) for n, v in models.init_params(dense_cfg, 1).items()
-}
+def main() -> None:
+    # Everything lives under main(): vignette 6 spawns real worker
+    # processes (spawn context re-imports this module in each child),
+    # so the script body must not run at import time.
+    ws = Workspace.ephemeral(prefix="repro-vignettes-")
 
-moe_bundle, moe_pl = bundle_from_params(
-    "weights:olmoe", "v1", moe_params,
-    fragment_layers=True, fragment_experts=True,
-)
-dense_bundle, dense_pl = bundle_from_params(
-    "weights:starcoder", "v1", dense_params, fragment_layers=True
-)
-moe_app, _ = make_object(
-    name="serve:olmoe", version="1", kind=ObjectKind.APPLICATION,
-    refs=models.manifest_refs(moe_cfg, fragment=True), needed=["weights:olmoe"],
-)
-dense_app, _ = make_object(
-    name="serve:starcoder", version="1", kind=ObjectKind.APPLICATION,
-    refs=models.manifest_refs(dense_cfg, fragment=True),
-    needed=["weights:starcoder"],
-)
-with ws.management() as tx:
-    for o, p in [(moe_bundle, moe_pl), (dense_bundle, dense_pl),
-                 (moe_app, b""), (dense_app, b"")]:
-        tx.publish(o, p)
+    # World: an MoE model (fragmented per-expert symbols) + a dense model
+    moe_cfg = get_config("olmoe-1b-7b", smoke=True)
+    dense_cfg = get_config("starcoder2-3b", smoke=True)
+    moe_params = {n: np.asarray(v) for n, v in models.init_params(moe_cfg, 0).items()}
+    dense_params = {
+        n: np.asarray(v) for n, v in models.init_params(dense_cfg, 1).items()
+    }
 
-t_moe = ws.load("serve:olmoe").table
-t_dense = ws.load("serve:starcoder").table
-
-# ---------------------------------------------------------------- vignette 1
-print("=== Vignette 1: ABI compatibility (Alice) ===")
-# the proposed v2 bundle drops layer 0's mlp_norm and reshapes a router
-v2_params = {
-    k: v for k, v in moe_params.items() if k != "blocks/mlp_norm/scale"
-}
-v2_params["blocks/router/w"] = moe_params["blocks/router/w"][:, :, : -1]
-v2_bundle, _ = bundle_from_params(
-    "weights:olmoe-v2", "v2", v2_params,
-    fragment_layers=True, fragment_experts=True,
-)
-conn = inspector.to_sqlite(
-    [t_moe, t_dense], abi_objects=[moe_bundle, v2_bundle]
-)
-missing = inspector.abi_incompatibilities(
-    conn, app="serve:olmoe", old_bundle="weights:olmoe",
-    new_bundle="weights:olmoe-v2",
-)
-print(f"  upgrading to v2 would break {len(missing)} relocations, e.g.:")
-for sym, req in missing[:4]:
-    print(f"    {sym}  (required by {req})")
-
-# ---------------------------------------------------------------- vignette 2
-print("=== Vignette 2: CVE audit (Bob) ===")
-bad_symbol = "blocks/experts/w_down[1][3]"   # layer 1, expert 3
-hits = inspector.cve_audit(conn, bundle="weights:olmoe", symbol=bad_symbol)
-print(f"  apps binding {bad_symbol!r}: {hits}")
-hits2 = inspector.cve_audit(conn, bundle="weights:olmoe", symbol="nonexistent")
-print(f"  apps binding a clean symbol: {hits2} (quarantine nothing)")
-
-# ---------------------------------------------------------------- vignette 3
-print("=== Vignette 3: fine-grained interposition (Charlie) ===")
-dbg = {"blocks/attn_norm/scale[1]": moe_params["blocks/attn_norm/scale"][1] * 100}
-dbg_bundle, dbg_pl = bundle_from_params("debug:norms", "1", dbg)
-with ws.management() as tx:
-    tx.publish(dbg_bundle, dbg_pl)
-n = interpose.rebind(
-    t_moe, symbol_glob="blocks/attn_norm/scale[1]", new_provider=dbg_bundle
-)
-img = ws.executor._apply_table(
-    ws.world().resolve("serve:olmoe"), t_moe, LoadStats()
-)
-print(f"  rebound {n} relocation(s); layer-1 norm now instrumented:")
-print(
-    "    layer0 scale[:3] =", np.asarray(img["blocks/attn_norm/scale[0]"])[:3],
-    "\n    layer1 scale[:3] =", np.asarray(img["blocks/attn_norm/scale[1]"])[:3],
-)
-edited = [r for r in inspector.table_records(t_moe) if r["flags"]]
-print(f"  inspector shows {len(edited)} edited row(s) -> fully auditable")
-
-# ---------------------------------------------------------------- vignette 4
-print("=== Vignette 4: preflight a risky library roll (Dana) ===")
-# Dana wants to roll weights:olmoe to the v2 params from vignette 1 (which
-# drop a norm scale and reshape the router). Stage it, preview, decide.
-roll_bundle, roll_pl = bundle_from_params(
-    "weights:olmoe", "v2", v2_params,
-    fragment_layers=True, fragment_experts=True,
-)
-
-
-class AbortRoll(Exception):
-    pass
-
-
-epoch_before = ws.epoch
-try:
-    with ws.management() as tx:
-        tx.publish(roll_bundle, roll_pl)
-        diff = tx.diff()
-        print(f"  staged diff: upgraded={sorted(diff.upgraded)}")
-        preview = tx.preview()
-        d = preview.delta_for("serve:olmoe")
-        print(
-            f"  preview for serve:olmoe: {len(d.changed)} changed, "
-            f"{len(d.unresolved)} unresolved, "
-            f"tables to rebuild: {preview.tables_to_rebuild}"
-        )
-        for u in d.unresolved[:3]:
-            print(f"    would break: {u['symbol']}")
-        # the same delta is visible through the one-call surface:
-        rep = ws.explain("serve:olmoe", pending=True)
-        assert rep.pending and rep.delta is not None
-        if d.unresolved:
-            raise AbortRoll  # commit would strand these relocations
-except AbortRoll:
-    print(
-        f"  roll aborted pre-commit; epoch still {ws.epoch} "
-        f"(was {epoch_before}), journal truncated "
-        f"({len(ws.journal.entries())} entries)"
+    moe_bundle, moe_pl = bundle_from_params(
+        "weights:olmoe", "v1", moe_params,
+        fragment_layers=True, fragment_experts=True,
     )
-assert ws.epoch == epoch_before
-np.testing.assert_array_equal(
-    np.asarray(ws.load("serve:olmoe")["blocks/router/w[0]"]),
-    moe_params["blocks/router/w"][0],
-)
-print("  committed world unchanged -> jobs keep loading the v1 mapping")
+    dense_bundle, dense_pl = bundle_from_params(
+        "weights:starcoder", "v1", dense_params, fragment_layers=True
+    )
+    moe_app, _ = make_object(
+        name="serve:olmoe", version="1", kind=ObjectKind.APPLICATION,
+        refs=models.manifest_refs(moe_cfg, fragment=True), needed=["weights:olmoe"],
+    )
+    dense_app, _ = make_object(
+        name="serve:starcoder", version="1", kind=ObjectKind.APPLICATION,
+        refs=models.manifest_refs(dense_cfg, fragment=True),
+        needed=["weights:starcoder"],
+    )
+    with ws.management() as tx:
+        for o, p in [(moe_bundle, moe_pl), (dense_bundle, dense_pl),
+                     (moe_app, b""), (dense_app, b"")]:
+            tx.publish(o, p)
 
-# ---------------------------------------------------------------- vignette 5
-print("=== Vignette 5: warm-start a serving fleet inside an epoch (Eve) ===")
-# Eve runs a fleet of replicas of serve:starcoder. Every replica start is an
-# epoch load: the relocation work already happened at end_mgmt (the table
-# was materialized AND pre-applied into a baked arena), so each warm start
-# is one copy-on-write mmap + view construction.
-import time as _time
+    t_moe = ws.load("serve:olmoe").table
+    t_dense = ws.load("serve:starcoder").table
 
-REPLICAS = 4
+    # ---------------------------------------------------------------- vignette 1
+    print("=== Vignette 1: ABI compatibility (Alice) ===")
+    # the proposed v2 bundle drops layer 0's mlp_norm and reshapes a router
+    v2_params = {
+        k: v for k, v in moe_params.items() if k != "blocks/mlp_norm/scale"
+    }
+    v2_params["blocks/router/w"] = moe_params["blocks/router/w"][:, :, : -1]
+    v2_bundle, _ = bundle_from_params(
+        "weights:olmoe-v2", "v2", v2_params,
+        fragment_layers=True, fragment_experts=True,
+    )
+    conn = inspector.to_sqlite(
+        [t_moe, t_dense], abi_objects=[moe_bundle, v2_bundle]
+    )
+    missing = inspector.abi_incompatibilities(
+        conn, app="serve:olmoe", old_bundle="weights:olmoe",
+        new_bundle="weights:olmoe-v2",
+    )
+    print(f"  upgrading to v2 would break {len(missing)} relocations, e.g.:")
+    for sym, req in missing[:4]:
+        print(f"    {sym}  (required by {req})")
+
+    # ---------------------------------------------------------------- vignette 2
+    print("=== Vignette 2: CVE audit (Bob) ===")
+    bad_symbol = "blocks/experts/w_down[1][3]"   # layer 1, expert 3
+    hits = inspector.cve_audit(conn, bundle="weights:olmoe", symbol=bad_symbol)
+    print(f"  apps binding {bad_symbol!r}: {hits}")
+    hits2 = inspector.cve_audit(conn, bundle="weights:olmoe", symbol="nonexistent")
+    print(f"  apps binding a clean symbol: {hits2} (quarantine nothing)")
+
+    # ---------------------------------------------------------------- vignette 3
+    print("=== Vignette 3: fine-grained interposition (Charlie) ===")
+    dbg = {"blocks/attn_norm/scale[1]": moe_params["blocks/attn_norm/scale"][1] * 100}
+    dbg_bundle, dbg_pl = bundle_from_params("debug:norms", "1", dbg)
+    with ws.management() as tx:
+        tx.publish(dbg_bundle, dbg_pl)
+    n = interpose.rebind(
+        t_moe, symbol_glob="blocks/attn_norm/scale[1]", new_provider=dbg_bundle
+    )
+    img = ws.executor._apply_table(
+        ws.world().resolve("serve:olmoe"), t_moe, LoadStats()
+    )
+    print(f"  rebound {n} relocation(s); layer-1 norm now instrumented:")
+    print(
+        "    layer0 scale[:3] =", np.asarray(img["blocks/attn_norm/scale[0]"])[:3],
+        "\n    layer1 scale[:3] =", np.asarray(img["blocks/attn_norm/scale[1]"])[:3],
+    )
+    edited = [r for r in inspector.table_records(t_moe) if r["flags"]]
+    print(f"  inspector shows {len(edited)} edited row(s) -> fully auditable")
+
+    # ---------------------------------------------------------------- vignette 4
+    print("=== Vignette 4: preflight a risky library roll (Dana) ===")
+    # Dana wants to roll weights:olmoe to the v2 params from vignette 1 (which
+    # drop a norm scale and reshape the router). Stage it, preview, decide.
+    roll_bundle, roll_pl = bundle_from_params(
+        "weights:olmoe", "v2", v2_params,
+        fragment_layers=True, fragment_experts=True,
+    )
 
 
-def _journal_bytes() -> int:
-    p = ws.registry.journal_path
-    return p.stat().st_size if p.exists() else 0
+    class AbortRoll(Exception):
+        pass
 
 
-journal_bytes0 = _journal_bytes()
-# one-call fleet warmup: the whole world is preloaded in parallel through
-# the process-wide EpochCache — after this, every replica spin-up is a hit
-warm = ws.warmup(workers=REPLICAS)
-print(
-    f"  warmup: {len(warm.names)} app(s) preloaded in "
-    f"{warm.wall_s * 1e3:.1f}ms (fills={warm.cache_fills})"
-)
-t0 = _time.perf_counter()
-fleet = [ws.load("serve:starcoder", strategy="stable-mmap")
-         for _ in range(REPLICAS)]
-mmap_s = _time.perf_counter() - t0
-t0 = _time.perf_counter()
-shared = [ws.load("serve:starcoder", strategy="stable-mmap-cached")
-          for _ in range(REPLICAS)]
-cached_s = _time.perf_counter() - t0
-t0 = _time.perf_counter()
-for _ in range(REPLICAS):
-    ws.load("serve:starcoder", strategy="stable")
-copy_s = _time.perf_counter() - t0
-assert all(r.arena is shared[0].arena for r in shared)  # ONE shared mapping
-print(
-    f"  {REPLICAS} replicas: epoch-resident {cached_s * 1e3:.1f}ms vs "
-    f"stable-mmap {mmap_s * 1e3:.1f}ms vs "
-    f"table-driven copy {copy_s * 1e3:.1f}ms "
-    f"({copy_s / max(cached_s, 1e-9):.0f}x); all cached replicas share "
-    f"one read-only mapping"
-)
-# CoW isolation: one replica scribbling on its weights cannot leak into the
-# baked arena or its siblings
-fleet[0]["final_norm/scale"][:] = 0
-assert np.any(np.asarray(fleet[1]["final_norm/scale"]))
-assert _journal_bytes() == journal_bytes0  # epoch path: zero journal bytes
-print("  epoch-path journal bytes written by the fleet: 0 (asserted)")
-# A publish that does not touch the fleet's closure (the debug bundle roll
-# below) reuses every materialized table and arena: replicas keep warm-
-# starting across the epoch bump with zero re-materialization.
-with ws.management() as tx:
-    tx.publish(*bundle_from_params(
-        "debug:norms", "2",
-        {"blocks/attn_norm/scale[1]": moe_params["blocks/attn_norm/scale"][1]},
-    ))
-mat = tx.materialization
-print(
-    f"  unrelated publish: re-materialized={sorted(mat.materialized)}, "
-    f"tables reused={mat.tables_reused}"
-)
-assert "serve:starcoder" in mat.reused
-ws.load("serve:starcoder", strategy="stable-mmap")  # still one mmap away
-print("  fleet keeps warm-starting across the epoch bump")
-ws.close()
+    epoch_before = ws.epoch
+    try:
+        with ws.management() as tx:
+            tx.publish(roll_bundle, roll_pl)
+            diff = tx.diff()
+            print(f"  staged diff: upgraded={sorted(diff.upgraded)}")
+            preview = tx.preview()
+            d = preview.delta_for("serve:olmoe")
+            print(
+                f"  preview for serve:olmoe: {len(d.changed)} changed, "
+                f"{len(d.unresolved)} unresolved, "
+                f"tables to rebuild: {preview.tables_to_rebuild}"
+            )
+            for u in d.unresolved[:3]:
+                print(f"    would break: {u['symbol']}")
+            # the same delta is visible through the one-call surface:
+            rep = ws.explain("serve:olmoe", pending=True)
+            assert rep.pending and rep.delta is not None
+            if d.unresolved:
+                raise AbortRoll  # commit would strand these relocations
+    except AbortRoll:
+        print(
+            f"  roll aborted pre-commit; epoch still {ws.epoch} "
+            f"(was {epoch_before}), journal truncated "
+            f"({len(ws.journal.entries())} entries)"
+        )
+    assert ws.epoch == epoch_before
+    np.testing.assert_array_equal(
+        np.asarray(ws.load("serve:olmoe")["blocks/router/w[0]"]),
+        moe_params["blocks/router/w"][0],
+    )
+    print("  committed world unchanged -> jobs keep loading the v1 mapping")
+
+    # ---------------------------------------------------------------- vignette 5
+    print("=== Vignette 5: warm-start a serving fleet inside an epoch (Eve) ===")
+    # Eve runs a fleet of replicas of serve:starcoder. Every replica start is an
+    # epoch load: the relocation work already happened at end_mgmt (the table
+    # was materialized AND pre-applied into a baked arena), so each warm start
+    # is one copy-on-write mmap + view construction.
+    import time as _time
+
+    REPLICAS = 4
+
+
+    def _journal_bytes() -> int:
+        p = ws.registry.journal_path
+        return p.stat().st_size if p.exists() else 0
+
+
+    journal_bytes0 = _journal_bytes()
+    # one-call fleet warmup: the whole world is preloaded in parallel through
+    # the process-wide EpochCache — after this, every replica spin-up is a hit
+    warm = ws.warmup(workers=REPLICAS)
+    print(
+        f"  warmup: {len(warm.names)} app(s) preloaded in "
+        f"{warm.wall_s * 1e3:.1f}ms (fills={warm.cache_fills})"
+    )
+    t0 = _time.perf_counter()
+    fleet = [ws.load("serve:starcoder", strategy="stable-mmap")
+             for _ in range(REPLICAS)]
+    mmap_s = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    shared = [ws.load("serve:starcoder", strategy="stable-mmap-cached")
+              for _ in range(REPLICAS)]
+    cached_s = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    for _ in range(REPLICAS):
+        ws.load("serve:starcoder", strategy="stable")
+    copy_s = _time.perf_counter() - t0
+    assert all(r.arena is shared[0].arena for r in shared)  # ONE shared mapping
+    print(
+        f"  {REPLICAS} replicas: epoch-resident {cached_s * 1e3:.1f}ms vs "
+        f"stable-mmap {mmap_s * 1e3:.1f}ms vs "
+        f"table-driven copy {copy_s * 1e3:.1f}ms "
+        f"({copy_s / max(cached_s, 1e-9):.0f}x); all cached replicas share "
+        f"one read-only mapping"
+    )
+    # CoW isolation: one replica scribbling on its weights cannot leak into the
+    # baked arena or its siblings
+    fleet[0]["final_norm/scale"][:] = 0
+    assert np.any(np.asarray(fleet[1]["final_norm/scale"]))
+    assert _journal_bytes() == journal_bytes0  # epoch path: zero journal bytes
+    print("  epoch-path journal bytes written by the fleet: 0 (asserted)")
+    # A publish that does not touch the fleet's closure (the debug bundle roll
+    # below) reuses every materialized table and arena: replicas keep warm-
+    # starting across the epoch bump with zero re-materialization.
+    with ws.management() as tx:
+        tx.publish(*bundle_from_params(
+            "debug:norms", "2",
+            {"blocks/attn_norm/scale[1]": moe_params["blocks/attn_norm/scale"][1]},
+        ))
+    mat = tx.materialization
+    print(
+        f"  unrelated publish: re-materialized={sorted(mat.materialized)}, "
+        f"tables reused={mat.tables_reused}"
+    )
+    assert "serve:starcoder" in mat.reused
+    ws.load("serve:starcoder", strategy="stable-mmap")  # still one mmap away
+    print("  fleet keeps warm-starting across the epoch bump")
+
+    # ---------------------------------------------------------------- vignette 6
+    print("=== Vignette 6: serve a Poisson load over the shm fleet ===")
+    # The traffic plane end to end: real worker processes, each loading the
+    # app through ONE machine-shared shm arena, wired to this dispatcher by
+    # shm request/response rings, running the continuous-batching
+    # engine.serve_loop. Workers reconstruct params 1:1 from the image, so
+    # the served app uses whole-tensor symbols (no per-layer fragments).
+    tr_cfg = get_config("mamba2-370m", smoke=True)
+    tr_params = {
+        n: np.asarray(v) for n, v in models.init_params(tr_cfg, 2).items()
+    }
+    tr_bundle, tr_pl = bundle_from_params("weights:mamba", "v1", tr_params)
+    tr_app, _ = make_object(
+        name="serve:mamba", version="1", kind=ObjectKind.APPLICATION,
+        refs=models.manifest_refs(tr_cfg), needed=["weights:mamba"],
+    )
+    with ws.management() as tx:
+        tx.publish(tr_bundle, tr_pl)
+        tx.publish(tr_app)
+    from repro.serve import run_traffic
+
+    rep = run_traffic(
+        ws, "serve:mamba", arch="mamba2-370m",
+        workers=2, n_requests=8, rate_hz=50.0,
+        prompt_len=8, max_new_tokens=6, max_batch=2,
+    )
+    assert rep.failed == 0 and rep.completed == 8
+    print(
+        f"  {rep.workers} workers ready in {max(rep.ready_s):.1f}s; "
+        f"{rep.completed}/{rep.sent} requests completed"
+    )
+    print(
+        f"  sustained {rep.req_per_s:.1f} req/s, {rep.tok_per_s:.1f} tok/s; "
+        f"p50 {rep.p50_s * 1e3:.1f}ms, p99 {rep.p99_s * 1e3:.1f}ms"
+    )
+    # every ring segment is already unlinked; a SIGKILLed worker would
+    # instead leave a dead-owner ring record for the next ws.gc()
+    print("  ring segments reclaimed; fleet shm arena survives for reuse")
+    ws.close()
+
+
+if __name__ == "__main__":
+    main()

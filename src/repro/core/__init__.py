@@ -26,6 +26,10 @@ Engine-room surface:
     shm_arena, run_fleet         — cross-process shared arenas: named POSIX
                                    shm segments so N worker processes map
                                    one physical copy (``stable-shm``)
+    ShmRing                      — the serving data plane: SPSC shm
+                                   request/response rings (fixed slots,
+                                   per-slot generation counters, record-
+                                   driven gc like the arenas)
     inspector, interpose         — observability + fine-grained rebinding
     CompileCache                 — AOT executable materialization
 """
@@ -80,6 +84,7 @@ from .shm_arena import (
     segment_exists,
     unlink_segment,
 )
+from .shm_ring import ShmRing, ShmRingError, ring_name
 from .symbol_index import IndexedResolver, SymbolIndex, closure_hash
 
 __all__ = [
@@ -129,6 +134,9 @@ __all__ = [
     "Relocation",
     "SharedArenaSegment",
     "ShmArenaEntry",
+    "ShmRing",
+    "ShmRingError",
+    "ring_name",
     "SymbolIndex",
     "closure_hash",
     "dependency_closure",

@@ -552,8 +552,26 @@ def gc_segments(
         try:
             rec = json.loads(rec_path.read_text())
             name = rec["name"]
-            key = (str(rec["app_hash"])[:16], str(rec["closure_hash"])[:16])
         except (OSError, ValueError, KeyError):
+            continue  # unknown shapes in shm/ are left untouched
+        if rec.get("kind") == "ring":
+            # Data-plane rings (core.shm_ring) are session conduits, not
+            # epoch caches: they live exactly as long as the process that
+            # owns them. A dead owner — SIGKILLed dispatcher or worker —
+            # condemns the segment regardless of content.
+            from . import shm_ring
+
+            if shm_ring.gc_ring_record(
+                rec, pid_alive=_pid_alive, segment_ready=_segment_ready
+            ):
+                if unlink_segment(name):
+                    removed.append(name)
+                    bytes_reclaimed += int(rec.get("size", 0))
+                rec_path.unlink(missing_ok=True)
+            continue
+        try:
+            key = (str(rec["app_hash"])[:16], str(rec["closure_hash"])[:16])
+        except KeyError:
             continue  # unknown shapes in shm/ are left untouched
         keep = key in live
         if keep:
@@ -620,42 +638,63 @@ def _fleet_worker(root, app_name, strategy, arch, max_new, barrier, queue):
 
     Imports stay inside the function so a load-only probe never pays the
     jax import; ``arch`` promotes the worker to a full ``ServeEngine``
-    replica that generates ``max_new`` tokens after attaching."""
+    replica that generates ``max_new`` tokens after attaching. Failures are
+    REPORTED, not swallowed: the worker pushes a structured error record
+    (exception repr + traceback excerpt) so the parent's ``FleetReport``
+    can name what died instead of timing out on silence."""
     import hashlib as _hashlib
     import os as _os
     import time as _time
 
-    from repro.link import Workspace
+    try:
+        from repro.link import Workspace
 
-    ws = Workspace.open(root)
-    barrier.wait(timeout=120)
-    t0 = _time.perf_counter()
-    image = ws.load(app_name, strategy=strategy)
-    load_s = _time.perf_counter() - t0
-    h = _hashlib.blake2b(digest_size=16)
-    for tname in sorted(image.tensors):
-        h.update(np.ascontiguousarray(image.tensors[tname]).view(np.uint8).tobytes())
-    result = {
-        "pid": _os.getpid(),
-        "strategy": strategy,
-        "load_s": load_s,
-        "cache_hit": bool(image.stats.cache_hit),
-        "shm_attached": bool(image.stats.shm_attached),
-        "segment": image.stats.shm_segment,
-        "tensors_digest": h.hexdigest(),
-    }
-    if arch is not None:
-        from repro.configs import get_config
-        from repro.serve import ServeEngine
+        ws = Workspace.open(root)
+        barrier.wait(timeout=120)
+        t0 = _time.perf_counter()
+        image = ws.load(app_name, strategy=strategy)
+        load_s = _time.perf_counter() - t0
+        h = _hashlib.blake2b(digest_size=16)
+        for tname in sorted(image.tensors):
+            h.update(
+                np.ascontiguousarray(image.tensors[tname]).view(np.uint8).tobytes()
+            )
+        result = {
+            "pid": _os.getpid(),
+            "strategy": strategy,
+            "load_s": load_s,
+            "cache_hit": bool(image.stats.cache_hit),
+            "shm_attached": bool(image.stats.shm_attached),
+            "segment": image.stats.shm_segment,
+            "tensors_digest": h.hexdigest(),
+        }
+        if arch is not None:
+            from repro.configs import get_config
+            from repro.serve import ServeEngine
 
-        cfg = get_config(arch, smoke=True)
-        engine = ServeEngine.from_workspace(cfg, ws, app_name, strategy=strategy)
-        rng = np.random.default_rng(0)
-        prompts = rng.integers(0, cfg.vocab_size, (2, 8), dtype=np.int32)
-        out, stats = engine.generate(prompts, max_new or 4)
-        result["tokens_out"] = int(stats.tokens_out)
-        result["sample"] = out[0, :4].tolist()
-    queue.put(result)
+            cfg = get_config(arch, smoke=True)
+            engine = ServeEngine.from_workspace(
+                cfg, ws, app_name, strategy=strategy
+            )
+            rng = np.random.default_rng(0)
+            prompts = rng.integers(0, cfg.vocab_size, (2, 8), dtype=np.int32)
+            out, stats = engine.generate(prompts, max_new or 4)
+            result["tokens_out"] = int(stats.tokens_out)
+            result["sample"] = out[0, :4].tolist()
+        queue.put(result)
+    except BaseException as e:
+        import traceback as _tb
+
+        queue.put(
+            {
+                "pid": _os.getpid(),
+                "strategy": strategy,
+                "failed": True,
+                "error": repr(e),
+                "traceback": _tb.format_exc()[-2000:],
+            }
+        )
+        raise
 
 
 def run_fleet(
@@ -674,7 +713,13 @@ def run_fleet(
     The exclusive-create protocol guarantees at most ONE worker fills the
     segment; everyone else attaches — the machine-wide analogue of the
     EpochCache's one-fill-per-key contract. Returns one result dict per
-    worker (pid, segment, shm_attached, load_s, tensors_digest, ...)."""
+    worker: successes carry (pid, segment, shm_attached, load_s,
+    tensors_digest, ...); failures carry structured error records
+    (``failed``, ``error``, ``traceback``, ``exit_code``) instead of
+    stalling the fleet until the timeout — a crashed worker is accounted
+    for the moment its process dies (SIGKILL included, in which case the
+    record is synthesized from the exit code since the worker never got to
+    report its own traceback)."""
     import multiprocessing as mp
 
     if processes < 1:
@@ -697,6 +742,11 @@ def run_fleet(
     for p in procs:
         p.start()
     results: list[dict] = []
+    synthesized: set[int] = set()  # pids whose death we recorded ourselves
+
+    def reported_pids() -> set:
+        return {r.get("pid") for r in results}
+
     try:
         while len(results) < len(procs) and time.monotonic() < deadline:
             try:
@@ -704,14 +754,37 @@ def run_fleet(
                 continue
             except _queue.Empty:
                 pass
-            if all(not p.is_alive() for p in procs):
-                # a worker died without reporting: drain stragglers, stop
-                # waiting out the full deadline
+            # A dead worker that never reported is a failure record, not a
+            # reason to ride out the timeout. Drain once more first: the
+            # worker may have pushed its (success or error) record in the
+            # instant before exiting.
+            dead = [
+                p for p in procs
+                if not p.is_alive()
+                and p.pid not in reported_pids()
+                and p.pid not in synthesized
+            ]
+            if dead:
                 try:
                     while True:
                         results.append(queue.get(timeout=0.25))
                 except _queue.Empty:
-                    break
+                    pass
+                seen = reported_pids()
+                for p in dead:
+                    if p.pid in seen:
+                        continue
+                    synthesized.add(p.pid)
+                    results.append(
+                        {
+                            "pid": p.pid,
+                            "strategy": strategy,
+                            "failed": True,
+                            "exit_code": p.exitcode,
+                            "error": f"worker exited with code {p.exitcode} "
+                                     "before reporting",
+                        }
+                    )
         for p in procs:
             p.join(timeout=max(0.1, deadline - time.monotonic()))
     finally:
@@ -719,10 +792,15 @@ def run_fleet(
             if p.is_alive():
                 p.kill()
                 p.join(timeout=5)
+    # exit codes enrich the records of workers that DID report an error
+    # before dying (their raise re-terminated the process non-zero)
+    codes = {p.pid: p.exitcode for p in procs}
+    for r in results:
+        if r.get("failed") and "exit_code" not in r:
+            r["exit_code"] = codes.get(r.get("pid"))
     if len(results) != len(procs):
-        codes = [p.exitcode for p in procs]
         raise ShmArenaError(
-            f"fleet: {len(results)}/{len(procs)} workers reported "
-            f"(exit codes {codes})"
+            f"fleet: {len(results)}/{len(procs)} workers accounted for "
+            f"(exit codes {[p.exitcode for p in procs]})"
         )
     return results

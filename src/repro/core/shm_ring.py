@@ -1,0 +1,299 @@
+"""Shared-memory request/response rings: the serving fleet's data plane.
+
+``core/shm_arena.py`` proved the control-plane half of the paper's epoch
+argument across processes: the epoch's *weights* are immutable, so N
+workers attach one physical copy. This module is the matching data plane —
+the bytes that DO move during an epoch (requests in, completions out)
+travel through fixed-slot rings in named POSIX shm segments, so a
+dispatcher process hands a worker a request without a pipe write, a pickle,
+or a kernel round-trip on the hot path.
+
+Protocol (single-producer / single-consumer per ring)
+=====================================================
+
+A ring is a page-sized header plus ``slots`` fixed-size slots. The header
+carries seqlock-style cursors: ``head`` (next sequence the producer will
+publish) and ``tail`` (next sequence the consumer will take). Each slot
+carries a **generation counter**: the sequence number *plus one* of the
+publication occupying it (zero = never written — a fresh segment is
+zero-filled, so emptiness needs no initialization pass).
+
+* ``push``: read both cursors; ``head - tail >= slots`` means full (the
+  producer can never lap the consumer, which is what makes torn reads
+  impossible in steady state). Write length + payload into slot
+  ``head % slots``, THEN set the slot generation to ``head + 1`` (the
+  publication barrier — a reader trusts nothing before it), THEN advance
+  ``head``.
+* ``pop``: read ``tail``; the slot's generation must equal ``tail + 1`` —
+  anything else means "nothing new" (a stale generation from ``slots``
+  sequences ago, or a crashed producer's half-written slot, reads as
+  *absence*, never as data). Copy the payload out, re-check the generation
+  (paranoia against a protocol-violating writer), THEN advance ``tail``.
+
+Every field the two sides share is an aligned 8-byte (or 4-byte) slot in
+the mapping written with a single ``struct.pack_into`` — one memcpy on
+CPython — and ordered so that the *marker* (generation, cursor) lands only
+after the bytes it guards.
+
+Crash discipline mirrors the arena module: the creator writes a record
+under ``<root>/shm/<name>.json`` (``kind: "ring"``, owner pid) *before*
+the segment becomes attachable, so ``ws.gc()`` can census rings machine-
+wide and unlink any whose owner died — a SIGKILLed dispatcher (or a worker
+holding a ring) cannot leak a segment past the next gc. A producer that
+dies between publishing a slot and advancing ``head`` is healed by
+``reconcile()`` on re-attach: a slot generation of ``head + 1`` proves the
+publication completed, so the cursor is rolled forward instead of
+re-publishing (which would duplicate) or stalling (which would lose it).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import struct
+import time
+from pathlib import Path
+
+from .errors import StableLinkingError
+from .objects import PAGE_BYTES, align_up
+from .shm_arena import (
+    _require_posixshmem,
+    _SegmentNotReady,
+    _ShmHandle,
+    _shm_unlink,
+    shm_records_dir,
+)
+
+RING_PREFIX = "repro-ring-"
+
+# Header layout (one page): magic | ready | slots u32 | slot_bytes u32 |
+# head u64 | tail u64. Cursors are 8-aligned so each read/write is one
+# aligned memcpy.
+RING_HEADER_BYTES = PAGE_BYTES
+_MAGIC = b"RPRRING1"
+_READY_OFF = 8
+_SLOTS_OFF = 12
+_SLOT_BYTES_OFF = 16
+_HEAD_OFF = 24
+_TAIL_OFF = 32
+
+# Per-slot layout: generation u64 | payload length u32 | pad | payload.
+_SLOT_HDR = 16
+
+
+class ShmRingError(StableLinkingError):
+    """A shared-memory ring could not be created, attached, or used."""
+
+
+def ring_name(root, channel: str) -> str:
+    """Content-addressed segment name for one (root, channel) ring."""
+    h = hashlib.blake2b(digest_size=16)
+    for part in (os.fspath(Path(root).resolve()), channel):
+        h.update(part.encode())
+        h.update(b"\x00")
+    return RING_PREFIX + h.hexdigest()
+
+
+def _write_ring_record(registry, name: str, channel: str, size: int) -> None:
+    d = shm_records_dir(registry)
+    d.mkdir(parents=True, exist_ok=True)
+    rec = {
+        "name": name,
+        "kind": "ring",
+        "channel": channel,
+        "size": size,
+        "owner_pid": os.getpid(),
+        "created_ts": time.time(),
+    }
+    tmp = d / f"{name}.json.tmp"
+    tmp.write_text(json.dumps(rec, sort_keys=True))
+    os.replace(tmp, d / f"{name}.json")
+
+
+class ShmRing:
+    """One SPSC ring over a named shm segment.
+
+    Exactly one process should ``push`` and exactly one should ``pop``; the
+    dispatcher gets a lock-light zero-copy path by giving every worker its
+    own request ring and response ring (N SPSC pairs instead of one MPMC
+    ring — no cross-process atomics, which CPython cannot express anyway).
+    """
+
+    def __init__(self, shm: _ShmHandle, name: str, slots: int, slot_bytes: int):
+        self.shm = shm
+        self.name = name
+        self.slots = slots
+        self.slot_bytes = slot_bytes
+        self._stride = _SLOT_HDR + align_up(slot_bytes, 8)
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def create(
+        cls, registry, channel: str, *, slots: int, slot_bytes: int
+    ) -> "ShmRing":
+        """Create (and own) the ring for ``channel`` under this root.
+
+        The record is written before the segment turns ready, so a creator
+        SIGKILLed at any point leaves either nothing or a husk the next
+        ``ws.gc()`` reclaims by its dead owner pid. A leftover segment of
+        the same name (a previous crashed run of this channel) is unlinked
+        and replaced — rings are owned, never shared-filled like arenas.
+        """
+        _require_posixshmem()
+        if slots < 1 or slot_bytes < 1:
+            raise ShmRingError("ring needs slots >= 1 and slot_bytes >= 1")
+        name = ring_name(registry.root, channel)
+        stride = _SLOT_HDR + align_up(slot_bytes, 8)
+        size = RING_HEADER_BYTES + align_up(slots * stride, PAGE_BYTES)
+        _write_ring_record(registry, name, channel, size)
+        for attempt in range(3):
+            try:
+                shm = _ShmHandle(name, create=True, size=size)
+                break
+            except FileExistsError:
+                _shm_unlink(name)  # stale ring from a crashed prior owner
+        else:  # pragma: no cover - somebody keeps racing this name
+            raise ShmRingError(f"ring {name} kept reappearing during create")
+        mv = shm.buf
+        mv[:RING_HEADER_BYTES] = b"\x00" * RING_HEADER_BYTES
+        struct.pack_into("<II", mv, _SLOTS_OFF, slots, slot_bytes)
+        mv[:8] = _MAGIC
+        mv[_READY_OFF] = 1  # attachers trust nothing before this byte
+        return cls(shm, name, slots, slot_bytes)
+
+    @classmethod
+    def attach(cls, registry, channel: str, *, timeout: float = 30.0) -> "ShmRing":
+        """Attach the ring for ``channel``, polling until its creator has
+        flipped the ready byte (bounded by ``timeout``)."""
+        _require_posixshmem()
+        name = ring_name(registry.root, channel)
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                shm = _ShmHandle(name)
+            except (FileNotFoundError, _SegmentNotReady):
+                shm = None
+            if shm is not None:
+                hdr = bytes(shm.buf[:_SLOT_BYTES_OFF + 4])
+                if hdr[:8] == _MAGIC and hdr[_READY_OFF] == 1:
+                    slots, slot_bytes = struct.unpack_from("<II", hdr, _SLOTS_OFF)
+                    return cls(shm, name, slots, slot_bytes)
+                shm.close()
+            if time.monotonic() >= deadline:
+                raise ShmRingError(
+                    f"ring {name} (channel {channel!r}) never became ready "
+                    f"within {timeout:.0f}s"
+                )
+            time.sleep(0.002)
+
+    def close(self) -> None:
+        self.shm.close()
+
+    def unlink(self, registry=None) -> bool:
+        """Remove the segment machine-wide (and its record, if a registry
+        is given). Mappings survive per POSIX unlink semantics."""
+        found = _shm_unlink(self.name)
+        if registry is not None:
+            (shm_records_dir(registry) / f"{self.name}.json").unlink(
+                missing_ok=True
+            )
+        return found
+
+    # ------------------------------------------------------------- internals
+    def _u64(self, off: int) -> int:
+        return struct.unpack_from("<Q", self.shm.buf, off)[0]
+
+    def _set_u64(self, off: int, v: int) -> None:
+        struct.pack_into("<Q", self.shm.buf, off, v)
+
+    def _slot_off(self, seq: int) -> int:
+        return RING_HEADER_BYTES + (seq % self.slots) * self._stride
+
+    def _write_payload(self, seq: int, data: bytes) -> None:
+        base = self._slot_off(seq)
+        mv = self.shm.buf
+        struct.pack_into("<I", mv, base + 8, len(data))
+        mv[base + _SLOT_HDR : base + _SLOT_HDR + len(data)] = data
+
+    def _publish(self, seq: int) -> None:
+        # generation = seq + 1: distinguishes "this sequence, complete"
+        # from both a zeroed fresh slot and the slot's previous occupant
+        # (whose generation is exactly `slots` smaller)
+        self._set_u64(self._slot_off(seq), seq + 1)
+
+    def _advance_head(self, seq: int) -> None:
+        self._set_u64(_HEAD_OFF, seq + 1)
+
+    # -------------------------------------------------------------- protocol
+    @property
+    def capacity(self) -> int:
+        return self.slots
+
+    @property
+    def pending(self) -> int:
+        """Published-but-unconsumed slots (either side may read this)."""
+        return max(0, self._u64(_HEAD_OFF) - self._u64(_TAIL_OFF))
+
+    def reconcile(self) -> int:
+        """Producer-side crash healing (call once when adopting the
+        producer role on an existing ring): roll ``head`` forward over any
+        slot whose generation proves a completed publication the dead
+        producer never cursored. Returns the number of slots adopted."""
+        h = self._u64(_HEAD_OFF)
+        adopted = 0
+        for _ in range(self.slots):
+            if self._u64(self._slot_off(h)) != h + 1:
+                break
+            h += 1
+            adopted += 1
+        if adopted:
+            self._set_u64(_HEAD_OFF, h)
+        return adopted
+
+    def push(self, data: bytes) -> bool:
+        """Publish one payload; False when the ring is full (backpressure
+        is the caller's policy — retry, route elsewhere, or queue)."""
+        if len(data) > self.slot_bytes:
+            raise ShmRingError(
+                f"payload of {len(data)} bytes exceeds ring slot size "
+                f"{self.slot_bytes}"
+            )
+        h = self._u64(_HEAD_OFF)
+        if h - self._u64(_TAIL_OFF) >= self.slots:
+            return False
+        self._write_payload(h, data)
+        self._publish(h)
+        self._advance_head(h)
+        return True
+
+    def pop(self) -> bytes | None:
+        """Take the oldest published payload; None when nothing is ready.
+
+        A half-written slot (producer died before its generation write)
+        reads as None — absence, never torn bytes."""
+        t = self._u64(_TAIL_OFF)
+        base = self._slot_off(t)
+        if self._u64(base) != t + 1:
+            return None
+        ln = struct.unpack_from("<I", self.shm.buf, base + 8)[0]
+        if ln > self.slot_bytes:  # pragma: no cover - corrupt writer
+            raise ShmRingError(f"slot {t % self.slots} claims {ln} bytes")
+        data = bytes(self.shm.buf[base + _SLOT_HDR : base + _SLOT_HDR + ln])
+        if self._u64(base) != t + 1:  # pragma: no cover - protocol violator
+            return None
+        self._set_u64(_TAIL_OFF, t + 1)
+        return data
+
+
+def gc_ring_record(rec: dict, *, pid_alive, segment_ready) -> bool:
+    """Should this ``kind: "ring"`` record's segment be reclaimed?
+
+    A ring lives exactly as long as its owner: rings are session-scoped
+    conduits, not epoch-scoped caches, so a dead owner pid condemns the
+    segment no matter what it contains (its peers can no longer make
+    progress on it anyway). ``segment_ready`` is accepted for symmetry
+    with the arena rules: a record whose segment is already gone is a
+    record-only orphan the caller drops without unlinking."""
+    owner = int(rec.get("owner_pid", 0))
+    return not pid_alive(owner)

@@ -12,6 +12,12 @@ to compare loaders by name (any strategy registered in ``repro.link``).
 same app via the ``stable-shm`` strategy, proving the whole machine shares
 ONE physical arena copy (at most one worker fills the shm segment, the
 rest attach); the fleet summary is included in the output JSON.
+
+``--traffic N`` goes one step further: it spawns N serving workers wired
+to the dispatcher by shm request/response rings and drives a Poisson load
+(``--rate-hz``, ``--requests``) through ``engine.serve_loop`` — the
+continuous-batching scheduler — reporting sustained req/s, tok/s, and
+p50/p99 end-to-end latency.
 """
 
 from __future__ import annotations
@@ -44,6 +50,20 @@ def main() -> None:
         "--fleet", type=int, default=0, metavar="N",
         help="also spawn N worker processes sharing one shm arena "
              "(stable-shm) and report fills/attaches",
+    )
+    ap.add_argument(
+        "--traffic", type=int, default=0, metavar="N",
+        help="drive a Poisson request load through N serving workers "
+             "connected by shm rings (continuous batching via "
+             "engine.serve_loop); reports sustained req/s and p50/p99",
+    )
+    ap.add_argument(
+        "--rate-hz", type=float, default=100.0,
+        help="Poisson arrival rate for --traffic",
+    )
+    ap.add_argument(
+        "--requests", type=int, default=32,
+        help="number of requests --traffic sends",
     )
     ap.add_argument("--registry", default=None)
     args = ap.parse_args()
@@ -104,6 +124,23 @@ def main() -> None:
             ws, app_name, processes=args.fleet, strategy="stable-shm"
         )
         payload["fleet"] = report.summary()
+    if args.traffic:
+        # The full traffic plane: dispatcher + N ring-connected serving
+        # workers under a Poisson load (repro.serve.traffic).
+        from repro.serve import run_traffic
+
+        rep = run_traffic(
+            ws,
+            app_name,
+            arch=args.arch,
+            workers=args.traffic,
+            n_requests=args.requests,
+            rate_hz=args.rate_hz,
+            prompt_len=args.prompt_len,
+            max_new_tokens=args.max_new,
+            max_batch=args.batch,
+        )
+        payload["traffic"] = rep.summary()
     if args.registry is None:
         # throwaway registry: any stable-shm load (single engine OR fleet)
         # published machine-wide segments nothing will ever reattach — a

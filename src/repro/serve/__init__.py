@@ -1,3 +1,23 @@
 from .engine import FleetReport, ServeEngine
+from .scheduler import (
+    STOP,
+    Completion,
+    Request,
+    ServeLoopReport,
+    SlotScheduler,
+    run_serve_loop,
+)
+from .traffic import TrafficReport, run_traffic
 
-__all__ = ["FleetReport", "ServeEngine"]
+__all__ = [
+    "Completion",
+    "FleetReport",
+    "Request",
+    "STOP",
+    "ServeEngine",
+    "ServeLoopReport",
+    "SlotScheduler",
+    "TrafficReport",
+    "run_serve_loop",
+    "run_traffic",
+]

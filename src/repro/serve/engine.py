@@ -53,12 +53,37 @@ class FleetReport:
     def fills(self) -> int:
         """Workers that had to publish (fill) the shm segment — the
         exclusive-create protocol bounds this at 1 per segment, 0 when the
-        segment was already warm."""
-        return sum(1 for w in self.workers if not w.get("shm_attached"))
+        segment was already warm. Failed workers never count as fills."""
+        return sum(
+            1
+            for w in self.workers
+            if not w.get("failed") and not w.get("shm_attached")
+        )
 
     @property
     def attaches(self) -> int:
-        return len(self.workers) - self.fills
+        return len(self.workers) - self.fills - self.failed
+
+    @property
+    def failed(self) -> int:
+        """Workers that crashed (structured error records from
+        ``run_fleet``: exit code + traceback excerpt, surfaced the moment
+        the process dies instead of riding out the join timeout)."""
+        return sum(1 for w in self.workers if w.get("failed"))
+
+    @property
+    def errors(self) -> list:
+        """The failed workers' error records, ready for a log line."""
+        return [
+            {
+                "pid": w.get("pid"),
+                "exit_code": w.get("exit_code"),
+                "error": w.get("error"),
+                "traceback": w.get("traceback", ""),
+            }
+            for w in self.workers
+            if w.get("failed")
+        ]
 
     @property
     def segments(self) -> set:
@@ -71,6 +96,8 @@ class FleetReport:
             "wall_s": self.wall_s,
             "fills": self.fills,
             "attaches": self.attaches,
+            "failed": self.failed,
+            "errors": self.errors,
             "segments": sorted(s for s in self.segments if s),
             "pids": [w.get("pid") for w in self.workers],
         }
@@ -182,9 +209,19 @@ class ServeEngine:
         )
 
     def generate(
-        self, prompts: np.ndarray, max_new_tokens: int
+        self,
+        prompts: np.ndarray,
+        max_new_tokens: int,
+        *,
+        host_sync: bool = False,
     ) -> tuple[np.ndarray, ServeStats]:
-        """prompts: (B, S) int32 -> (B, max_new_tokens) greedy continuations."""
+        """prompts: (B, S) int32 -> (B, max_new_tokens) greedy continuations.
+
+        The decode loop accumulates tokens DEVICE-side and pays one host
+        transfer after the final step. ``host_sync=True`` restores the old
+        behaviour (``np.asarray`` per iteration, blocking the host on the
+        device every step) — kept only so ``benchmarks/serve_load.py`` can
+        report the before/after cost of that per-step sync."""
         stats = ServeStats()
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if self.cfg.is_encdec:
@@ -202,12 +239,60 @@ class ServeEngine:
         jax.block_until_ready(tok)
         stats.prefill_s = time.perf_counter() - t0
 
-        out = [np.asarray(tok)]
+        out = [tok]
         t1 = time.perf_counter()
+        if host_sync:
+            # legacy path: one blocking device->host round-trip per token
+            host = [np.asarray(tok)]
+            for _ in range(max_new_tokens - 1):
+                tok, cache = self._decode(self.params, cache, tok)
+                host.append(np.asarray(tok))
+            jax.block_until_ready(tok)
+            stats.decode_s = time.perf_counter() - t1
+            stats.tokens_out = prompts.shape[0] * max_new_tokens
+            return np.concatenate(host, axis=1), stats
         for _ in range(max_new_tokens - 1):
             tok, cache = self._decode(self.params, cache, tok)
-            out.append(np.asarray(tok))
+            out.append(tok)
         jax.block_until_ready(tok)
         stats.decode_s = time.perf_counter() - t1
         stats.tokens_out = prompts.shape[0] * max_new_tokens
-        return np.concatenate(out, axis=1), stats
+        return np.asarray(jnp.concatenate(out, axis=1)), stats
+
+    def serve_loop(
+        self,
+        source,
+        sink,
+        *,
+        max_batch: int = 4,
+        max_queue: int = 16,
+        max_new_cap: int = 0,
+    ):
+        """Continuous batching: admit requests into open decode slots.
+
+        Unlike ``generate`` (a static batch that starts and finishes
+        together), this runs a fixed pool of ``max_batch`` slots, each
+        holding one request's private cache row, admitted and retired
+        independently at every decode step — the serving-tier loop the shm
+        traffic plane (``repro.serve.traffic``) drives. ``source()``
+        yields ``scheduler.Request | None | scheduler.STOP``; finished
+        ``scheduler.Completion``s go to ``sink``. Requires a positive
+        ``cache_len`` (slot K/V rows need decode headroom past the
+        prompt). Returns a ``scheduler.ServeLoopReport``.
+        """
+        from . import scheduler
+
+        if self.cache_len <= 0 and self.cfg.family not in ("ssm",):
+            raise ValueError(
+                "serve_loop needs an engine built with cache_len > "
+                "prompt_len + max_new_tokens (slot K/V rows need decode "
+                "headroom)"
+            )
+        return scheduler.run_serve_loop(
+            self,
+            source,
+            sink,
+            max_batch=max_batch,
+            max_queue=max_queue,
+            max_new_cap=max_new_cap,
+        )

@@ -1,0 +1,337 @@
+"""Continuous batching: admit requests into open decode slots mid-flight.
+
+``ServeEngine.generate`` runs a *static* batch — every sequence starts and
+ends together, so a 4-slot batch serving one straggler wastes 3 slots for
+the whole tail. This module replaces that with the standard serving-tier
+discipline: a fixed pool of ``max_batch`` decode slots, each holding one
+request's private cache row (KV for transformers, conv/ssm state for
+mamba2/hybrid — the per-request ``InferenceCache`` idiom), admitted and
+retired independently at every decode step.
+
+The trick that keeps this jit-friendly across all three model families:
+every family's decode cache is a pytree whose array leaves carry batch at
+axis 1 (``(L, B, ...)``) with a scalar ``pos``. A slot is a B=1 cache; the
+pool stacks slot caches on a NEW leading axis (``(slots, L, 1, ...)``,
+``pos`` becomes ``(slots,)``) and one ``jax.vmap`` of ``models.decode_step``
+advances every slot in a single compiled dispatch — per-slot positions,
+per-slot RoPE phases, per-slot ring-buffer writes all fall out of the vmap.
+Admission splices a freshly prefilled B=1 cache into its slot with
+``dynamic_update_slice`` (donated, so it is an in-place row write on the
+device buffer).
+
+Host/device contract (this is where PR 6's satellite fix generalizes):
+the decode loop never syncs per step. Sampled tokens are scattered into a
+device-side ``out_buf`` at per-slot step indices; the host mirrors the
+step counters deterministically (it issued the steps, so it knows them)
+and pays exactly ONE device sync per *completed* request — fetching that
+request's finished row.
+
+Crash/queue policy: ``max_queue`` bounds accepted-but-unadmitted requests
+(the backpressure signal the shm rings surface to the dispatcher), and the
+loop drains queue + in-flight slots after the source signals STOP.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+
+#: Source sentinel: no more requests will ever arrive; drain and return.
+STOP = object()
+
+
+@dataclass(frozen=True)
+class Request:
+    """One unit of traffic: a prompt and how far to decode it."""
+
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int
+    enqueued_ts: float = 0.0         # dispatcher clock; 0 = unknown
+
+
+@dataclass
+class Completion:
+    """A finished request: greedy continuation + latency breakdown."""
+
+    rid: int
+    tokens: np.ndarray               # (max_new_tokens,) int32
+    admitted_ts: float
+    finished_ts: float
+    enqueued_ts: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        """Queue-to-finish when the enqueue time is known, else
+        admit-to-finish."""
+        start = self.enqueued_ts or self.admitted_ts
+        return self.finished_ts - start
+
+
+@dataclass
+class ServeLoopReport:
+    """What one ``serve_loop`` invocation did."""
+
+    completed: int = 0
+    admitted: int = 0
+    steps: int = 0                   # batched decode dispatches
+    tokens_out: int = 0
+    peak_active: int = 0
+    peak_queue: int = 0
+    rejected: int = 0                # source offers refused (queue full)
+    wall_s: float = 0.0
+
+    def summary(self) -> dict:
+        return {
+            "completed": self.completed,
+            "admitted": self.admitted,
+            "steps": self.steps,
+            "tokens_out": self.tokens_out,
+            "peak_active": self.peak_active,
+            "peak_queue": self.peak_queue,
+            "rejected": self.rejected,
+            "wall_s": self.wall_s,
+        }
+
+
+@dataclass
+class _Slot:
+    """Host-side mirror of one device slot (the scheduler's bookkeeping)."""
+
+    request: Request
+    admitted_ts: float
+    steps_done: int                  # tokens already in out_buf for this slot
+
+
+class SlotScheduler:
+    """The device half of continuous batching for one ``ServeEngine``.
+
+    Owns the stacked slot state (caches, next-token feeds, ``out_buf``,
+    step counters) and the two jitted programs that mutate it: ``_step``
+    (vmap-advance every slot one token) and ``_admit`` (splice one B=1
+    cache row in). Built lazily on first admission so the slot template
+    matches whatever cache pytree the model family actually produces.
+    """
+
+    def __init__(self, engine, *, max_batch: int, max_new_cap: int = 0):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.engine = engine
+        self.slots = max_batch
+        self.max_new_cap = max_new_cap   # out_buf width; 0 = first admit's
+        self._state = None           # (cache, toks, out_buf, steps)
+        self.active = np.zeros(max_batch, dtype=bool)
+        self.slot_meta: list[_Slot | None] = [None] * max_batch
+
+        cfg, params = engine.cfg, engine.params
+
+        def _step(params, cache, toks, out_buf, steps, active):
+            def one(c, t):
+                logits, c = models.decode_step(cfg, params, c, t)
+                return jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32), c
+
+            nxt, cache = jax.vmap(one)(cache, toks)
+            nxt = jnp.where(active, nxt, 0)
+            row = jnp.arange(out_buf.shape[0])
+            idx = jnp.clip(steps, 0, out_buf.shape[1] - 1)
+            out_buf = out_buf.at[row, idx].set(
+                jnp.where(active, nxt, out_buf[row, idx])
+            )
+            steps = steps + active.astype(jnp.int32)
+            return cache, nxt[:, None, None], out_buf, steps
+
+        def _admit(cache, toks, out_buf, steps, row_cache, tok0, idx):
+            cache = jax.tree_util.tree_map(
+                lambda s, r: jax.lax.dynamic_update_slice_in_dim(
+                    s, r[None].astype(s.dtype), idx, 0
+                ),
+                cache,
+                row_cache,
+            )
+            zrow = jnp.zeros((1, out_buf.shape[1]), jnp.int32)
+            zrow = zrow.at[0, 0].set(tok0)
+            out_buf = jax.lax.dynamic_update_slice_in_dim(out_buf, zrow, idx, 0)
+            steps = jax.lax.dynamic_update_slice_in_dim(
+                steps, jnp.ones((1,), jnp.int32), idx, 0
+            )
+            toks = jax.lax.dynamic_update_slice(
+                toks, tok0.reshape(1, 1, 1).astype(jnp.int32), (idx, 0, 0)
+            )
+            return cache, toks, out_buf, steps
+
+        # donate the stacked state: both programs are in-place row updates
+        self._step_fn = jax.jit(_step, donate_argnums=(1, 2, 3, 4))
+        self._admit_fn = jax.jit(_admit, donate_argnums=(0, 1, 2, 3))
+
+    # --------------------------------------------------------------- state
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if not self.active[i]]
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def _init_state(self, row_cache, max_new_cap: int) -> None:
+        self.max_new_cap = max_new_cap
+        cache = jax.tree_util.tree_map(
+            lambda r: jnp.zeros((self.slots,) + np.shape(r), r.dtype),
+            row_cache,
+        )
+        self._state = (
+            cache,
+            jnp.zeros((self.slots, 1, 1), jnp.int32),
+            jnp.zeros((self.slots, max_new_cap), jnp.int32),
+            jnp.zeros((self.slots,), jnp.int32),
+        )
+
+    # ------------------------------------------------------------ protocol
+    def admit(self, req: Request, now: float) -> int:
+        """Prefill ``req`` and splice its cache into a free slot.
+
+        Returns the slot index. The prefill is the engine's own jitted
+        closure, so requests with equal prompt lengths share one compiled
+        prefill program."""
+        free = self.free_slots
+        if not free:
+            raise RuntimeError("admit called with no free slot")
+        idx = free[0]
+        eng = self.engine
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        if eng.cfg.is_encdec:
+            rng = np.random.default_rng(0)
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal(
+                    (1, req.prompt.shape[0], eng.cfg.d_model)
+                ),
+                jnp.dtype(eng.cfg.dtype),
+            )
+        logits, row_cache = eng._prefill(eng.params, batch)
+        tok0 = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+        if self._state is None:
+            self._init_state(
+                row_cache, self.max_new_cap or max(req.max_new_tokens, 8)
+            )
+        if req.max_new_tokens > self.max_new_cap:
+            raise ValueError(
+                f"request {req.rid} wants {req.max_new_tokens} tokens but "
+                f"this loop's out_buf holds {self.max_new_cap}; admit the "
+                "longest request first or pass max_new_cap to serve_loop"
+            )
+        cache, toks, out_buf, steps = self._state
+        self._state = self._admit_fn(
+            cache, toks, out_buf, steps, row_cache, tok0, jnp.int32(idx)
+        )
+        self.active[idx] = True
+        self.slot_meta[idx] = _Slot(request=req, admitted_ts=now, steps_done=1)
+        return idx
+
+    def step(self) -> None:
+        """Advance every active slot one token (one compiled dispatch)."""
+        cache, toks, out_buf, steps = self._state
+        cache, toks, out_buf, steps = self._step_fn(
+            self.engine.params, cache, toks, out_buf, steps,
+            jnp.asarray(self.active),
+        )
+        self._state = (cache, toks, out_buf, steps)
+        for meta in self.slot_meta:
+            if meta is not None:
+                meta.steps_done += 1
+
+    def pop_finished(self, now: float) -> list[Completion]:
+        """Retire every slot whose host-mirrored step count hit its target.
+
+        The ONE host sync per request happens here: fetching the finished
+        ``out_buf`` row."""
+        done: list[Completion] = []
+        out_buf = self._state[2] if self._state is not None else None
+        for idx, meta in enumerate(self.slot_meta):
+            if meta is None:
+                continue
+            want = meta.request.max_new_tokens
+            if meta.steps_done >= want:
+                row = np.asarray(out_buf[idx])[:want]
+                done.append(
+                    Completion(
+                        rid=meta.request.rid,
+                        tokens=row,
+                        admitted_ts=meta.admitted_ts,
+                        finished_ts=now,
+                        enqueued_ts=meta.request.enqueued_ts,
+                    )
+                )
+                self.active[idx] = False
+                self.slot_meta[idx] = None
+        return done
+
+
+def run_serve_loop(
+    engine,
+    source,
+    sink,
+    *,
+    max_batch: int = 4,
+    max_queue: int = 16,
+    max_new_cap: int = 0,
+    idle_sleep_s: float = 0.0005,
+) -> ServeLoopReport:
+    """Drive continuous batching until the source signals ``STOP``.
+
+    ``source()`` is polled for ``Request | None | STOP`` whenever the
+    accepted-queue has room (None = nothing right now; the loop keeps
+    decoding). Each ``Completion`` is handed to ``sink`` the step its
+    request finishes. ``max_queue`` bounds requests accepted but not yet
+    admitted — when full, the source simply isn't polled, which a
+    ring-backed source surfaces to the dispatcher as backpressure.
+    """
+    report = ServeLoopReport()
+    sched = SlotScheduler(engine, max_batch=max_batch, max_new_cap=max_new_cap)
+    queue: deque[Request] = deque()
+    draining = False
+    t0 = time.perf_counter()
+
+    while True:
+        # 1) accept traffic while there is queue room
+        while not draining and len(queue) < max_queue:
+            got = source()
+            if got is None:
+                break
+            if got is STOP:
+                draining = True
+                break
+            queue.append(got)
+        report.peak_queue = max(report.peak_queue, len(queue))
+
+        # 2) admit into free slots (prefill interleaves with decode here)
+        now = time.perf_counter()
+        while queue and sched.free_slots:
+            sched.admit(queue.popleft(), now)
+            report.admitted += 1
+        report.peak_active = max(report.peak_active, sched.n_active)
+
+        # 3) advance every active slot one token
+        if sched.n_active:
+            sched.step()
+            report.steps += 1
+
+            # 4) retire finished requests (one host sync each)
+            for comp in sched.pop_finished(time.perf_counter()):
+                report.completed += 1
+                report.tokens_out += comp.tokens.shape[0]
+                sink(comp)
+        elif queue:
+            continue
+        elif draining:
+            break
+        else:
+            time.sleep(idle_sleep_s)
+
+    report.wall_s = time.perf_counter() - t0
+    return report

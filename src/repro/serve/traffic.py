@@ -1,0 +1,487 @@
+"""The traffic plane: Poisson load over shm rings into a serving fleet.
+
+This is the subsystem that finally makes the ``spawn_fleet`` workers *serve
+something*. Topology: one front-end dispatcher process and N workers, each
+worker owning a private SPSC ring pair (``core.shm_ring``) —
+
+    dispatcher --- <session>/req/<i> --->  worker i   (dispatcher-owned)
+    dispatcher <-- <session>/rsp/<i> ----  worker i   (worker-owned)
+
+so every shared cursor has exactly one writer and the whole request path is
+two fixed-slot shm copies, no pipes, no pickling on the hot path. Ring
+ownership is split deliberately: a SIGKILLed dispatcher leaves request
+rings with a dead owner pid, a SIGKILLed worker leaves its response ring
+with a dead owner pid — either way the next ``ws.gc()`` reclaims the
+segment (``core.shm_arena.gc_segments``), which is the acceptance bar for
+this subsystem.
+
+Each worker loads the app through the stable-linking epoch path (default
+``stable-shm``: one physical arena copy machine-wide), builds a
+``ServeEngine``, and runs ``engine.serve_loop`` — the continuous-batching
+scheduler — with its rings as source and sink. The dispatcher drives
+Poisson arrivals, round-robins requests across workers (ring-full = the
+scheduler's ``max_queue`` backpressure, surfaced as a routing decision),
+and measures what serving people actually report: sustained req/s, tok/s,
+and p50/p99 end-to-end latency on the *dispatcher's* clock (enqueue time
+rides the wire and comes back in the completion, so latency needs no
+cross-process clock agreement beyond CLOCK_MONOTONIC being system-wide).
+
+Wire format (fixed little-endian structs + int32 token payloads):
+
+    request    <qiid>  rid, max_new, n_tokens, enqueued_ts  + tokens
+    completion <qiddd> rid, n_tokens, admitted, finished, enqueued + tokens
+    rid sentinels: -1 STOP (drain and exit), -2 worker READY (engine
+    built; payload = per-worker spin-up seconds), -3 worker ERROR
+    (payload = utf-8 traceback excerpt, surfaced in the report instead of
+    a silent join timeout).
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import struct
+import time
+import uuid
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.shm_ring import ShmRing, ShmRingError
+
+_REQ_HDR = struct.Struct("<qiid")       # rid, max_new, n_tokens, enqueued_ts
+_RSP_HDR = struct.Struct("<qiddd")      # rid, n_tokens, admitted, finished, enq
+_RID_STOP = -1
+_RID_READY = -2
+_RID_ERROR = -3
+_RID_WARM = 1 << 40                      # rids >= this are warmup traffic
+
+RING_SLOTS = 64                          # per ring; queue depth per worker
+
+
+# ------------------------------------------------------------------- wire
+def encode_request(rid: int, prompt: np.ndarray, max_new: int,
+                   enqueued_ts: float) -> bytes:
+    toks = np.ascontiguousarray(prompt, dtype="<i4")
+    return _REQ_HDR.pack(rid, max_new, toks.size, enqueued_ts) + toks.tobytes()
+
+
+def decode_request(data: bytes):
+    rid, max_new, n, enq = _REQ_HDR.unpack_from(data)
+    if rid == _RID_STOP:
+        return rid, None, 0, 0.0
+    toks = np.frombuffer(data, dtype="<i4", count=n, offset=_REQ_HDR.size)
+    return rid, toks.astype(np.int32), max_new, enq
+
+
+def encode_completion(rid: int, tokens: np.ndarray, admitted: float,
+                      finished: float, enqueued: float) -> bytes:
+    toks = np.ascontiguousarray(tokens, dtype="<i4")
+    return (
+        _RSP_HDR.pack(rid, toks.size, admitted, finished, enqueued)
+        + toks.tobytes()
+    )
+
+
+def _encode_blob(rid: int, blob: bytes, value: float = 0.0) -> bytes:
+    return _RSP_HDR.pack(rid, len(blob), value, 0.0, 0.0) + blob
+
+
+def decode_completion(data: bytes):
+    rid, n, admitted, finished, enq = _RSP_HDR.unpack_from(data)
+    if rid < 0:
+        return rid, data[_RSP_HDR.size:_RSP_HDR.size + n], admitted, 0.0, 0.0
+    toks = np.frombuffer(data, dtype="<i4", count=n, offset=_RSP_HDR.size)
+    return rid, toks.astype(np.int32), admitted, finished, enq
+
+
+def _push_blocking(ring: ShmRing, data: bytes, *, timeout: float) -> None:
+    deadline = time.monotonic() + timeout
+    while not ring.push(data):
+        if time.monotonic() >= deadline:
+            raise ShmRingError(
+                f"ring {ring.name} stayed full for {timeout:.0f}s"
+            )
+        time.sleep(0.0005)
+
+
+def req_channel(session: str, widx: int) -> str:
+    return f"{session}/req/{widx}"
+
+
+def rsp_channel(session: str, widx: int) -> str:
+    return f"{session}/rsp/{widx}"
+
+
+def ring_slot_bytes(prompt_len: int, max_new: int) -> int:
+    """One slot must hold the largest frame either direction carries."""
+    return max(
+        _REQ_HDR.size + 4 * prompt_len,
+        _RSP_HDR.size + 4 * max_new,
+        _RSP_HDR.size + 2048,            # error tracebacks
+    )
+
+
+# ----------------------------------------------------------------- worker
+def _traffic_worker(
+    root,
+    app_name: str,
+    arch: str,
+    strategy: str,
+    session: str,
+    widx: int,
+    cache_len: int,
+    max_batch: int,
+    max_new_cap: int,
+    slot_bytes: int,
+) -> None:
+    """One serving worker: epoch-path engine + serve_loop over the rings.
+
+    Module-level so the spawn context can pickle it. The response ring is
+    created FIRST (before the expensive engine build) so the dispatcher's
+    attach never races jit compilation; READY (with the spin-up time as
+    payload) is pushed only after the engine exists. Any failure is
+    pushed as an ERROR frame before re-raising, so the dispatcher learns
+    the traceback the moment the process dies instead of at join timeout.
+    """
+    import traceback as _tb
+
+    from repro.configs import get_config
+    from repro.link import Workspace
+
+    from .engine import ServeEngine
+    from .scheduler import STOP, Request
+
+    ws = Workspace.open(root)
+    rsp = ShmRing.create(
+        ws.registry, rsp_channel(session, widx),
+        slots=RING_SLOTS, slot_bytes=slot_bytes,
+    )
+    try:
+        t0 = time.perf_counter()
+        cfg = get_config(arch, smoke=True)
+        engine = ServeEngine.from_workspace(
+            cfg, ws, app_name, strategy=strategy, cache_len=cache_len
+        )
+        req = ShmRing.attach(
+            ws.registry, req_channel(session, widx), timeout=60.0
+        )
+        _push_blocking(
+            rsp,
+            _encode_blob(_RID_READY, b"", time.perf_counter() - t0),
+            timeout=30.0,
+        )
+
+        def source():
+            data = req.pop()
+            if data is None:
+                return None
+            rid, toks, max_new, enq = decode_request(data)
+            if rid == _RID_STOP:
+                return STOP
+            return Request(
+                rid=rid, prompt=toks, max_new_tokens=max_new, enqueued_ts=enq
+            )
+
+        def sink(comp):
+            _push_blocking(
+                rsp,
+                encode_completion(
+                    comp.rid, comp.tokens, comp.admitted_ts,
+                    comp.finished_ts, comp.enqueued_ts,
+                ),
+                timeout=60.0,
+            )
+
+        engine.serve_loop(
+            source, sink, max_batch=max_batch, max_new_cap=max_new_cap
+        )
+        req.close()
+        rsp.close()
+    except BaseException as e:
+        try:
+            blob = f"{e!r}\n{_tb.format_exc()}"[-2000:].encode()
+            rsp.push(_encode_blob(_RID_ERROR, blob))
+            rsp.close()
+        except Exception:
+            pass
+        raise
+
+
+# ------------------------------------------------------------- dispatcher
+@dataclass
+class TrafficReport:
+    """What one ``run_traffic`` drive actually measured."""
+
+    workers: int
+    strategy: str
+    arch: str
+    rate_hz: float
+    sent: int = 0
+    completed: int = 0
+    tokens_out: int = 0
+    stalls: int = 0                     # send attempts deferred (all rings full)
+    wall_s: float = 0.0                 # first send -> last completion
+    latencies_s: list = field(default_factory=list)
+    ready_s: list = field(default_factory=list)   # per-worker spin-up
+    worker_errors: list = field(default_factory=list)
+
+    @property
+    def failed(self) -> int:
+        return len(self.worker_errors)
+
+    @property
+    def req_per_s(self) -> float:
+        return self.completed / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), q))
+
+    @property
+    def p50_s(self) -> float:
+        return self.latency_quantile(50.0)
+
+    @property
+    def p99_s(self) -> float:
+        return self.latency_quantile(99.0)
+
+    def summary(self) -> dict:
+        return {
+            "workers": self.workers,
+            "strategy": self.strategy,
+            "arch": self.arch,
+            "rate_hz": self.rate_hz,
+            "sent": self.sent,
+            "completed": self.completed,
+            "tokens_out": self.tokens_out,
+            "stalls": self.stalls,
+            "failed_workers": self.failed,
+            "worker_errors": self.worker_errors,
+            "wall_s": round(self.wall_s, 4),
+            "req_per_s": round(self.req_per_s, 2),
+            "tok_per_s": round(self.tok_per_s, 1),
+            "p50_latency_s": round(self.p50_s, 4),
+            "p99_latency_s": round(self.p99_s, 4),
+            "ready_s": [round(r, 3) for r in self.ready_s],
+        }
+
+
+def run_traffic(
+    ws,
+    app_name: str,
+    *,
+    arch: str,
+    workers: int = 2,
+    n_requests: int = 16,
+    rate_hz: float = 50.0,
+    prompt_len: int = 12,
+    max_new_tokens: int = 8,
+    max_batch: int = 2,
+    strategy: str = "stable-shm",
+    cache_len: int = 0,
+    seed: int = 0,
+    timeout: float = 180.0,
+    warmup_per_worker: int = 1,
+    session: str | None = None,
+) -> TrafficReport:
+    """Drive a Poisson request load through a spawned serving fleet.
+
+    Spawns ``workers`` real processes (spawn context — jax state never
+    forks), each serving ``engine.serve_loop`` over its ring pair, and
+    sends ``n_requests`` with exponential inter-arrival times at
+    ``rate_hz``. Requests round-robin across workers; a full request ring
+    routes to the next worker, and a fully-backpressured fleet defers the
+    send (counted in ``stalls``). Returns a ``TrafficReport`` with
+    sustained req/s, tok/s, and p50/p99 end-to-end latency; worker
+    crashes surface as structured ``worker_errors`` records (exit code +
+    traceback excerpt) rather than a join timeout.
+
+    ``warmup_per_worker`` requests are pushed to every worker and drained
+    BEFORE the measured phase, so each worker's jit compilation (prefill +
+    admit + vmapped step) happens off the clock — p50/p99 measure steady
+    state, not the first-request compile.
+
+    All ring segments are unlinked before returning — and if this process
+    is SIGKILLed first, their records name a dead owner pid, so the next
+    ``ws.gc()`` reclaims them.
+    """
+    cache_len = cache_len or (prompt_len + max_new_tokens + 4)
+    session = session or f"traffic-{uuid.uuid4().hex[:8]}"
+    slot_bytes = ring_slot_bytes(prompt_len, max_new_tokens)
+    report = TrafficReport(
+        workers=workers, strategy=strategy, arch=arch, rate_hz=rate_hz
+    )
+
+    ctx = mp.get_context("spawn")
+    req_rings = [
+        ShmRing.create(
+            ws.registry, req_channel(session, i),
+            slots=RING_SLOTS, slot_bytes=slot_bytes,
+        )
+        for i in range(workers)
+    ]
+    procs = [
+        ctx.Process(
+            target=_traffic_worker,
+            args=(
+                ws.root, app_name, arch, strategy, session, i,
+                cache_len, max_batch, max_new_tokens, slot_bytes,
+            ),
+            daemon=True,
+        )
+        for i in range(workers)
+    ]
+    for p in procs:
+        p.start()
+    rsp_rings = [
+        ShmRing.attach(ws.registry, rsp_channel(session, i), timeout=60.0)
+        for i in range(workers)
+    ]
+
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(
+        0, 32000, (n_requests, prompt_len), dtype=np.int32
+    )
+    gaps = rng.exponential(1.0 / max(rate_hz, 1e-9), n_requests)
+    alive = [True] * workers
+    deadline = time.monotonic() + timeout
+    first_send = last_recv = 0.0
+
+    def _reap(i: int, blob: bytes | None) -> None:
+        """Record worker i's death as a structured error, once."""
+        if not alive[i]:
+            return
+        alive[i] = False
+        report.worker_errors.append(
+            {
+                "worker": i,
+                "pid": procs[i].pid,
+                "exit_code": procs[i].exitcode,
+                "error": (blob or b"").decode(errors="replace")[-2000:],
+            }
+        )
+
+    warmed = 0
+
+    def _drain() -> None:
+        nonlocal last_recv, warmed
+        for i, ring in enumerate(rsp_rings):
+            while True:
+                data = ring.pop()
+                if data is None:
+                    break
+                rid, payload, a, f, enq = decode_completion(data)
+                if rid == _RID_READY:
+                    report.ready_s.append(a)
+                elif rid == _RID_ERROR:
+                    _reap(i, payload)
+                elif rid >= _RID_WARM:
+                    warmed += 1
+                else:
+                    now = time.perf_counter()
+                    last_recv = max(last_recv, now)
+                    report.completed += 1
+                    report.tokens_out += int(payload.size)
+                    report.latencies_s.append(now - enq)
+            if alive[i] and not procs[i].is_alive() and procs[i].exitcode:
+                _reap(i, None)
+
+    try:
+        # ---- warmup phase: compile every worker off the measured clock
+        warm_expect = 0
+        for w in range(workers):
+            for j in range(warmup_per_worker):
+                _push_blocking(
+                    req_rings[w],
+                    encode_request(
+                        _RID_WARM + w * warmup_per_worker + j,
+                        prompts[(w + j) % n_requests], max_new_tokens, 0.0,
+                    ),
+                    timeout=30.0,
+                )
+                warm_expect += 1
+        while warmed < warm_expect:
+            _drain()
+            if not any(alive):
+                raise ShmRingError(
+                    f"every worker died during warmup: {report.worker_errors}"
+                )
+            if time.monotonic() >= deadline:
+                raise ShmRingError("fleet never finished warmup")
+            time.sleep(0.002)
+
+        # ---- send phase: Poisson arrivals, round-robin with backpressure
+        nxt = 0
+        for k in range(n_requests):
+            time.sleep(gaps[k])
+            while True:
+                _drain()
+                targets = [
+                    (nxt + d) % workers for d in range(workers)
+                    if alive[(nxt + d) % workers]
+                ]
+                if not targets:
+                    raise ShmRingError(
+                        f"every worker died before request {k}: "
+                        f"{report.worker_errors}"
+                    )
+                sent = False
+                for t in targets:
+                    frame = encode_request(
+                        k, prompts[k], max_new_tokens, time.perf_counter()
+                    )
+                    if req_rings[t].push(frame):
+                        nxt = (t + 1) % workers
+                        sent = True
+                        break
+                if sent:
+                    break
+                report.stalls += 1
+                if time.monotonic() >= deadline:
+                    raise ShmRingError("fleet stayed backpressured past timeout")
+                time.sleep(0.001)
+            report.sent += 1
+            if first_send == 0.0:
+                first_send = time.perf_counter()
+
+        # ---- drain phase: STOP each worker, collect the tail
+        stop_frame = _REQ_HDR.pack(_RID_STOP, 0, 0, 0.0)
+        for i, ring in enumerate(req_rings):
+            if not alive[i]:
+                continue
+            while not ring.push(stop_frame):   # backlogged worker: drain first
+                _drain()
+                if not alive[i] or time.monotonic() >= deadline:
+                    break
+                time.sleep(0.001)
+        expect = report.sent
+        while report.completed < expect and time.monotonic() < deadline:
+            _drain()
+            if report.completed >= expect:
+                break
+            if all(not p.is_alive() for p in procs):
+                _drain()   # final sweep: workers are gone, rings may not be
+                break
+            time.sleep(0.001)
+        for i, p in enumerate(procs):
+            p.join(timeout=max(0.0, deadline - time.monotonic()))
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+            elif p.exitcode:
+                _reap(i, None)
+    finally:
+        for ring in req_rings:
+            ring.close()
+            ring.unlink(ws.registry)
+        for ring in rsp_rings:
+            ring.close()
+            ring.unlink(ws.registry)
+
+    report.wall_s = max(last_recv - first_send, 1e-9) if first_send else 0.0
+    return report

@@ -37,6 +37,10 @@ def _new_fixture(**overrides) -> dict:
         "smoke/mmap_speedup_vs_dynamic": 5.7,
         "smoke/cached_speedup_vs_mmap": 87.5,
         "smoke/journal_epoch_overhead": 0.0,
+        "serve/p50_latency": 20000.0,
+        "serve/p99_latency": 36000.0,
+        "serve/req_per_s": 120.0,
+        "serve/tok_per_s": 1000.0,
     }
     base.update(overrides)
     return base
@@ -65,8 +69,14 @@ def test_is_derived_classifies_unsweepable_rows():
     assert perf_gate.is_derived("smoke/fleet_fills")
     # wall time dominated by process spawn: excluded from the 1.25x sweep
     assert perf_gate.is_derived("smoke/fleet_procs")
+    # throughput rows: higher is better, sweep direction would invert
+    assert perf_gate.is_derived("serve/req_per_s")
+    assert perf_gate.is_derived("serve/tok_per_s")
+    assert perf_gate.is_derived("serve/fleet_ready_s")
     assert not perf_gate.is_derived("smoke/stable-mmap")
     assert not perf_gate.is_derived("smoke/stable-shm")
+    # latency rows ARE swept once both trajectories carry them
+    assert not perf_gate.is_derived("serve/p99_latency")
 
 
 # --------------------------------------------------------------- compare()
@@ -135,6 +145,29 @@ def test_trajectory_missing_key_fails_without_crashing():
     del new["smoke/stable-shm"]
     failures = perf_gate.trajectory_asserts(new, _old_fixture())
     assert any("required key smoke/stable-shm" in f for f in failures)
+
+
+def test_trajectory_requires_serving_p99_row():
+    """PR 6: a trajectory without a serving tail latency fails the gate —
+    the traffic plane must actually have measured load."""
+    new = _new_fixture()
+    del new["serve/p99_latency"]
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("required key serve/p99_latency" in f for f in failures)
+
+
+def test_trajectory_rejects_zero_or_nonfinite_p99():
+    new = _new_fixture(**{"serve/p99_latency": 0.0})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("p99" in f for f in failures)
+    new = _new_fixture(**{"serve/p99_latency": float("inf")})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("p99" in f for f in failures)
+
+
+def test_trajectory_p99_absent_from_old_side_is_fine():
+    """BENCH_5 predates the serving tier; only the NEW side needs it."""
+    assert perf_gate.trajectory_asserts(_new_fixture(), _old_fixture()) == []
 
 
 # ------------------------------------------------------------------ main()

@@ -1,0 +1,588 @@
+"""The serving traffic plane: shm rings, continuous batching, Poisson load.
+
+Covers the PR 6 acceptance matrix:
+
+* Ring protocol unit + property tests: SPSC push/pop in order across
+  wraparound, full-ring backpressure, oversized payloads rejected, a
+  half-written slot reads as absence (never torn bytes), and a producer
+  crash between publish and cursor advance healed by ``reconcile()``
+  without loss or duplication (hypothesis model-queue interleavings,
+  mirroring test_epoch_cache's model-LRU pattern).
+* Cross-process: a real spawned producer feeding the parent through one
+  ring; a SIGKILLed ring OWNER never leaks its segment past the next
+  ``ws.gc()`` (the record-driven lifecycle shared with the arenas).
+* Continuous batching: ``engine.serve_loop`` == ``engine.generate`` token
+  for token; staggered arrivals admitted mid-flight under the max_batch
+  cap with slots retired and reused.
+* Arch x strategy serving matrix (ROADMAP item 5 down-payment): fleet
+  load + a serve_loop decode step for transformer/mamba2/hybrid under
+  stable-shm and stable-mmap-cached.
+* ``run_traffic`` end to end: a >=2-worker fleet under Poisson load, all
+  requests completed, real p50/p99, no ring segments or records left.
+* Fleet failure surfacing: a crashing worker produces a structured error
+  record (exit code, traceback excerpt) quickly — not a join-timeout ride.
+
+Every worker body is module-level (spawn pickles by qualified name);
+every wait carries its own deadline.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import signal
+import time
+from collections import deque
+
+import numpy as np
+import pytest
+
+pytest.importorskip("_posixshmem")  # POSIX shared memory required
+
+from repro.core import EpochCache, SymbolRef, shm_arena
+from repro.core.shm_ring import ShmRing, ShmRingError, ring_name
+from repro.link import Workspace
+
+from conftest import build_app, build_bundle
+
+try:  # optional dev dependency: the property tests skip without it
+    from hypothesis import given, settings, strategies as hyp_st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis installed in CI
+    HAVE_HYPOTHESIS = False
+
+CTX = mp.get_context("spawn")
+JOIN_S = 90.0
+
+
+@pytest.fixture()
+def shm_ws(tmp_path):
+    """Workspace whose shm leftovers are force-unlinked on teardown."""
+    ws = Workspace.open(tmp_path / "store", epoch_cache=EpochCache())
+    try:
+        yield ws
+    finally:
+        shm_arena.unlink_root_segments(ws.registry)
+
+
+def _publish_model(ws, arch: str):
+    """Publish the weights bundle + app for ``arch`` (smoke config)."""
+    from repro import models
+    from repro.ckpt import bundle_from_params
+    from repro.configs import get_config
+    from repro.core import ObjectKind, make_object
+
+    cfg = get_config(arch, smoke=True)
+    params = {
+        n: np.asarray(v) for n, v in models.init_params(cfg, 0).items()
+    }
+    bundle, payload = bundle_from_params(f"weights:{cfg.name}", "v1", params)
+    app, _ = make_object(
+        name=f"serve:{cfg.name}",
+        version="1",
+        kind=ObjectKind.APPLICATION,
+        refs=models.manifest_refs(cfg),
+        needed=[bundle.name],
+    )
+    with ws.management() as tx:
+        tx.publish(bundle, payload)
+        tx.publish(app)
+    return cfg, app.name
+
+
+# ------------------------------------------------------------ ring protocol
+def test_ring_roundtrip_and_wraparound(shm_ws):
+    ring = ShmRing.create(shm_ws.registry, "t/a", slots=4, slot_bytes=32)
+    peer = ShmRing.attach(shm_ws.registry, "t/a", timeout=5.0)
+    try:
+        assert ring.capacity == 4 and peer.slot_bytes == 32
+        assert peer.pop() is None          # fresh ring reads as empty
+        # several full laps around the 4-slot ring, strict FIFO throughout
+        sent = 0
+        for cycle in range(10):
+            for j in range(3):
+                assert ring.push(f"m{sent}".encode())
+                sent += 1
+            for j in range(3):
+                assert peer.pop() == f"m{sent - 3 + j}".encode()
+        assert ring.pending == 0
+    finally:
+        peer.close()
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def test_ring_full_is_backpressure_not_error(shm_ws):
+    ring = ShmRing.create(shm_ws.registry, "t/full", slots=2, slot_bytes=8)
+    peer = ShmRing.attach(shm_ws.registry, "t/full", timeout=5.0)
+    try:
+        assert ring.push(b"a") and ring.push(b"b")
+        assert not ring.push(b"c")         # full: False, nothing raised
+        assert ring.pending == 2
+        assert peer.pop() == b"a"
+        assert ring.push(b"c")             # slot freed, push succeeds
+        assert peer.pop() == b"b" and peer.pop() == b"c"
+    finally:
+        peer.close()
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def test_ring_rejects_oversized_payload(shm_ws):
+    ring = ShmRing.create(shm_ws.registry, "t/big", slots=2, slot_bytes=8)
+    try:
+        with pytest.raises(ShmRingError, match="exceeds ring slot size"):
+            ring.push(b"x" * 9)
+    finally:
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def test_ring_attach_times_out_cleanly(shm_ws):
+    with pytest.raises(ShmRingError, match="never became ready"):
+        ShmRing.attach(shm_ws.registry, "t/nobody", timeout=0.2)
+
+
+def test_ring_halfwritten_slot_reads_as_absence(shm_ws):
+    """A producer that died after writing payload bytes but BEFORE the
+    generation counter must read as 'nothing there', never torn data."""
+    ring = ShmRing.create(shm_ws.registry, "t/torn", slots=4, slot_bytes=16)
+    peer = ShmRing.attach(shm_ws.registry, "t/torn", timeout=5.0)
+    try:
+        h = ring._u64(24)                  # head cursor
+        ring._write_payload(h, b"halfdead")   # ... and no _publish
+        assert peer.pop() is None
+        # a recovering producer adopts nothing (publication incomplete)
+        assert ring.reconcile() == 0
+        # and the slot is safely overwritten by the next real push
+        assert ring.push(b"real")
+        assert peer.pop() == b"real"
+    finally:
+        peer.close()
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def test_ring_reconcile_heals_published_but_uncursored_slot(shm_ws):
+    """Death between generation write and head advance: the publication
+    completed, so the recovering producer must roll the cursor forward —
+    re-publishing would duplicate, stalling would lose the payload."""
+    ring = ShmRing.create(shm_ws.registry, "t/crash", slots=4, slot_bytes=16)
+    peer = ShmRing.attach(shm_ws.registry, "t/crash", timeout=5.0)
+    try:
+        assert ring.push(b"before")
+        h = ring._u64(24)
+        ring._write_payload(h, b"orphan")
+        ring._publish(h)                   # ... and no _advance_head
+        successor = ShmRing.attach(shm_ws.registry, "t/crash", timeout=5.0)
+        assert successor.reconcile() == 1
+        assert successor.push(b"after")
+        assert [peer.pop(), peer.pop(), peer.pop()] == [
+            b"before", b"orphan", b"after"
+        ]
+        assert peer.pop() is None
+        successor.close()
+    finally:
+        peer.close()
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def test_ring_create_replaces_stale_same_name(shm_ws):
+    """Re-creating a channel (crashed prior owner) unlinks and replaces."""
+    first = ShmRing.create(shm_ws.registry, "t/re", slots=2, slot_bytes=8)
+    first.push(b"old")
+    first.close()                          # owner 'died'; segment persists
+    second = ShmRing.create(shm_ws.registry, "t/re", slots=4, slot_bytes=16)
+    try:
+        assert second.slots == 4           # fresh geometry, fresh state
+        assert second.pop() is None
+    finally:
+        second.unlink(shm_ws.registry)
+        second.close()
+
+
+# ------------------------------------------------- property test (model q)
+def _ring_model_trace(ops) -> None:
+    """Run (op, payload) interleavings against a model deque: no lost,
+    duplicated, torn, or reordered payloads, under pushes, pops, producer
+    crash-after-publish (healed by reconcile) and torn half-writes."""
+    import tempfile
+    from pathlib import Path
+
+    class _Reg:
+        root = Path(tempfile.mkdtemp(prefix="ring-prop-"))
+
+    reg = _Reg()
+    ring = ShmRing.create(reg, "prop", slots=3, slot_bytes=16)
+    model: deque[bytes] = deque()
+    seq = 0
+    try:
+        for op in ops:
+            if op == 0:                    # push
+                data = f"m{seq}".encode()
+                seq += 1
+                ok = ring.push(data)
+                assert ok == (len(model) < ring.slots)
+                if ok:
+                    model.append(data)
+            elif op == 1:                  # pop
+                got = ring.pop()
+                assert got == (model.popleft() if model else None)
+            elif op == 2:                  # crash after publish -> heal
+                if len(model) < ring.slots:
+                    data = f"m{seq}".encode()
+                    seq += 1
+                    h = ring._u64(24)
+                    ring._write_payload(h, data)
+                    ring._publish(h)       # crash window: head not advanced
+                    assert ring.reconcile() == 1
+                    model.append(data)
+            else:                          # torn half-write, then recovery
+                if len(model) < ring.slots:
+                    ring._write_payload(ring._u64(24), b"turn")
+                    assert ring.reconcile() == 0   # absence, not data
+        while model:                       # drain: nothing lost at the end
+            assert ring.pop() == model.popleft()
+        assert ring.pop() is None          # ... and nothing duplicated
+    finally:
+        ring.unlink(reg)
+        ring.close()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(hyp_st.lists(hyp_st.integers(0, 3), max_size=60))
+    def test_ring_matches_model_queue(ops):
+        _ring_model_trace(ops)
+
+else:  # pragma: no cover - hypothesis installed in CI
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_ring_matches_model_queue():
+        pass
+
+
+def test_ring_model_queue_deterministic():
+    """Deterministic fallback covering the same interleavings without
+    hypothesis — a seeded random walk over the op alphabet."""
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        _ring_model_trace(rng.integers(0, 4, size=40).tolist())
+
+
+# -------------------------------------------------------- ring gc lifecycle
+def test_ring_gc_reclaims_dead_owner_keeps_live(shm_ws):
+    ws = shm_ws
+    mine = ShmRing.create(ws.registry, "gc/live", slots=2, slot_bytes=8)
+    name_live = mine.name
+
+    # a ring whose recorded owner is a pid that no longer exists
+    zombie = CTX.Process(target=time.sleep, args=(0,), daemon=True)
+    zombie.start()
+    zombie.join(timeout=JOIN_S)
+    dead = ShmRing.create(ws.registry, "gc/dead", slots=2, slot_bytes=8)
+    name_dead = dead.name
+    dead.close()
+    import json as _json
+
+    rec_path = shm_arena.shm_records_dir(ws.registry) / f"{name_dead}.json"
+    rec = _json.loads(rec_path.read_text())
+    rec["owner_pid"] = zombie.pid
+    rec_path.write_text(_json.dumps(rec))
+
+    report = ws.gc()
+    assert name_dead in report.removed
+    assert not shm_arena.segment_exists(name_dead)
+    assert not rec_path.exists()
+    # the live ring (owner: this process) survived the same gc
+    assert name_live not in report.removed
+    assert shm_arena.segment_exists(name_live)
+    mine.unlink(ws.registry)
+    mine.close()
+
+
+def _ring_owner_worker(root, queue):
+    """Create (own) a ring, report, then hold until SIGKILLed."""
+    from repro.link import Workspace
+    from repro.core.shm_ring import ShmRing
+
+    ws = Workspace.open(root)
+    ring = ShmRing.create(ws.registry, "owned/by/worker", slots=4,
+                          slot_bytes=16)
+    ring.push(b"alive")
+    queue.put({"pid": os.getpid(), "name": ring.name})
+    time.sleep(120)  # killed long before this expires
+
+
+def test_sigkilled_ring_owner_never_leaks_past_gc(shm_ws):
+    """THE acceptance bar: a SIGKILLed worker (or dispatcher — ownership is
+    symmetric) cannot leak a ring segment past the next ``ws.gc()``."""
+    ws = shm_ws
+    queue = CTX.Queue()
+    p = CTX.Process(target=_ring_owner_worker, args=(ws.root, queue),
+                    daemon=True)
+    p.start()
+    got = []
+    deadline = time.monotonic() + JOIN_S
+    while not got and time.monotonic() < deadline:
+        try:
+            got.append(queue.get(timeout=0.25))
+        except Exception:
+            continue
+    assert got, "ring owner never reported"
+    name = got[0]["name"]
+    assert shm_arena.segment_exists(name)
+
+    # owner alive: gc must NOT touch its ring
+    assert name not in ws.gc().removed
+    assert shm_arena.segment_exists(name)
+
+    os.kill(p.pid, signal.SIGKILL)
+    p.join(timeout=JOIN_S)
+    assert p.exitcode == -signal.SIGKILL
+
+    report = ws.gc()                       # owner dead: reclaimed, no leak
+    assert name in report.removed
+    assert not shm_arena.segment_exists(name)
+    assert not (
+        shm_arena.shm_records_dir(ws.registry) / f"{name}.json"
+    ).exists()
+
+
+# ------------------------------------------------------ cross-process ring
+def _producer_worker(root, n, queue):
+    from repro.link import Workspace
+    from repro.core.shm_ring import ShmRing
+
+    ws = Workspace.open(root)
+    ring = ShmRing.attach(ws.registry, "xproc", timeout=30.0)
+    sent = 0
+    deadline = time.monotonic() + 60
+    while sent < n and time.monotonic() < deadline:
+        if ring.push(f"frame-{sent}".encode()):
+            sent += 1
+        else:
+            time.sleep(0.0005)             # consumer backpressure
+    queue.put({"sent": sent})
+
+
+def test_ring_cross_process_fifo(shm_ws):
+    """A real spawned producer through a 4-slot ring: every frame arrives,
+    in order, exactly once — backpressure (slots << frames) included."""
+    ws = shm_ws
+    n = 200
+    ring = ShmRing.create(ws.registry, "xproc", slots=4, slot_bytes=32)
+    queue = CTX.Queue()
+    p = CTX.Process(target=_producer_worker, args=(ws.root, n, queue),
+                    daemon=True)
+    p.start()
+    got = []
+    deadline = time.monotonic() + JOIN_S
+    try:
+        while len(got) < n and time.monotonic() < deadline:
+            data = ring.pop()
+            if data is None:
+                time.sleep(0.0005)
+                continue
+            got.append(data)
+        p.join(timeout=JOIN_S)
+        assert p.exitcode == 0
+        assert got == [f"frame-{i}".encode() for i in range(n)]
+    finally:
+        if p.is_alive():  # pragma: no cover - hang diagnostics
+            p.kill()
+            p.join(timeout=5)
+        ring.unlink(ws.registry)
+        ring.close()
+
+
+# -------------------------------------------------- continuous batching
+def _mk_engine(arch="mamba2-370m", cache_len=24):
+    from repro import models
+    from repro.configs import get_config
+    from repro.serve import ServeEngine
+
+    cfg = get_config(arch, smoke=True)
+    params = models.init_params(cfg, 0)
+    return cfg, ServeEngine(cfg, params, cache_len=cache_len, impl="naive")
+
+
+def test_serve_loop_matches_generate():
+    from repro.serve import Request, STOP
+
+    cfg, engine = _mk_engine()
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 12), dtype=np.int32)
+    ref, _ = engine.generate(prompts, 6)
+
+    feed = iter(
+        [Request(rid=i, prompt=prompts[i], max_new_tokens=6)
+         for i in range(3)]
+        + [STOP]
+    )
+    done = {}
+    report = engine.serve_loop(
+        lambda: next(feed, STOP), lambda c: done.setdefault(c.rid, c),
+        max_batch=2,
+    )
+    assert report.completed == 3 and report.admitted == 3
+    assert report.peak_active <= 2          # the max_batch cap held
+    assert report.tokens_out == 18
+    for i in range(3):
+        np.testing.assert_array_equal(done[i].tokens, ref[i])
+
+
+def test_serve_loop_staggered_arrivals_reuse_slots():
+    """Requests trickling in mid-decode are admitted into retired slots:
+    continuous batching, not fixed batches."""
+    from repro.serve import Request, STOP
+
+    cfg, engine = _mk_engine()
+    rng = np.random.default_rng(1)
+    n = 5
+    prompts = rng.integers(0, cfg.vocab_size, (n, 10), dtype=np.int32)
+    ref, _ = engine.generate(prompts, 4)
+
+    pending = deque(
+        Request(rid=i, prompt=prompts[i], max_new_tokens=4) for i in range(n)
+    )
+    calls = {"n": 0}
+
+    def trickle():
+        # every other poll yields nothing: arrivals interleave with decode
+        calls["n"] += 1
+        if not pending:
+            return STOP
+        if calls["n"] % 2:
+            return pending.popleft()
+        return None
+
+    done = {}
+    report = engine.serve_loop(
+        trickle, lambda c: done.setdefault(c.rid, c), max_batch=2,
+        max_queue=2,
+    )
+    assert report.completed == n and report.admitted == n
+    assert report.peak_active <= 2
+    assert report.peak_queue <= 2           # admission policy honored
+    # 5 requests through 2 slots: slots were retired and re-admitted
+    assert report.steps < n * 4             # batched, not serialized
+    for i in range(n):
+        np.testing.assert_array_equal(done[i].tokens, ref[i])
+
+
+def test_serve_loop_requires_decode_headroom():
+    from repro.serve import STOP
+
+    cfg, engine = _mk_engine(arch="gemma3-1b", cache_len=0)
+    with pytest.raises(ValueError, match="cache_len"):
+        engine.serve_loop(lambda: STOP, lambda c: None)
+
+
+# ------------------------------------------- arch x strategy serving matrix
+@pytest.mark.parametrize("strategy", ["stable-shm", "stable-mmap-cached"])
+@pytest.mark.parametrize(
+    "arch", ["gemma3-1b", "mamba2-370m", "zamba2-7b"]
+)
+def test_fleet_load_plus_serve_loop_step(shm_ws, arch, strategy):
+    """ROADMAP item 5 down-payment: for each model family x strategy, a
+    2-process fleet loads the app, then a serve_loop decodes a request
+    end to end from the same workspace."""
+    from repro.serve import Request, STOP, ServeEngine
+
+    ws = shm_ws
+    cfg, app_name = _publish_model(ws, arch)
+    fleet = ServeEngine.spawn_fleet(
+        ws, app_name, processes=2, strategy=strategy, timeout=JOIN_S
+    )
+    assert fleet.failed == 0, fleet.summary()
+    assert len(fleet.workers) == 2
+    assert len({w["tensors_digest"] for w in fleet.workers}) == 1
+    if strategy == "stable-shm":
+        assert fleet.fills <= 1             # one physical copy machine-wide
+
+    engine = ServeEngine.from_workspace(
+        cfg, ws, app_name, strategy=strategy, cache_len=16
+    )
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    feed = iter([Request(rid=0, prompt=prompt, max_new_tokens=2), STOP])
+    done = {}
+    report = engine.serve_loop(
+        lambda: next(feed, STOP), lambda c: done.setdefault(c.rid, c),
+        max_batch=2,
+    )
+    assert report.completed == 1
+    assert report.steps >= 1                # at least one decode step ran
+    assert done[0].tokens.shape == (2,)
+    assert done[0].tokens.dtype == np.int32
+
+
+# ----------------------------------------------------- traffic end to end
+def test_run_traffic_end_to_end(shm_ws):
+    from repro.serve import run_traffic
+
+    ws = shm_ws
+    _, app_name = _publish_model(ws, "mamba2-370m")
+    rep = run_traffic(
+        ws,
+        app_name,
+        arch="mamba2-370m",
+        workers=2,
+        n_requests=8,
+        rate_hz=200.0,
+        prompt_len=10,
+        max_new_tokens=4,
+        max_batch=2,
+        timeout=JOIN_S * 2,
+    )
+    s = rep.summary()
+    assert rep.sent == 8 and rep.completed == 8, s
+    assert rep.failed == 0, s
+    assert len(rep.latencies_s) == 8
+    assert rep.p50_s > 0 and rep.p99_s >= rep.p50_s
+    assert np.isfinite(rep.p99_s)
+    assert rep.req_per_s > 0 and rep.tok_per_s > 0
+    assert rep.tokens_out == 8 * 4
+    assert len(rep.ready_s) == 2            # both workers reported spin-up
+    # every ring segment and record was unlinked on the way out
+    recs = list(
+        shm_arena.shm_records_dir(ws.registry).glob("repro-ring-*.json")
+    )
+    assert recs == []
+
+
+# ------------------------------------------------- fleet failure surfacing
+def test_fleet_worker_crash_is_structured_and_fast(shm_ws):
+    """A worker that dies reports (or is synthesized) a structured error
+    record with an exit code — within seconds, not the 180s ride."""
+    from repro.serve import ServeEngine
+
+    ws = shm_ws
+    # publish a real world, then ask the fleet for an app that isn't there
+    tensors = {"s/a": np.ones(8, np.float32)}
+    bundle = build_bundle("w", tensors, version="1")
+    app = build_app("app", [SymbolRef("s/a", (8,), "float32")], ["w"])
+    with ws.management() as tx:
+        tx.publish(*bundle)
+        tx.publish(app)
+
+    t0 = time.monotonic()
+    report = ServeEngine.spawn_fleet(
+        ws, "no-such-app", processes=2, timeout=JOIN_S
+    )
+    elapsed = time.monotonic() - t0
+    assert elapsed < JOIN_S / 2, "failures must not ride out the timeout"
+    assert report.failed == 2
+    assert report.fills == 0 and report.attaches == 0
+    summary = report.summary()
+    assert summary["failed"] == 2
+    assert len(summary["errors"]) == 2
+    for err in summary["errors"]:
+        assert err["exit_code"] not in (None, 0)
+        assert "no-such-app" in err["error"] or err["traceback"]
+    # and a healthy fleet over the same workspace still reports clean
+    healthy = ServeEngine.spawn_fleet(ws, "app", processes=2, timeout=JOIN_S)
+    assert healthy.failed == 0 and healthy.summary()["errors"] == []
