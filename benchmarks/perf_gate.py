@@ -1,6 +1,6 @@
 """Perf gate: compare this PR's bench JSON against the committed previous one.
 
-    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_6.json BENCH_5.json \
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_7.json BENCH_6.json \
         [--tolerance 1.25]
 
 Three kinds of checks, all printed as a table:
@@ -24,9 +24,13 @@ Three kinds of checks, all printed as a table:
   the per-load CoW ``stable-mmap``; a fleet of N processes amortizes to at most ONE shm
   fill (``smoke/fleet_fills <= 1``); ``stable-mmap-cached`` at least 5x
   faster than the previous PR's ``stable-mmap``; ``indexed`` beating
-  ``dynamic`` within this run; and the serving tier's tail latency
+  ``dynamic`` within this run; the serving tier's tail latency
   (``serve/p99_latency``) plus sustained ``serve/req_per_s`` present,
-  nonzero, and finite (PR 6's traffic plane actually measured load).
+  nonzero, and finite (PR 6's traffic plane actually measured load); and
+  the blue/green rows (PR 7): ``serve/rollover_p99_latency`` present,
+  nonzero, finite, and within 2x of the steady-state p99 (committing a new
+  generation under live traffic must not blow up the tail), plus a real
+  ``serve/rollover_stall`` (commit -> whole-fleet-adopted wall time).
 
 Exits non-zero when any check fails (CI runs it as a soft gate, same
 rationale as the PR 3 gate: a slow shared runner must not silently block
@@ -51,8 +55,16 @@ def is_derived(key: str) -> bool:
     runners than the 1.25x tolerance the sweep is calibrated for.
     Throughput rows (``*_per_s``: req/s, tok/s) are derived too — higher
     is BETTER there, so the microsecond sweep's direction would flag an
-    improvement as a regression."""
-    return "speedup" in key or "/fleet_" in key or "_per_s" in key
+    improvement as a regression. Rollover rows are window-scoped tail
+    measurements gated by their own trajectory asserts (within-run, vs the
+    same run's steady p99) — cross-run microsecond comparison of a
+    commit-sized window is pure runner noise."""
+    return (
+        "speedup" in key
+        or "/fleet_" in key
+        or "_per_s" in key
+        or "/rollover_" in key
+    )
 
 
 def compare(new: dict, old: dict, tolerance: float) -> list[str]:
@@ -175,6 +187,29 @@ def trajectory_asserts(new: dict, old: dict) -> list[str]:
         check(
             f"serving fleet sustained req/s is real ({req_s:.2f})",
             req_s > 0.0 and math.isfinite(req_s),
+        )
+    # blue/green rollover (PR 7): the fleet committed a new generation
+    # mid-load and the tail stayed bounded — rollover-window p99 present,
+    # real, and within 2x of the same run's steady-state p99
+    roll_p99 = require(new, "serve/rollover_p99_latency", "new")
+    if roll_p99 is not None:
+        check(
+            f"serve/rollover_p99_latency ({roll_p99:.1f}us) is nonzero "
+            f"and finite",
+            roll_p99 > 0.0 and math.isfinite(roll_p99),
+        )
+        if p99 is not None and p99 > 0.0:
+            check(
+                f"rollover p99 ({roll_p99:.1f}us) within 2x steady p99 "
+                f"({p99:.1f}us)",
+                roll_p99 <= p99 * 2.0,
+            )
+    stall = require(new, "serve/rollover_stall", "new")
+    if stall is not None:
+        check(
+            f"serve/rollover_stall ({stall:.1f}us) is nonzero and finite "
+            f"(the fleet really flipped generations)",
+            stall > 0.0 and math.isfinite(stall),
         )
     return failures
 

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import sys
 
-BENCH_JSON = "BENCH_6.json"  # perf trajectory of this PR's benchmark pass
+BENCH_JSON = "BENCH_7.json"  # perf trajectory of this PR's benchmark pass
 
 
 def smoke() -> None:

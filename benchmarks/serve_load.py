@@ -1,21 +1,38 @@
-"""Serving-tier load benchmark: p50/p99 under Poisson traffic.
+"""Serving-tier load benchmark: p50/p99 under Poisson traffic + rollover.
 
-    PYTHONPATH=src python -m benchmarks.serve_load [--smoke]
+    PYTHONPATH=src python -m benchmarks.serve_load [--smoke] [--rollover]
 
 PRs 3-5 measured how fast an epoch *loads*; this harness measures what the
 loaded fleet *does*: a dispatcher drives Poisson arrivals through shm
 request/response rings (``repro.serve.traffic``) into ``workers`` real
 processes, each running the continuous-batching ``engine.serve_loop`` over
-a ``stable-shm`` arena (one physical weight copy machine-wide). Emits the
-serving numbers the roadmap's later items (blue/green rollover, remote
-arena store) will be judged against:
+a ``stable-shm`` arena (one physical weight copy machine-wide). Emits:
 
     serve/p50_latency, serve/p99_latency   us rows (end-to-end, steady
                                            state — workers are warmed off
-                                           the clock first)
+                                           the clock first, and the
+                                           rollover window is excluded)
     serve/req_per_s, serve/tok_per_s       derived rows (higher = better;
                                            perf_gate classifies them out
                                            of the microsecond sweep)
+
+``--rollover`` is PR 7's blue/green measurement: a third of the way into
+the arrival schedule the dispatcher commits a new weights generation via
+``ws.management()`` while the fleet keeps serving. Every worker's
+``ws.epoch_watch()`` notices the committed ``epoch_gen``, the serve loop
+flips at a request boundary (``engine.adopt_epoch``), and each worker
+reports an ADOPTED frame carrying a digest of the weights it now serves.
+The harness asserts zero failed/dropped requests, byte-identity of every
+adoption against an independent post-commit load, and that the old
+generation's shm segments are reclaimed by ``ws.gc(drain=True)`` — then
+emits:
+
+    serve/rollover_p99_latency   us row: p99 of requests completed inside
+                                 the rollover window (commit -> last
+                                 worker adopted); the perf gate asserts
+                                 it stays within 2x steady-state p99
+    serve/rollover_stall         us row: wall time from commit to the
+                                 whole fleet serving the new generation
 
 It also pins PR 6's satellite fix with a before/after pair on the same
 engine: ``serve/generate_hostsync`` times the OLD decode loop (a blocking
@@ -23,18 +40,19 @@ engine: ``serve/generate_hostsync`` times the OLD decode loop (a blocking
 ``serve/generate_devacc`` (device-side accumulation, one transfer at the
 end), reported as us per decoded token.
 
-Rows are MERGED into ``BENCH_6.json`` (``run.py --smoke`` writes the load
+Rows are MERGED into ``BENCH_7.json`` (``run.py --smoke`` writes the load
 rows first in CI; this harness adds the serving rows), and
-``perf_gate.py`` asserts the p99 row is present, nonzero, and finite.
+``perf_gate.py`` gates the rollover rows against the steady-state ones.
 """
 
 from __future__ import annotations
 
+import hashlib
 import sys
 
 import numpy as np
 
-BENCH_JSON = "BENCH_6.json"
+BENCH_JSON = "BENCH_7.json"
 
 ARCH = "mamba2-370m"          # constant-state decode: the serving workhorse
 
@@ -62,6 +80,16 @@ def _publish_serve_app(ws, arch: str):
         tx.publish(bundle, payload)
         tx.publish(app)
     return cfg, app.name
+
+
+def _image_digest(image) -> str:
+    """Same digest the traffic workers report in their ADOPTED frames:
+    blake2b-16 over every tensor's contiguous bytes, in sorted name order."""
+    h = hashlib.blake2b(digest_size=16)
+    tensors = getattr(image, "tensors", None) or {}
+    for name in sorted(tensors):
+        h.update(np.ascontiguousarray(tensors[name]).view(np.uint8).tobytes())
+    return h.hexdigest()
 
 
 def _bench_generate_sync_fix(cfg, ws, app_name, *, max_new: int) -> None:
@@ -102,7 +130,11 @@ def run(
     prompt_len: int = 12,
     max_new_tokens: int = 8,
     max_batch: int = 2,
+    rollover: bool = False,
 ) -> None:
+    from repro import models
+    from repro.ckpt import bundle_from_params
+    from repro.core import shm_arena
     from repro.serve import run_traffic
 
     from .common import emit, emit_value, fresh_workspace
@@ -111,6 +143,30 @@ def run(
     ws = fresh_workspace()
     try:
         cfg, app_name = _publish_serve_app(ws, ARCH)
+
+        rollover_at = n_requests // 3 if rollover else None
+        pre_roll_segments: list[str] = []
+
+        def rollover_fn() -> None:
+            # Snapshot the generation-N arena segments the fleet is serving
+            # from RIGHT before the commit: after the drain gc these exact
+            # names must be gone (rings are session conduits, not epoch
+            # state — they are reclaimed by owner-death, not by drain).
+            pre_roll_segments.extend(
+                rec["name"]
+                for rec in shm_arena.list_segments(ws.registry)
+                if rec.get("kind") != "ring"
+            )
+            params2 = {
+                n: np.asarray(v)
+                for n, v in models.init_params(cfg, 1).items()
+            }
+            bundle, payload = bundle_from_params(
+                f"weights:{cfg.name}", "v2", params2
+            )
+            with ws.management() as tx:
+                tx.publish(bundle, payload)
+
         rep = run_traffic(
             ws,
             app_name,
@@ -121,6 +177,8 @@ def run(
             prompt_len=prompt_len,
             max_new_tokens=max_new_tokens,
             max_batch=max_batch,
+            rollover_at=rollover_at,
+            rollover_fn=rollover_fn if rollover else None,
         )
         s = rep.summary()
         assert rep.completed == n_requests, f"lost requests: {s}"
@@ -130,12 +188,19 @@ def run(
             f"workers={workers};rate_hz={rate_hz};completed={rep.completed};"
             f"stalls={rep.stalls}"
         )
-        emit("serve/p50_latency", rep.p50_s, tag)
-        emit("serve/p99_latency", rep.p99_s, tag)
+        # steady-state quantiles: identical to the overall quantiles when no
+        # roll happened, rollover-window completions excluded when one did —
+        # so this row stays comparable across trajectories either way
+        emit("serve/p50_latency", rep.steady_p50_s, tag)
+        emit("serve/p99_latency", rep.steady_p99_s, tag)
         emit_value("serve/req_per_s", rep.req_per_s, tag)
         emit_value("serve/tok_per_s", rep.tok_per_s, tag)
         emit_value("serve/fleet_ready_s", max(rep.ready_s or [0.0]),
                    "slowest worker spin-up (epoch load + first attach)")
+
+        if rollover:
+            _check_rollover(ws, app_name, rep, workers=workers,
+                            pre_roll_segments=pre_roll_segments)
 
         _bench_generate_sync_fix(cfg, ws, app_name, max_new=max_new_tokens)
     finally:
@@ -145,11 +210,56 @@ def run(
         print(f"wrote {write_bench_json(BENCH_JSON, merge=True)}")
 
 
+def _check_rollover(ws, app_name, rep, *, workers, pre_roll_segments) -> None:
+    """Assert the blue/green contract held under load, then emit the rows."""
+    from .common import emit
+
+    s = rep.summary()
+    assert rep.rollover_at is not None, s
+    assert len(rep.adoptions) == workers, (
+        f"only {len(rep.adoptions)}/{workers} workers adopted the new "
+        f"generation: {s}"
+    )
+    # every worker must be serving THIS committed generation...
+    gens = {a["epoch_gen"] for a in rep.adoptions}
+    assert gens == {ws.epoch_gen}, (
+        f"adopted generations {gens} != committed {ws.epoch_gen}"
+    )
+    # ...and its weights must be byte-identical to an independent fresh
+    # load of generation N+1 through a different strategy
+    expect = _image_digest(ws.load(app_name, strategy="stable-mmap-cached"))
+    digests = {a["digest"] for a in rep.adoptions}
+    assert digests == {expect}, (
+        f"worker weight digests {digests} != fresh-load digest {expect}"
+    )
+    assert rep.rollover_wall_s > 0, s
+    assert rep.rollover_p99_s > 0 and np.isfinite(rep.rollover_p99_s), s
+
+    # drain the two-generation window: generation N's arena segments (the
+    # exact names snapshotted pre-commit) must be reclaimed, and the new
+    # generation must still load afterwards
+    assert pre_roll_segments, "rollover_fn never ran (no pre-roll snapshot)"
+    g = ws.gc(drain=True)
+    missed = [n for n in pre_roll_segments if n not in g.removed]
+    assert not missed, f"old-generation segments survived drain gc: {missed}"
+    ws.load(app_name, strategy="stable-mmap-cached")
+
+    window_tag = (
+        f"window_completions={len(rep.rollover_latencies_s)};"
+        f"p50_s={rep.rollover_p50_s:.4f};adoptions={len(rep.adoptions)}"
+    )
+    emit("serve/rollover_p99_latency", rep.rollover_p99_s, window_tag)
+    emit("serve/rollover_stall", rep.rollover_wall_s,
+         f"commit->fleet-adopted wall;old_segments_gcd={len(pre_roll_segments)}")
+
+
 def main() -> None:
+    rollover = "--rollover" in sys.argv
     if "--smoke" in sys.argv:
-        run(workers=2, n_requests=24, rate_hz=200.0)
+        run(workers=2, n_requests=24, rate_hz=200.0, rollover=rollover)
         return
-    run(workers=3, n_requests=96, rate_hz=400.0, max_batch=4)
+    run(workers=3, n_requests=96, rate_hz=400.0, max_batch=4,
+        rollover=rollover)
 
 
 if __name__ == "__main__":

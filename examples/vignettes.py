@@ -21,6 +21,12 @@ Vignette 6 — serve a Poisson load over the shm fleet: spawn ring-connected
              worker processes, drive exponential arrivals through the
              continuous-batching ``engine.serve_loop``, and read sustained
              req/s plus p50/p99 end-to-end latency off the TrafficReport.
+Vignette 7 — roll a library under load (blue/green): while the fleet keeps
+             serving, bake a v2 weights generation, preview the exact
+             relocation delta, commit it ALONGSIDE the live generation,
+             let every worker flip at a request boundary
+             (epoch_watch/adopt_epoch), then drain and gc the old
+             generation's segments — zero requests dropped end to end.
 """
 
 import numpy as np
@@ -273,6 +279,77 @@ def main() -> None:
     # every ring segment is already unlinked; a SIGKILLed worker would
     # instead leave a dead-owner ring record for the next ws.gc()
     print("  ring segments reclaimed; fleet shm arena survives for reuse")
+
+    # ---------------------------------------------------------------- vignette 7
+    print("=== Vignette 7: roll a library under load (Frank) ===")
+    # Blue/green rollover end to end: the fleet keeps serving while Frank
+    # rolls weights:mamba to v2 — bake, preview, flip, drain, gc.
+    import hashlib as _hashlib
+
+    from repro.core import shm_arena as _shm_arena
+
+    v2_mamba = {
+        n: np.asarray(v) for n, v in models.init_params(tr_cfg, 3).items()
+    }
+    gen_before = ws.epoch_gen
+    pre_roll: list = []
+
+
+    def commit_v2():
+        # snapshot generation N's segments, then bake + preview + commit:
+        # the operator reads the exact per-app delta (staged interposition
+        # edits would show as `edited` rows) BEFORE the flip
+        pre_roll.extend(
+            r["name"] for r in _shm_arena.list_segments(ws.registry)
+            if r.get("kind") != "ring"
+        )
+        b2, p2 = bundle_from_params("weights:mamba", "v2", v2_mamba)
+        with ws.management() as tx:
+            tx.publish(b2, p2)
+            pv = tx.preview()
+            d = pv.delta_for("serve:mamba")
+            assert d is not None and pv.is_clean
+            print(
+                f"  preview: {len(d.changed)} relocation(s) change, "
+                f"{len(d.unresolved)} break -> safe to flip"
+            )
+        # clean exit = end_mgmt: generation N+1 now lives ALONGSIDE N
+
+
+    rep2 = run_traffic(
+        ws, "serve:mamba", arch="mamba2-370m",
+        workers=2, n_requests=9, rate_hz=50.0,
+        prompt_len=8, max_new_tokens=6, max_batch=2,
+        rollover_at=3, rollover_fn=commit_v2,
+    )
+    assert rep2.failed == 0 and rep2.completed == 9   # zero dropped
+    assert ws.epoch_gen == gen_before + 1
+    # the weights every worker now serves are byte-identical to a fresh
+    # independent load of generation N+1
+    img = ws.load("serve:mamba", strategy="stable-mmap-cached")
+    h = _hashlib.blake2b(digest_size=16)
+    for nm in sorted(img.tensors):
+        h.update(
+            np.ascontiguousarray(img.tensors[nm]).view(np.uint8).tobytes()
+        )
+    assert {a["digest"] for a in rep2.adoptions} == {h.hexdigest()}
+    print(
+        f"  flip: {len(rep2.adoptions)} worker(s) adopted gen "
+        f"{ws.epoch_gen} at a request boundary in "
+        f"{rep2.rollover_wall_s * 1e3:.0f}ms; weights byte-identical"
+    )
+    print(
+        f"  rollover p99 {rep2.rollover_p99_s * 1e3:.1f}ms vs steady p99 "
+        f"{rep2.steady_p99_s * 1e3:.1f}ms; {rep2.completed}/{rep2.sent} "
+        f"requests completed across the roll"
+    )
+    g = ws.gc(drain=True)
+    assert all(nm in g.removed for nm in pre_roll)
+    print(
+        f"  drain: gc reclaimed {g.segments_removed} old-generation "
+        f"segment(s); the v2 world keeps serving"
+    )
+    ws.load("serve:mamba", strategy="stable-mmap-cached")
     ws.close()
 
 

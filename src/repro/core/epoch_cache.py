@@ -21,15 +21,23 @@ Design:
   workspaces over different stores never alias, while repeated loads within
   a store always do.
 
-* **Epoch-token invalidation.** The cache carries a monotonically
-  increasing epoch token; every ``Manager.end_mgmt`` (any workspace in the
-  process) and every ``Workspace.gc`` bumps it. Entries record the token
-  they were filled under and are treated as misses once it moves on — one
-  integer compare flash-invalidates the whole cache without walking it.
-  Content-addressed keys make stale *data* impossible; the token exists so
-  that entries whose backing files were rewritten, repaired, or garbage-
-  collected at a management boundary are re-validated against disk instead
-  of trusted forever.
+* **Epoch-token generations (retire, don't flash-clear).** The cache
+  carries a monotonically increasing epoch token; every ``Manager.end_mgmt``
+  (any workspace in the process) and every ``Workspace.gc`` bumps it.
+  Entries record the token they were filled under and are treated as misses
+  once it moves on — one integer compare makes the whole old generation
+  invisible to reads without walking it. The token is the process-local
+  image of the store's ``epoch_gen``, so an entry is logically keyed by
+  ``(root, app hash, closure hash, generation)``. A bump *retires* the old
+  generation instead of clobbering it: unpinned stale entries are dropped
+  immediately, but entries still pinned — arena mappings handed out to
+  live images, i.e. requests in flight on generation N — stay resident
+  (invisible to new reads) until their pins drain or ``drain_retired()``
+  reclaims them after the fleet has flipped to N+1. Content-addressed keys
+  make stale *data* impossible; the token exists so that entries whose
+  backing files were rewritten, repaired, or garbage-collected at a
+  management boundary are re-validated against disk instead of trusted
+  forever.
 
 * **Capacity-bounded LRU** (PR 5). Entries carry per-entry byte accounting
   (``cache_nbytes`` on the value, an ``nbytes`` hint at publish, or the
@@ -40,8 +48,9 @@ Design:
   value whose ``cache_pinned`` property is true (arena entries whose shared
   views are mapped out to live images) — are never evicted; the invariant
   is therefore: resident bytes <= ``cache_bytes`` OR every resident entry
-  is pinned. Flash-clear is retained for epoch-token bumps: a management
-  commit still drops everything at once, LRU only paces the steady state.
+  is pinned. An epoch-token bump drops the old generation's *unpinned*
+  entries at once and retires the pinned remainder (see above); LRU paces
+  the steady state within a generation.
 
 * **Lock-free reads, double-checked-lock fills.** A hit is a dict lookup
   plus one integer compare plus an LRU touch (each a single GIL-atomic
@@ -248,24 +257,65 @@ class EpochCache:
         return self._token
 
     def bump_epoch(self) -> int:
-        """Flash-invalidate the whole cache (one integer increment).
+        """Start a new generation (one integer increment) and retire the
+        old one.
 
         Called by ``Manager.end_mgmt`` — any management commit in the
         process — and by ``Workspace.gc`` after deleting store entries.
-        Every entry is stale by definition once the token moves, so the
-        entries and fill-lock table are dropped too (pins included): dead
-        arena mappings (potentially gigabytes, possibly of unlinked files)
-        must not stay resident until an LRU eviction. A fill racing this
-        bump publishes under its pre-bump token and is simply discarded.
+        Every stale-token entry is invisible to reads the moment the token
+        moves; *unpinned* stale entries (nothing alive references them) are
+        dropped immediately, while pinned ones — arena mappings aliased by
+        live images, i.e. requests still finishing on the old generation —
+        stay resident as *retired* entries until their pins drain
+        (``unpin``) or an explicit ``drain_retired()`` after the fleet has
+        flipped. The fill-lock table is dropped wholesale (per-key locks
+        are recreated on demand). A fill racing this bump publishes under
+        its pre-bump token and is simply discarded.
         """
         with self._mu:
             self._token += 1
-            self._entries.clear()
-            self._section_counts.clear()
-            self._bytes = 0
+            for k in list(self._entries):
+                e = self._entries.get(k)
+                if e is not None and e.token != self._token \
+                        and not self._is_pinned(e):
+                    self._remove_locked(k)
             self._fill_locks.clear()
             self.stats.invalidations += 1
             return self._token
+
+    def drain_retired(self) -> int:
+        """Reclaim every retired (stale-token) entry, pinned or not.
+
+        The request-boundary contract makes this safe: callers invoke it
+        only once no in-flight work reads the old generation (the serve
+        loop flips at ``n_active == 0``; ``Workspace.gc(drain=True)`` is
+        the operator's explicit end-of-drain). Live numpy views an image
+        already handed out keep their mappings alive via their own
+        references — dropping the cache entry just stops the *cache*
+        keeping the old generation resident. Returns the number of entries
+        reclaimed."""
+        with self._mu:
+            n = 0
+            for k in list(self._entries):
+                e = self._entries.get(k)
+                if e is not None and e.token != self._token:
+                    self._remove_locked(k)
+                    n += 1
+            return n
+
+    def retired_count(self) -> int:
+        """Stale-token entries still resident (pinned through the bump)."""
+        tok = self._token
+        return sum(
+            1 for e in list(self._entries.values()) if e.token != tok
+        )
+
+    def retired_bytes(self) -> int:
+        """Accounted bytes held by retired entries (drain reclaims these)."""
+        tok = self._token
+        return sum(
+            e.nbytes for e in list(self._entries.values()) if e.token != tok
+        )
 
     # ---------------------------------------------------------------- reads
     def get(self, section: str, key) -> Optional[Any]:
@@ -406,6 +456,10 @@ class EpochCache:
             e = self._entries.get((section, key))
             if e is not None and e.pins > 0:
                 e.pins -= 1
+                # a retired entry whose pins just drained has no readers
+                # left by contract: reclaim it now, not at the next drain
+                if e.token != self._token and not self._is_pinned(e):
+                    self._remove_locked((section, key))
 
     # -------------------------------------------------------- invalidation
     def invalidate(self, section: str, key) -> None:

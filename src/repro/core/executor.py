@@ -70,7 +70,7 @@ from .errors import StaleTableError, UnknownObjectError
 from .manager import Manager
 from .objects import PAGE_BYTES, ObjectKind, RelocType, StoreObject, align_up
 from .registry import Registry, World
-from .relocation import RelocationTable, build_table
+from .relocation import FLAG_EDITED, RelocationTable, build_table
 from .resolver import DynamicResolver, Relocation, np_dtype
 from .symbol_index import IndexedResolver, closure_hash
 
@@ -290,9 +290,10 @@ class Executor:
         # stale (a changed binding changes the world hash).
         self._closure_key_cache: dict[tuple[str, str], str] = {}
         self.last_materialization: Optional[MaterializationResult] = None
-        # Wire the Manager's end_mgmt hook (Figure 5's dashed control edge)
+        # Wire the Manager's end_mgmt hooks (Figure 5's dashed control edge)
         # and point its commit-time invalidation at our cache.
         manager.on_materialize = self.materialize_all
+        manager.on_edits = self.apply_interposition_edits
         manager.epoch_cache = self.epoch_cache
 
     # ---------------------------------------------------------- materialize
@@ -395,6 +396,42 @@ class Executor:
         result.wall_s = time.perf_counter() - t0
         self.last_materialization = result
         return result
+
+    def apply_interposition_edits(
+        self, world: World, edits: list[dict]
+    ) -> int:
+        """end_mgmt hook for staged interposition edits (``tx.rebind``).
+
+        Runs after ``materialize_all`` and before the commit lands, against
+        the committing world's freshly materialized tables: matching rows
+        are rebound to the staged provider (``FLAG_EDITED`` set), the table
+        is re-saved, and the arena re-baked so every epoch strategy —
+        including the shm fleet, whose segment names hash the sidecar —
+        serves the edited mapping. A failure (provider stopped exporting
+        the symbol, shape mismatch) propagates and aborts the commit with
+        the management session still open. Returns rows rebound in total.
+        """
+        from . import interpose
+
+        n_total = 0
+        for edit in edits:
+            app = world.resolve(edit["app"])
+            provider = world.resolve(edit["provider"])
+            key = self.closure_key(app, world)
+            tpath = self.registry.table_path(app.content_hash, key)
+            table = RelocationTable.load(tpath)
+            n = interpose.rebind(
+                table,
+                symbol_glob=edit["symbol_glob"],
+                new_provider=provider,
+                requires_glob=edit.get("requires_glob"),
+            )
+            if n:
+                table.save(tpath, format=self.table_format)
+                if self.bake_arenas:
+                    self._bake_arena(app, table, key)
+            n_total += n
+        return n_total
 
     def _prune_caches(self, world: World) -> None:
         """Keep the in-memory caches from growing with publish history.
@@ -666,6 +703,7 @@ class Executor:
                     arena_path=base.path,
                     arena_size=base.arena_size,
                     generation=shm_arena.generation_stamp(base.meta),
+                    epoch_gen=self.manager.epoch_gen,
                 )
                 return shm_arena.ShmArenaEntry(
                     segment=segment,
@@ -773,6 +811,13 @@ class Executor:
             "slots": table.meta["slots"],
             "kernels": kernels,
         }
+        # Interposition edits change arena BYTES without changing the
+        # closure: stamp the edited rows into the sidecar so the shm
+        # generation stamp (a hash of this JSON) moves and attached fleets
+        # cannot serve the pre-edit segment for this key.
+        edited = int(np.count_nonzero(table.rows["flags"] & FLAG_EDITED))
+        if edited:
+            sidecar["edited_rows"] = edited
         mpath = self.registry.arena_meta_path(app.content_hash, key)
         mtmp = mpath.with_suffix(".tmp")
         mtmp.write_text(json.dumps(sidecar, sort_keys=True))

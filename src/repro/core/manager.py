@@ -62,15 +62,33 @@ class Manager:
         st = registry.read_state()
         self._mode = Mode(st.get("mode", "management"))
         self._epoch = int(st.get("epoch", 0))
+        self._epoch_gen = int(st.get("epoch_gen", self._epoch))
         self._world = dict(st.get("world", {}))      # committed bindings
+        # The previous generation's committed bindings: retained through a
+        # commit (blue/green rollover window) until Workspace.gc(drain=True)
+        # drops them, so gen N's tables/arenas/segments stay reclaim-
+        # protected while a fleet drains onto gen N+1.
+        self._previous = dict(st.get("previous", {}))
+        self._previous_epoch_gen = int(st.get("previous_epoch_gen", 0))
         if self._mode == Mode.EPOCH:
             # A stale pending snapshot (e.g. from a crash mid-management in a
             # different process) must not survive into epoch state.
             self._staged = dict(self._world)
         else:
             self._staged = dict(st.get("pending", self._world))
+        # Staged interposition edits (tx.rebind): applied to the freshly
+        # materialized tables at end_mgmt, persisted as `pending_edits` so a
+        # crashed session's staged edits are visible on resume.
+        self._staged_edits: list[dict] = (
+            [dict(e) for e in st.get("pending_edits", [])]
+            if self._mode == Mode.MANAGEMENT
+            else []
+        )
         # Hook invoked by end_mgmt; wired to Executor.materialize_all.
         self.on_materialize: Optional[Callable[[World, int], None]] = None
+        # Hook invoked by end_mgmt when interposition edits are staged;
+        # wired to Executor.apply_interposition_edits.
+        self.on_edits: Optional[Callable[[World, list], None]] = None
         # Result of the most recent end_mgmt materialization pass (an
         # Executor.MaterializationResult: which apps re-materialized, which
         # tables were reused, index/bake timings). In-memory only.
@@ -93,6 +111,70 @@ class Manager:
     @property
     def epoch(self) -> int:
         return self._epoch
+
+    @property
+    def epoch_gen(self) -> int:
+        """The committed world's generation number (monotone across
+        commits; the store-level analogue of the EpochCache token)."""
+        return self._epoch_gen
+
+    @property
+    def previous_epoch_gen(self) -> int:
+        return self._previous_epoch_gen
+
+    @property
+    def previous_bindings(self) -> dict[str, str]:
+        return dict(self._previous)
+
+    @property
+    def staged_edits(self) -> list[dict]:
+        """Interposition edits staged this session (``tx.rebind``)."""
+        return [dict(e) for e in self._staged_edits]
+
+    def previous_world(self) -> Optional[World]:
+        """The retained previous generation's world view, or None once it
+        has been dropped (``drop_previous`` / fresh store)."""
+        if not self._previous:
+            return None
+        return World(self.registry, self._previous)
+
+    def drop_previous(self) -> None:
+        """End the two-generation window: forget generation N's bindings
+        so the next ``Workspace.gc`` may reclaim its tables/arenas/segments.
+        Called by ``Workspace.gc(drain=True)`` after the fleet drained."""
+        if not self._previous and not self._previous_epoch_gen:
+            return
+        self._previous = {}
+        self._previous_epoch_gen = 0
+        self._persist()
+
+    def refresh(self) -> bool:
+        """Re-read the persisted state and adopt a sibling process's commit.
+
+        A Manager snapshots ``state.json`` at construction; a long-running
+        serving worker that must observe another process's ``end_mgmt``
+        (the rollover handshake) calls this at a request boundary. Only
+        meaningful outside management time — a refresh mid-staging would
+        clobber the open session, so it is a no-op then. Returns True when
+        a newer generation was adopted."""
+        if self._mode == Mode.MANAGEMENT:
+            return False
+        st = self.registry.read_state()
+        gen = int(st.get("epoch_gen", int(st.get("epoch", 0))))
+        if gen == self._epoch_gen and st.get("world", {}) == self._world:
+            return False
+        # Adopt only the committed half: a sibling may already be staging
+        # its NEXT session (state mode=management), but this process is a
+        # passive observer and stays in epoch mode on the committed world.
+        self._epoch = int(st.get("epoch", 0))
+        self._epoch_gen = gen
+        self._world = dict(st.get("world", {}))
+        self._previous = dict(st.get("previous", {}))
+        self._previous_epoch_gen = int(st.get("previous_epoch_gen", 0))
+        self._staged = dict(self._world)
+        self._journal_seq = int(st.get("journal_seq", self._journal_seq))
+        self._world_view = None
+        return True
 
     def world(self) -> World:
         """The world view current processes should link against.
@@ -134,6 +216,7 @@ class Manager:
             raise ModeError("already in management time")
         self._mode = Mode.MANAGEMENT
         self._staged = dict(self._world)
+        self._staged_edits = []
         self._journal_clear()
         self._persist()
 
@@ -171,6 +254,51 @@ class Manager:
             self.journal.record("remove", name=name, content_hash=old_hash)
         self._persist()
 
+    def stage_edit(
+        self,
+        app_name: str,
+        symbol_glob: str,
+        provider_name: str,
+        requires_glob: Optional[str] = None,
+    ) -> dict:
+        """Stage a fine-grained interposition edit (``interpose.rebind``).
+
+        Management time only. The edit is applied to ``app_name``'s freshly
+        materialized table at ``end_mgmt`` (rows matching ``symbol_glob``
+        rebound to the staged world's ``provider_name``, FLAG_EDITED set,
+        arena re-baked), journaled as an ``edit`` row, and visible in
+        ``tx.preview()`` before the commit. Both the app and the provider
+        must be bound in the staged world when the edit is staged.
+        """
+        if self._mode != Mode.MANAGEMENT:
+            raise ImmutableEpochError(
+                f"stage_edit({app_name!r}) during epoch {self._epoch}: "
+                "interposition edits are staged in management time"
+            )
+        if app_name not in self._staged:
+            raise UnknownObjectError(app_name)
+        if provider_name not in self._staged:
+            raise UnknownObjectError(provider_name)
+        edit = {
+            "app": app_name,
+            "symbol_glob": symbol_glob,
+            "provider": provider_name,
+            "requires_glob": requires_glob,
+        }
+        self._staged_edits.append(edit)
+        if self.journal is not None:
+            # name carries app + glob (the journal's name field is the
+            # operator-facing identity of the row); content_hash pins the
+            # provider bytes the edit will bind.
+            self.journal.record(
+                "edit",
+                name=f"{app_name}!{symbol_glob}",
+                content_hash=self._staged[provider_name],
+                version=provider_name,
+            )
+        self._persist()
+        return dict(edit)
+
     def reset_staged(self) -> None:
         """Drop staged changes without leaving management time.
 
@@ -180,6 +308,7 @@ class Manager:
         if self._mode != Mode.MANAGEMENT:
             raise ModeError("reset_staged outside management time")
         self._staged = dict(self._world)
+        self._staged_edits = []
         self._journal_clear()
         self._persist()
 
@@ -202,6 +331,7 @@ class Manager:
         if self._mode != Mode.MANAGEMENT:
             raise ModeError("abort_mgmt outside management time")
         self._staged = dict(self._world)
+        self._staged_edits = []
         if self._epoch > 0:
             self._mode = Mode.EPOCH
         self._journal_clear()
@@ -218,13 +348,16 @@ class Manager:
             raise ModeError("end_mgmt outside management time")
         new_world = World(self.registry, dict(self._staged))
         new_epoch = self._epoch + 1
-        # Flash-invalidate the epoch-resident runtime BEFORE materializing:
-        # every index/table/arena entry the materialization pass fills is
-        # then born under the new epoch token instead of being cleared
-        # microseconds after it was built. Entries other threads fill from
-        # old-epoch files in the window are content-keyed, hence still
-        # correct if their closure survives the commit and unreachable if
-        # not. A materialization failure leaves only over-invalidation.
+        # Retire the epoch-resident runtime's old generation BEFORE
+        # materializing: every index/table/arena entry the materialization
+        # pass fills is then born under the new token instead of being
+        # invalidated microseconds after it was built. Pinned old-gen
+        # entries (mapped out to requests still in flight) stay resident as
+        # retired until the fleet drains — the blue/green window. Entries
+        # other threads fill from old-epoch files in the window are
+        # content-keyed, hence still correct if their closure survives the
+        # commit and unreachable if not. A materialization failure leaves
+        # only over-invalidation.
         self.epoch_cache.bump_epoch()
         if self.epoch_cache is not process_cache():
             process_cache().bump_epoch()
@@ -236,8 +369,26 @@ class Manager:
             # world and epoch untouched — the management session stays open
             # to be fixed or aborted.
             self.last_materialization = self.on_materialize(new_world, new_epoch)
+        if self._staged_edits:
+            if self.on_edits is None:
+                raise ModeError(
+                    "interposition edits staged but no executor wired to "
+                    "apply them (Manager.on_edits is unset)"
+                )
+            # Same window as materialization: a failing edit (e.g. the
+            # provider stopped exporting the symbol) aborts the commit with
+            # the session still open. Runs after materialize so it edits
+            # the NEW generation's tables.
+            self.on_edits(new_world, self.staged_edits)
+        # Generation rollover: keep the outgoing committed world beside the
+        # new one. Its tables/arenas/shm segments stay gc-protected until
+        # the operator ends the drain (Workspace.gc(drain=True)).
+        self._previous = dict(self._world)
+        self._previous_epoch_gen = self._epoch_gen
         self._world = dict(self._staged)
         self._epoch = new_epoch
+        self._epoch_gen += 1
+        self._staged_edits = []
         self._mode = Mode.EPOCH
         self._journal_clear()
         self._persist()
@@ -267,8 +418,12 @@ class Manager:
             {
                 "mode": self._mode.value,
                 "epoch": self._epoch,
+                "epoch_gen": self._epoch_gen,
                 "world": self._world,
                 "pending": self._staged,
+                "pending_edits": self._staged_edits,
+                "previous": self._previous,
+                "previous_epoch_gen": self._previous_epoch_gen,
                 "journal_seq": self._journal_seq,
                 "mtime": time.time(),
             }

@@ -27,11 +27,17 @@ outside the app's closure keep the key and reuse the table.
 The registry itself is mode-agnostic; mutation gating lives in Manager.
 
 State schema versioning: ``state.json`` carries a ``schema`` integer.
-v1 (unversioned) predates the management journal; ``read_state`` migrates it
-in place by filling the v2 fields (``schema``, ``journal_seq``), so stores
-written by older builds keep working. A state written by a *newer* schema
-than this build understands raises ``StateSchemaError`` instead of being
-silently misread.
+v1 (unversioned) predates the management journal; v2 added ``schema`` and
+``journal_seq``; v3 adds the generation-addressed-world fields: a monotone
+``epoch_gen`` (the commit generation — unlike ``epoch`` it is never reused
+across store resets) plus ``previous`` / ``previous_epoch_gen``, which keep
+the previous committed world's bindings alongside the new generation so a
+live fleet can drain on N while N+1 serves (blue/green rollover — the old
+generation's tables, arenas, and shm segments stay reclaim-protected until
+``Workspace.gc(drain=True)``). ``read_state`` migrates older schemas in
+place, so stores written by older builds keep working. A state written by
+a *newer* schema than this build understands raises ``StateSchemaError``
+instead of being silently misread.
 """
 
 from __future__ import annotations
@@ -48,8 +54,10 @@ from .errors import PayloadIntegrityError, StateSchemaError, UnknownObjectError
 from .objects import StoreObject, payload_digest
 
 # Current state.json schema. v1 = unversioned (pre-journal); v2 adds the
-# `schema` stamp and `journal_seq` (last journal entry the state has seen).
-STATE_SCHEMA = 2
+# `schema` stamp and `journal_seq` (last journal entry the state has seen);
+# v3 adds `epoch_gen` plus the retained previous generation (`previous`,
+# `previous_epoch_gen`) for blue/green epoch rollover.
+STATE_SCHEMA = 3
 
 
 class Registry:
@@ -162,8 +170,11 @@ class Registry:
             "schema": STATE_SCHEMA,
             "mode": "management",
             "epoch": 0,
+            "epoch_gen": 0,
             "world": {},
             "pending": {},
+            "previous": {},
+            "previous_epoch_gen": 0,
             "journal_seq": 0,
         }
 
@@ -258,6 +269,15 @@ def migrate_state(state: dict) -> dict:
         state["schema"] = 2
         state.setdefault("journal_seq", 0)
         state.setdefault("pending", dict(state.get("world", {})))
+    if schema < 3:
+        # v2 stores have exactly one live generation: seed the generation
+        # counter from the epoch (both count commits) with no retained
+        # previous world — the first v3 commit starts the two-gen window.
+        state = dict(state)
+        state["schema"] = 3
+        state.setdefault("epoch_gen", int(state.get("epoch", 0)))
+        state.setdefault("previous", {})
+        state.setdefault("previous_epoch_gen", 0)
     return state
 
 

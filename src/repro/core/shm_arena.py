@@ -270,7 +270,7 @@ def _validate_header(
 
 def _write_record(
     registry, name: str, app_hash: str, closure_hash: str,
-    generation: str, size: int, arena_size: int,
+    generation: str, size: int, arena_size: int, epoch_gen: int = -1,
 ) -> None:
     d = shm_records_dir(registry)
     d.mkdir(parents=True, exist_ok=True)
@@ -284,6 +284,10 @@ def _write_record(
         "created_by_pid": os.getpid(),
         "created_ts": time.time(),
     }
+    if epoch_gen >= 0:
+        # observability only: which commit generation published this
+        # segment (reclamation stays key/generation-stamp driven)
+        rec["epoch_gen"] = epoch_gen
     tmp = d / f"{name}.json.tmp"
     tmp.write_text(json.dumps(rec, sort_keys=True))
     os.replace(tmp, d / f"{name}.json")
@@ -330,6 +334,7 @@ def publish_or_attach(
     arena_size: int,
     generation: str,
     fill_timeout: float = 10.0,
+    epoch_gen: int = -1,
 ) -> SharedArenaSegment:
     """The one entry point: return the machine-shared segment for this
     (app, closure, generation), publishing it if this process is first.
@@ -407,7 +412,7 @@ def publish_or_attach(
         try:
             _write_record(
                 registry, name, app_hash, closure_hash, generation,
-                total, arena_size,
+                total, arena_size, epoch_gen,
             )
             _fill(shm, arena_path, arena_size, generation)
         except BaseException:

@@ -73,7 +73,7 @@ class JournalEntry:
     """One staged operation, as recorded in ``journal.jsonl``."""
 
     seq: int
-    op: str                     # "publish" | "publish-file" | "remove"
+    op: str                     # "publish" | "publish-file" | "remove" | "edit"
     name: str
     content_hash: str = ""      # hash bound ("" for remove of unknown)
     payload_size: int = 0
@@ -358,6 +358,7 @@ class RelocationDelta:
     dep_missing: Optional[str] = None  # a `needed` object absent from staged world
     changed: list[dict] = field(default_factory=list)
     unresolved: list[dict] = field(default_factory=list)
+    edited: list[dict] = field(default_factory=list)  # staged interposition edits
     table_rebuilt: bool = False      # commit will (re-)materialize the table
     relocations: int = 0             # rows under the staged world
 
@@ -372,6 +373,7 @@ class RelocationDelta:
             "dep_missing": self.dep_missing,
             "changed": len(self.changed),
             "unresolved": len(self.unresolved),
+            "edited": len(self.edited),
             "table_rebuilt": self.table_rebuilt,
             "relocations": self.relocations,
         }
@@ -433,6 +435,8 @@ class PreviewReport:
                 out.append({"app": d.app, "kind": "changed", **c})
             for u in d.unresolved:
                 out.append({"app": d.app, "kind": "unresolved", **u})
+            for e in d.edited:
+                out.append({"app": d.app, "kind": "edited", **e})
             if d.dep_missing:
                 out.append(
                     {
@@ -640,6 +644,51 @@ def app_relocation_delta(manager: "Manager", app) -> tuple[RelocationDelta, list
                         "old_addend": ob["addend"],
                         "new_addend": 0,
                         "detail": "binding vanished from staged world",
+                    }
+                )
+    # Staged interposition edits (tx.rebind / Manager.stage_edit): preview
+    # the rows the commit-time `interpose.rebind` will retarget, matched by
+    # the same glob semantics it uses — so the operator sees the edit's
+    # blast radius before any table is touched. These rows will carry
+    # FLAG_EDITED in the recompiled table.
+    staged_edits = [
+        e for e in getattr(manager, "staged_edits", []) if e["app"] == app.name
+    ]
+    if staged_edits:
+        from repro.core.interpose import _match_glob
+
+        for e in staged_edits:
+            prov = staged.get(e["provider"])
+            prov_key = (
+                _provider_key(prov.name, prov.version) if prov else e["provider"]
+            )
+            seen: set[tuple[str, str]] = set()
+            for r in relocations:
+                sym = r.ref.name
+                if not _match_glob(sym, e["symbol_glob"]):
+                    continue
+                rg = e.get("requires_glob")
+                if rg and not _match_glob(r.requirer.name, rg):
+                    continue
+                if (sym, r.requirer.name) in seen:
+                    continue
+                seen.add((sym, r.requirer.name))
+                delta.edited.append(
+                    {
+                        "symbol": sym,
+                        "old_provider": _provider_key(
+                            r.provider.name, r.provider.version
+                        )
+                        if r.provider is not None
+                        else "",
+                        "new_provider": prov_key,
+                        "old_addend": int(r.addend),
+                        "new_addend": int(r.addend),
+                        "detail": (
+                            f"staged edit {e['symbol_glob']!r}"
+                            + (f" requires={rg!r}" if rg else "")
+                            + f" in {r.requirer.name}"
+                        ),
                     }
                 )
     return delta, relocations

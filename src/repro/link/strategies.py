@@ -37,6 +37,16 @@ Built-ins mirror the paper's Figure 5 (and push past it):
 ``auto`` is not a strategy but a dispatch rule: indexed during management
 time (correct while the world is in flux, without the ld.so probe cost),
 stable during an epoch.
+
+Blue/green rollover: the epoch-resident strategies (``stable-mmap-cached``,
+``stable-shm``) are generation-addressed — their cache keys hash the app's
+dependency closure, so a commit anywhere lands generation N+1 under *new*
+keys while images already loaded from generation N keep serving untouched
+(their cache entries survive the token bump as *retired* until
+``ws.gc(drain=True)``). A serving loop flips between the two at a request
+boundary via the ``ws.epoch_watch()`` / ``engine.adopt_epoch()`` handshake
+(``serve/scheduler.py``): in-flight requests finish on N, new admissions
+load from N+1 — no strategy ever observes a half-committed world.
 """
 
 from __future__ import annotations

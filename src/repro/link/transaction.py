@@ -76,6 +76,28 @@ class ManagementTransaction:
         self._check_open()
         self._manager.remove_obj(name)
 
+    def rebind(
+        self,
+        app_name: str,
+        *,
+        symbol_glob: str,
+        provider_name: str,
+        requires_glob: Optional[str] = None,
+    ) -> dict:
+        """Stage an interposition edit: at commit, rows of ``app_name``'s
+        table whose symbol matches ``symbol_glob`` (and whose requiring
+        object matches ``requires_glob``, if given) are retargeted to
+        ``provider_name`` and stamped ``FLAG_EDITED``. ``tx.preview()``
+        shows the affected rows as ``kind="edited"`` before any table is
+        touched. Returns the staged edit record."""
+        self._check_open()
+        return self._manager.stage_edit(
+            app_name,
+            symbol_glob=symbol_glob,
+            provider_name=provider_name,
+            requires_glob=requires_glob,
+        )
+
     # ------------------------------------------------------------- views
     def world(self) -> World:
         """The staged world view as this transaction currently sees it."""

@@ -59,6 +59,71 @@ from .transaction import ManagementTransaction
 DEFAULT_JOURNAL_ROTATE_BYTES = 1 << 20
 
 
+@dataclass(frozen=True)
+class EpochChange:
+    """What one ``EpochWatch.poll()`` observed when a commit landed."""
+
+    epoch: int
+    epoch_gen: int
+    previous_epoch_gen: int
+    world_hash: str = ""
+
+
+class EpochWatch:
+    """Cheap commit detector over ``state.json`` (the rollover handshake).
+
+    A serving worker cannot afford to re-parse state on every request just
+    to notice the rare commit. ``poll()`` stats the file (two ints) and
+    re-parses only when (mtime_ns, size) moved AND the parsed ``epoch_gen``
+    actually advanced past what this watcher last reported — management-
+    time persists (staging churn) move the stat without moving the
+    generation and are filtered out here, so a poller flips exactly once
+    per commit. Returns the ``EpochChange`` on a new generation, else None.
+    """
+
+    def __init__(self, registry: Registry, *, epoch_gen: int):
+        self._registry = registry
+        self.epoch_gen = int(epoch_gen)
+        self._stat: Optional[tuple[int, int]] = None
+        try:
+            st = os.stat(registry.state_path)
+            self._stat = (st.st_mtime_ns, st.st_size)
+        except OSError:
+            pass
+        self.polls = 0          # observability: stat probes issued
+        self.parses = 0         # ... of which re-parsed the state file
+
+    def poll(self) -> Optional[EpochChange]:
+        self.polls += 1
+        try:
+            st = os.stat(self._registry.state_path)
+        except OSError:
+            return None
+        stat = (st.st_mtime_ns, st.st_size)
+        if stat == self._stat:
+            return None
+        self._stat = stat
+        self.parses += 1
+        try:
+            state = self._registry.read_state()
+        except Exception:
+            return None  # torn/unreadable state: next poll retries
+        gen = int(state.get("epoch_gen", 0))
+        if gen <= self.epoch_gen:
+            return None  # staging churn or our own generation: not a commit
+        self.epoch_gen = gen
+        from repro.core.registry import World
+
+        return EpochChange(
+            epoch=int(state.get("epoch", 0)),
+            epoch_gen=gen,
+            previous_epoch_gen=int(state.get("previous_epoch_gen", 0)),
+            world_hash=World(
+                self._registry, state.get("world", {})
+            ).world_hash,
+        )
+
+
 @dataclass
 class WarmupReport:
     """What one ``ws.warmup`` fleet preload actually did."""
@@ -146,16 +211,38 @@ class Workspace:
     def close(self) -> None:
         """Release the workspace; deletes the store if ephemeral.
 
-        Ephemeral roots also unlink every shared-memory arena segment they
-        published — a throwaway store must not leave machine-wide segments
-        behind. Persistent roots keep their segments (the warm machine)."""
+        Ephemeral roots also unlink every shared-memory segment they
+        recorded — arenas of BOTH live generations and data-plane rings — so
+        a throwaway store cannot leave machine-wide segments behind even
+        mid-rollover (a SIGKILLed worker still holding generation N included:
+        its segments and rings are recorded, and records, not process state,
+        drive the teardown). Persistent roots keep their segments (the warm
+        machine).
+
+        Ordering matters and is load-bearing: (1) retire-and-drain this
+        process's epoch caches, so no cache entry keeps prebuilt views over
+        segments about to vanish (retired old-generation entries included);
+        (2) unlink every recorded segment while ``<root>/shm/`` still
+        exists — the records ARE the census, so deleting the store first
+        would orphan the segments machine-wide; (3) remove the store tree
+        last."""
         if self._ephemeral:
             from repro.core import shm_arena
+            from repro.core.epoch_cache import process_cache
 
+            caches = [self.executor.epoch_cache]
+            if self.executor.epoch_cache is not process_cache():
+                caches.append(process_cache())
+            for cache in caches:
+                try:
+                    cache.bump_epoch()
+                    cache.drain_retired()
+                except Exception:
+                    pass  # never let teardown mask the caller's work
             try:
                 shm_arena.unlink_root_segments(self.registry)
             except Exception:
-                pass  # never let teardown mask the caller's work
+                pass
             shutil.rmtree(self.root, ignore_errors=True)
 
     def __enter__(self) -> "Workspace":
@@ -179,9 +266,45 @@ class Workspace:
     def epoch(self) -> int:
         return self.manager.epoch
 
+    @property
+    def epoch_gen(self) -> int:
+        """The commit generation this workspace currently serves."""
+        return self.manager.epoch_gen
+
     def world(self) -> World:
         """The world view current loads resolve against."""
         return self.manager.world()
+
+    # ------------------------------------------------------------- rollover
+    def epoch_watch(self) -> EpochWatch:
+        """A commit detector seeded at this workspace's current generation.
+
+        The read half of the blue/green handshake: a serving loop polls the
+        watch between requests (two ints of stat cost per poll) and, when a
+        sibling process's ``end_mgmt`` lands generation N+1, flips at a
+        request boundary via ``ws.refresh()`` / ``engine.adopt_epoch()``
+        while its in-flight requests finish on N.
+        """
+        return EpochWatch(self.registry, epoch_gen=self.epoch_gen)
+
+    def refresh(self) -> bool:
+        """Adopt a sibling process's committed generation (read-side flip).
+
+        Re-reads ``state.json``; when a newer commit is found the manager
+        adopts the committed world + generation and the epoch caches are
+        token-bumped so new loads fill from generation N+1 — while entries
+        the old generation's in-flight requests still pin stay resident as
+        *retired* until ``gc(drain=True)``. No-op (False) during a local
+        management session or when nothing changed.
+        """
+        changed = self.manager.refresh()
+        if changed:
+            from repro.core.epoch_cache import process_cache
+
+            self.executor.epoch_cache.bump_epoch()
+            if self.executor.epoch_cache is not process_cache():
+                process_cache().bump_epoch()
+        return changed
 
     def objects(self) -> Iterator[StoreObject]:
         return self.registry.iter_objects()
@@ -332,7 +455,7 @@ class Workspace:
         return report
 
     # -------------------------------------------------------------- garbage
-    def gc(self) -> GcReport:
+    def gc(self, *, drain: bool = False) -> GcReport:
         """Reclaim dead store entries: delete every ``tables/`` file
         (materialized table, baked arena, sidecar) whose (app, closure) key
         appears in no world this workspace still honours, and unlink every
@@ -344,15 +467,34 @@ class Workspace:
         The live set is the committed world plus — during management time —
         the staged world, including each world's legacy world-hash keys, so
         nothing a current or in-flight epoch could load is ever touched.
+        **The previous generation is live too** (blue/green window): after
+        a commit the old world's tables, arenas, and shm segments stay
+        protected by default, because a fleet's in-flight requests may
+        still be finishing on generation N while N+1 serves. Once every
+        reader has flipped, ``gc(drain=True)`` closes the window: the
+        retained previous world is dropped (memory and state), retired
+        epoch-cache entries are reclaimed, and generation N's store files
+        and segments become collectable in the same pass.
+
         Only an explicit call runs this; it is never triggered implicitly
         during an epoch. Returns a ``GcReport`` (``bytes_reclaimed``,
         ``removed_files``, ``segments_removed``). The epoch cache is
-        flash-invalidated afterwards so no mapping outlives its backing
-        file unnoticed.
+        token-bumped afterwards so no mapping outlives its backing file
+        unnoticed.
         """
+        if drain:
+            # Close the two-generation window first so the previous
+            # world's keys drop out of the live set computed below. Adopt
+            # any sibling's newer commit before persisting the drop, so a
+            # stale manager can never clobber a newer generation's state.
+            self.manager.refresh()
+            self.manager.drop_previous()
         worlds = [self.manager.committed_world()]
         if self.mode == Mode.MANAGEMENT:
             worlds.append(self.manager.world())
+        prev = self.manager.previous_world()
+        if prev is not None:
+            worlds.append(prev)
         # Another process may have committed (or staged) a newer world since
         # this workspace was opened; its keys are just as live. Re-read the
         # persisted state so a long-lived workspace can never gc a newer
@@ -361,6 +503,8 @@ class Workspace:
             st = self.registry.read_state()
             worlds.append(World(self.registry, st.get("world", {})))
             worlds.append(World(self.registry, st.get("pending", {})))
+            if not drain:
+                worlds.append(World(self.registry, st.get("previous", {})))
         except Exception:
             pass  # unreadable state: fall back to the in-memory views
         live: set[tuple[str, str]] = set()
@@ -390,9 +534,16 @@ class Workspace:
         # never keep serving mappings of files this gc just unlinked.
         from repro.core.epoch_cache import process_cache
 
-        self.executor.epoch_cache.bump_epoch()
+        caches = [self.executor.epoch_cache]
         if self.executor.epoch_cache is not process_cache():
-            process_cache().bump_epoch()
+            caches.append(process_cache())
+        for cache in caches:
+            cache.bump_epoch()
+            if drain:
+                # end of the two-generation window: retired (old-gen,
+                # still-pinned) entries are reclaimed now that no reader
+                # is entitled to them any more
+                cache.drain_retired()
         return report
 
     # -------------------------------------------------------------- explain

@@ -151,17 +151,48 @@ class ServeEngine:
         the load's ``LoadStats`` for observability.
         """
         image = ws.load(app_name, strategy=strategy)
-        if param_builder is not None:
-            params = param_builder(image)
-        elif hasattr(image, "tensors"):
-            # jnp.asarray copies host->device; the host source stays the
-            # one shared mapping, so N replicas never duplicate it on host
-            params = {n: jnp.asarray(a) for n, a in image.tensors.items()}
-        else:  # lazy image: every symbol faults in on first access
-            params = {n: jnp.asarray(image[n]) for n in image.keys()}
+        # jnp.asarray copies host->device; the host source stays the one
+        # shared mapping, so N replicas never duplicate it on host (lazy
+        # images fault each symbol in on first access instead)
+        params = cls._lift_params(image, param_builder)
         engine = cls(cfg, params, impl=impl, cache_len=cache_len)
         engine.load_stats = image.stats
         return engine
+
+    @staticmethod
+    def _lift_params(image, param_builder=None):
+        if param_builder is not None:
+            return param_builder(image)
+        if hasattr(image, "tensors"):
+            return {n: jnp.asarray(a) for n, a in image.tensors.items()}
+        return {n: jnp.asarray(image[n]) for n in image.keys()}
+
+    def adopt_epoch(
+        self,
+        ws,
+        app_name: str,
+        *,
+        strategy: str = "stable-mmap-cached",
+        param_builder=None,
+    ):
+        """Flip this engine onto a newly committed generation (blue/green).
+
+        The write half of the ``ws.epoch_watch()`` handshake, called at a
+        request boundary (no slot in flight): adopt the sibling commit
+        (``ws.refresh()`` — token-bumps the epoch caches, retiring the old
+        generation's entries without evicting pinned ones), reload the app
+        from generation N+1, and swap ``self.params``. The jitted prefill/
+        decode programs take params as arguments, so a same-shape roll
+        recompiles nothing — the next admitted request simply decodes
+        against the new weights. Returns the reloaded image (its
+        ``tensors`` digest is what rollover tests verify against an
+        independent fresh load of N+1).
+        """
+        ws.refresh()
+        image = ws.load(app_name, strategy=strategy)
+        self.params = self._lift_params(image, param_builder)
+        self.load_stats = image.stats
+        return image
 
     @classmethod
     def spawn_fleet(
@@ -267,6 +298,8 @@ class ServeEngine:
         max_batch: int = 4,
         max_queue: int = 16,
         max_new_cap: int = 0,
+        epoch_watch=None,
+        on_epoch=None,
     ):
         """Continuous batching: admit requests into open decode slots.
 
@@ -295,4 +328,6 @@ class ServeEngine:
             max_batch=max_batch,
             max_queue=max_queue,
             max_new_cap=max_new_cap,
+            epoch_watch=epoch_watch,
+            on_epoch=on_epoch,
         )

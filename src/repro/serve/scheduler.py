@@ -87,6 +87,8 @@ class ServeLoopReport:
     peak_queue: int = 0
     rejected: int = 0                # source offers refused (queue full)
     wall_s: float = 0.0
+    rollovers: int = 0               # epoch flips taken at a request boundary
+    rollover_stall_s: float = 0.0    # commit noticed -> flip complete, summed
 
     def summary(self) -> dict:
         return {
@@ -98,6 +100,8 @@ class ServeLoopReport:
             "peak_queue": self.peak_queue,
             "rejected": self.rejected,
             "wall_s": self.wall_s,
+            "rollovers": self.rollovers,
+            "rollover_stall_s": self.rollover_stall_s,
         }
 
 
@@ -281,6 +285,9 @@ def run_serve_loop(
     max_queue: int = 16,
     max_new_cap: int = 0,
     idle_sleep_s: float = 0.0005,
+    epoch_watch=None,
+    on_epoch=None,
+    watch_interval_s: float = 0.02,
 ) -> ServeLoopReport:
     """Drive continuous batching until the source signals ``STOP``.
 
@@ -290,15 +297,47 @@ def run_serve_loop(
     request finishes. ``max_queue`` bounds requests accepted but not yet
     admitted — when full, the source simply isn't polled, which a
     ring-backed source surfaces to the dispatcher as backpressure.
+
+    **Blue/green rollover** (``epoch_watch`` + ``on_epoch``): between
+    decode steps the loop polls ``epoch_watch.poll()`` (a throttled
+    two-int stat probe; ``link.workspace.EpochWatch``). When a sibling
+    process's commit lands generation N+1, the loop stops *admitting* —
+    traffic keeps being accepted into the queue, nothing is dropped — and
+    lets every in-flight slot finish on generation N. At the first empty
+    request boundary it calls ``on_epoch(change)`` (typically
+    ``engine.adopt_epoch``) to swap the params, then resumes admission:
+    every later request decodes against N+1. The report counts
+    ``rollovers`` and the summed ``rollover_stall_s`` (commit noticed ->
+    flip complete).
     """
     report = ServeLoopReport()
     sched = SlotScheduler(engine, max_batch=max_batch, max_new_cap=max_new_cap)
     queue: deque[Request] = deque()
     draining = False
+    pending_epoch = None             # EpochChange waiting for the boundary
+    next_watch = 0.0
+    stall_t0 = 0.0
     t0 = time.perf_counter()
 
     while True:
-        # 1) accept traffic while there is queue room
+        # 0) rollover handshake: notice a landed commit (throttled), flip
+        # at a request boundary — never mid-decode for any in-flight slot
+        now = time.perf_counter()
+        if epoch_watch is not None and pending_epoch is None and now >= next_watch:
+            next_watch = now + watch_interval_s
+            change = epoch_watch.poll()
+            if change is not None:
+                pending_epoch = change
+                stall_t0 = now
+        if pending_epoch is not None and sched.n_active == 0:
+            if on_epoch is not None:
+                on_epoch(pending_epoch)
+            report.rollovers += 1
+            report.rollover_stall_s += time.perf_counter() - stall_t0
+            pending_epoch = None
+
+        # 1) accept traffic while there is queue room (rollover included:
+        # requests queue up during the drain instead of being dropped)
         while not draining and len(queue) < max_queue:
             got = source()
             if got is None:
@@ -309,9 +348,10 @@ def run_serve_loop(
             queue.append(got)
         report.peak_queue = max(report.peak_queue, len(queue))
 
-        # 2) admit into free slots (prefill interleaves with decode here)
+        # 2) admit into free slots (prefill interleaves with decode here);
+        # held back while a generation flip waits for in-flight slots
         now = time.perf_counter()
-        while queue and sched.free_slots:
+        while pending_epoch is None and queue and sched.free_slots:
             sched.admit(queue.popleft(), now)
             report.admitted += 1
         report.peak_active = max(report.peak_active, sched.n_active)

@@ -33,7 +33,20 @@ Wire format (fixed little-endian structs + int32 token payloads):
     rid sentinels: -1 STOP (drain and exit), -2 worker READY (engine
     built; payload = per-worker spin-up seconds), -3 worker ERROR
     (payload = utf-8 traceback excerpt, surfaced in the report instead of
-    a silent join timeout).
+    a silent join timeout), -4 worker ADOPTED (blue/green flip complete;
+    payload = JSON {worker, epoch_gen, digest} where digest content-hashes
+    the tensors the worker now serves — the dispatcher verifies it against
+    an independent load of the new generation).
+
+**Blue/green rollover under load** (``run_traffic(..., rollover_at=...,
+rollover_fn=...)``): after request ``rollover_at`` is sent, the dispatcher
+runs ``rollover_fn`` — typically a management transaction republishing the
+model and committing generation N+1. Each worker's serve loop notices the
+commit via ``ws.epoch_watch()`` between requests, lets in-flight slots
+finish on N, flips via ``engine.adopt_epoch`` at the empty request
+boundary, pushes its ADOPTED frame, and keeps serving — zero requests
+dropped, and the report segregates latencies measured while the flip was
+in progress (``rollover_p99_s``) from steady state.
 """
 
 from __future__ import annotations
@@ -53,6 +66,7 @@ _RSP_HDR = struct.Struct("<qiddd")      # rid, n_tokens, admitted, finished, enq
 _RID_STOP = -1
 _RID_READY = -2
 _RID_ERROR = -3
+_RID_ADOPTED = -4                        # worker flipped to a new epoch_gen
 _RID_WARM = 1 << 40                      # rids >= this are warmup traffic
 
 RING_SLOTS = 64                          # per ring; queue depth per worker
@@ -192,8 +206,35 @@ def _traffic_worker(
                 timeout=60.0,
             )
 
+        # blue/green: notice sibling commits between requests; flip at an
+        # empty request boundary and tell the dispatcher what we now serve
+        watch = ws.epoch_watch()
+
+        def on_epoch(change):
+            import hashlib as _hashlib
+            import json as _json
+
+            image = engine.adopt_epoch(ws, app_name, strategy=strategy)
+            h = _hashlib.blake2b(digest_size=16)
+            tensors = getattr(image, "tensors", None) or {}
+            for tname in sorted(tensors):
+                h.update(
+                    np.ascontiguousarray(tensors[tname])
+                    .view(np.uint8)
+                    .tobytes()
+                )
+            blob = _json.dumps(
+                {
+                    "worker": widx,
+                    "epoch_gen": change.epoch_gen,
+                    "digest": h.hexdigest(),
+                }
+            ).encode()
+            _push_blocking(rsp, _encode_blob(_RID_ADOPTED, blob), timeout=30.0)
+
         engine.serve_loop(
-            source, sink, max_batch=max_batch, max_new_cap=max_new_cap
+            source, sink, max_batch=max_batch, max_new_cap=max_new_cap,
+            epoch_watch=watch, on_epoch=on_epoch,
         )
         req.close()
         rsp.close()
@@ -224,6 +265,12 @@ class TrafficReport:
     latencies_s: list = field(default_factory=list)
     ready_s: list = field(default_factory=list)   # per-worker spin-up
     worker_errors: list = field(default_factory=list)
+    # blue/green rollover (populated when run_traffic rolled mid-load):
+    rollover_at: int | None = None      # request index the roll started after
+    adoptions: list = field(default_factory=list)  # ADOPTED frames, decoded
+    rollover_wall_s: float = 0.0        # commit start -> last worker adopted
+    rollover_latencies_s: list = field(default_factory=list)  # during the flip
+    steady_latencies_s: list = field(default_factory=list)    # outside it
 
     @property
     def failed(self) -> int:
@@ -250,6 +297,39 @@ class TrafficReport:
     def p99_s(self) -> float:
         return self.latency_quantile(99.0)
 
+    def _rollover_quantile(self, q: float) -> float:
+        if not self.rollover_latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.rollover_latencies_s), q))
+
+    def steady_quantile(self, q: float) -> float:
+        """Latency quantile excluding the rollover window (equals the
+        overall quantile when no roll happened)."""
+        lats = self.steady_latencies_s or self.latencies_s
+        if not lats:
+            return 0.0
+        return float(np.percentile(np.asarray(lats), q))
+
+    @property
+    def steady_p50_s(self) -> float:
+        return self.steady_quantile(50.0)
+
+    @property
+    def steady_p99_s(self) -> float:
+        return self.steady_quantile(99.0)
+
+    @property
+    def rollover_p50_s(self) -> float:
+        """p50 of completions received while the generation flip was in
+        progress (commit issued -> every worker adopted)."""
+        return self._rollover_quantile(50.0)
+
+    @property
+    def rollover_p99_s(self) -> float:
+        """p99 during the flip — the zero-downtime claim is this staying
+        within ~2x the steady-state p99."""
+        return self._rollover_quantile(99.0)
+
     def summary(self) -> dict:
         return {
             "workers": self.workers,
@@ -268,6 +348,12 @@ class TrafficReport:
             "p50_latency_s": round(self.p50_s, 4),
             "p99_latency_s": round(self.p99_s, 4),
             "ready_s": [round(r, 3) for r in self.ready_s],
+            "rollover_at": self.rollover_at,
+            "adoptions": self.adoptions,
+            "rollover_wall_s": round(self.rollover_wall_s, 4),
+            "rollover_completions": len(self.rollover_latencies_s),
+            "rollover_p50_latency_s": round(self.rollover_p50_s, 4),
+            "rollover_p99_latency_s": round(self.rollover_p99_s, 4),
         }
 
 
@@ -288,6 +374,8 @@ def run_traffic(
     timeout: float = 180.0,
     warmup_per_worker: int = 1,
     session: str | None = None,
+    rollover_at: int | None = None,
+    rollover_fn=None,
 ) -> TrafficReport:
     """Drive a Poisson request load through a spawned serving fleet.
 
@@ -309,6 +397,15 @@ def run_traffic(
     All ring segments are unlinked before returning — and if this process
     is SIGKILLed first, their records name a dead owner pid, so the next
     ``ws.gc()`` reclaims them.
+
+    ``rollover_at``/``rollover_fn``: after request index ``rollover_at``
+    is sent, ``rollover_fn()`` runs on the dispatcher — a management
+    commit landing generation N+1 while the fleet serves N. Workers flip
+    at request boundaries (see module docstring); completions received
+    between the commit and the last worker's ADOPTED frame land in
+    ``report.rollover_latencies_s`` (p99-during-rollover), and each
+    adoption's tensors digest lands in ``report.adoptions`` for
+    content-hash verification against the new generation.
     """
     cache_len = cache_len or (prompt_len + max_new_tokens + 4)
     session = session or f"traffic-{uuid.uuid4().hex[:8]}"
@@ -367,9 +464,11 @@ def run_traffic(
         )
 
     warmed = 0
+    roll_active = False      # commit issued, not every worker adopted yet
+    roll_t0 = 0.0
 
     def _drain() -> None:
-        nonlocal last_recv, warmed
+        nonlocal last_recv, warmed, roll_active
         for i, ring in enumerate(rsp_rings):
             while True:
                 data = ring.pop()
@@ -378,6 +477,16 @@ def run_traffic(
                 rid, payload, a, f, enq = decode_completion(data)
                 if rid == _RID_READY:
                     report.ready_s.append(a)
+                elif rid == _RID_ADOPTED:
+                    import json as _json
+
+                    report.adoptions.append(
+                        _json.loads(payload.decode(errors="replace"))
+                    )
+                    if roll_active and len(report.adoptions) >= sum(alive):
+                        # every surviving worker now serves generation N+1
+                        report.rollover_wall_s = time.perf_counter() - roll_t0
+                        roll_active = False
                 elif rid == _RID_ERROR:
                     _reap(i, payload)
                 elif rid >= _RID_WARM:
@@ -388,6 +497,10 @@ def run_traffic(
                     report.completed += 1
                     report.tokens_out += int(payload.size)
                     report.latencies_s.append(now - enq)
+                    if roll_active:
+                        report.rollover_latencies_s.append(now - enq)
+                    else:
+                        report.steady_latencies_s.append(now - enq)
             if alive[i] and not procs[i].is_alive() and procs[i].exitcode:
                 _reap(i, None)
 
@@ -418,6 +531,13 @@ def run_traffic(
         # ---- send phase: Poisson arrivals, round-robin with backpressure
         nxt = 0
         for k in range(n_requests):
+            if rollover_fn is not None and rollover_at is not None and k == rollover_at:
+                # roll the world under live load: the commit lands here,
+                # on the dispatcher, while workers keep serving gen N
+                report.rollover_at = rollover_at
+                roll_t0 = time.perf_counter()
+                roll_active = True
+                rollover_fn()
             time.sleep(gaps[k])
             while True:
                 _drain()

@@ -153,6 +153,23 @@ def _hold_worker(root, queue):
     time.sleep(120)  # killed long before this expires
 
 
+def _gen_hold_worker(root, queue):
+    """Attach generation N's arena AND own a data-plane ring, report both,
+    then hold until SIGKILLed (blue/green fault injection)."""
+    from repro.core.shm_ring import ShmRing
+    from repro.link import Workspace
+
+    ws = Workspace.open(root)
+    img = ws.load("app", strategy="stable-shm")
+    ring = ShmRing.create(ws.registry, "roll/holder", slots=4, slot_bytes=16)
+    queue.put({
+        "pid": os.getpid(),
+        "segment": img.stats.shm_segment,
+        "ring": ring.name,
+    })
+    time.sleep(120)  # killed long before this expires
+
+
 # ------------------------------------------------------------------- tests
 def test_four_processes_share_one_segment(shm_ws):
     ws = shm_ws
@@ -198,12 +215,16 @@ def test_four_processes_share_one_segment(shm_ws):
     file_bytes = np.fromfile(arena_file, dtype=np.uint8)[: parent.arena.size]
     np.testing.assert_array_equal(np.asarray(parent.arena), file_bytes)
 
-    # workers exited: their mappings are gone, the warm segment remains —
-    # and a world change + gc reclaims it (no leaked segments)
+    # workers exited: their mappings are gone, the warm segment remains.
+    # A world change opens the blue/green window (the previous generation
+    # still honours the key, so a plain gc spares it); draining the window
+    # reclaims it (no leaked segments).
     with ws.management() as tx:
         tx.remove("app")
         tx.remove("w")
-    report = ws.gc()
+    assert ws.gc().segments_removed == 0      # two-generation window open
+    assert shm_arena.segment_exists(name)
+    report = ws.gc(drain=True)
     assert report.segments_removed == 1
     assert name in report.removed
     assert not shm_arena.segment_exists(name)
@@ -236,8 +257,12 @@ def test_reattach_after_mid_flight_epoch_bump(shm_ws):
     # the worker only ever saw committed worlds (no half-staged bytes)
     assert set(values) <= {1.0, 9.0}
 
-    # the dead epoch's segment is reclaimable; the live one survives
-    report = ws.gc()
+    # the dead epoch's segment survives a plain gc (the previous
+    # generation is still honoured — replicas mid-flip may hold it) and is
+    # reclaimed once the window is drained; the live one survives both
+    assert old_segment not in ws.gc().removed
+    assert shm_arena.segment_exists(old_segment)
+    report = ws.gc(drain=True)
     assert old_segment in report.removed
     assert not shm_arena.segment_exists(old_segment)
     assert shm_arena.segment_exists(new_segment)
@@ -268,12 +293,80 @@ def test_sigkilled_worker_segment_is_reclaimed(shm_ws):
     assert ws.gc().segments_removed == 0
     assert shm_arena.segment_exists(segment)
 
-    # epoch moves on: the orphan is dead and must be reclaimed despite the
-    # SIGKILLed worker never having closed anything
+    # epoch moves on: the orphan belongs to the PREVIOUS generation now —
+    # still spared while the blue/green window is open (a surviving
+    # replica could be mid-flip on it), reclaimed once the window drains,
+    # despite the SIGKILLed worker never having closed anything
     _publish(ws, value=4.0, version="2")
-    report = ws.gc()
+    assert segment not in ws.gc().removed
+    report = ws.gc(drain=True)
     assert segment in report.removed
     assert not shm_arena.segment_exists(segment)
+
+
+def test_sigkilled_gen_n_holder_drains_cleanly(shm_ws):
+    """Blue/green fault injection: a worker SIGKILLed while holding
+    generation N (arena attachment + a data-plane ring it owns) must not
+    wedge the two-generation window. The next gc reclaims its ring
+    immediately (dead owner — rings are session conduits, not epoch
+    state); the gen-N arena stays warm for the still-open window and is
+    reclaimed with the drain."""
+    ws = shm_ws
+    _publish(ws, value=1.0, version="1")
+    queue = CTX.Queue()
+    p = CTX.Process(
+        target=_gen_hold_worker, args=(ws.root, queue), daemon=True
+    )
+    p.start()
+    results = _drain(queue, 1)
+    assert results, "holder never reported"
+    arena_seg = results[0]["segment"]
+    ring_seg = results[0]["ring"]
+
+    _publish(ws, value=7.0, version="2")     # gen N+1 commits while held
+    os.kill(p.pid, signal.SIGKILL)           # worker dies holding gen N
+    p.join(timeout=JOIN_S)
+    assert p.exitcode == -signal.SIGKILL
+
+    report = ws.gc()                         # window still open
+    assert ring_seg in report.removed        # dead owner: ring never leaks
+    assert not shm_arena.segment_exists(ring_seg)
+    assert arena_seg not in report.removed   # gen N arena: window protects
+    assert shm_arena.segment_exists(arena_seg)
+
+    report = ws.gc(drain=True)               # operator ends the drain
+    assert arena_seg in report.removed
+    assert not shm_arena.segment_exists(arena_seg)
+    # the live generation still serves after the whole episode
+    np.testing.assert_array_equal(
+        ws.load("app", strategy="stable-shm")["s/a"],
+        np.full(64, 7.0, np.float32),
+    )
+
+
+def test_ephemeral_close_unlinks_rings_and_both_generations(tmp_path):
+    """``Workspace.ephemeral().close()`` ordering regression: the caches
+    must be drained and the shm census consumed BEFORE the tree is removed
+    (the records ARE the census — rmtree first would orphan every segment
+    machine-wide). With the two-generation window open, close must unlink
+    generation N, generation N+1, and any rings, then remove the root."""
+    from repro.core.shm_ring import ShmRing
+
+    from pathlib import Path
+
+    ws = Workspace.ephemeral("repro-close-")
+    root = Path(ws.root)
+    _publish(ws, value=1.0, version="1")
+    ws.load("app", strategy="stable-shm")        # generation N segment
+    _publish(ws, value=2.0, version="2")         # window opens
+    ws.load("app", strategy="stable-shm")        # generation N+1 segment
+    ShmRing.create(ws.registry, "close/ring", slots=2, slot_bytes=8)
+    names = [r["name"] for r in shm_arena.list_segments(ws.registry)]
+    assert len(names) == 3                       # two generations + ring
+    ws.close()
+    for name in names:
+        assert not shm_arena.segment_exists(name)
+    assert not root.exists()
 
 
 def test_crashed_creator_husk_is_reclaimed_while_key_live(shm_ws):

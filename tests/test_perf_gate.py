@@ -41,6 +41,8 @@ def _new_fixture(**overrides) -> dict:
         "serve/p99_latency": 36000.0,
         "serve/req_per_s": 120.0,
         "serve/tok_per_s": 1000.0,
+        "serve/rollover_p99_latency": 52000.0,
+        "serve/rollover_stall": 61000.0,
     }
     base.update(overrides)
     return base
@@ -77,6 +79,10 @@ def test_is_derived_classifies_unsweepable_rows():
     assert not perf_gate.is_derived("smoke/stable-shm")
     # latency rows ARE swept once both trajectories carry them
     assert not perf_gate.is_derived("serve/p99_latency")
+    # rollover rows are window-scoped: gated within-run (vs steady p99),
+    # never compared across runners
+    assert perf_gate.is_derived("serve/rollover_p99_latency")
+    assert perf_gate.is_derived("serve/rollover_stall")
 
 
 # --------------------------------------------------------------- compare()
@@ -168,6 +174,34 @@ def test_trajectory_rejects_zero_or_nonfinite_p99():
 def test_trajectory_p99_absent_from_old_side_is_fine():
     """BENCH_5 predates the serving tier; only the NEW side needs it."""
     assert perf_gate.trajectory_asserts(_new_fixture(), _old_fixture()) == []
+
+
+def test_trajectory_requires_rollover_rows():
+    """PR 7: a trajectory without a measured blue/green flip fails the
+    gate — zero-downtime rollover must actually have been exercised."""
+    new = _new_fixture()
+    del new["serve/rollover_p99_latency"]
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("required key serve/rollover_p99_latency" in f for f in failures)
+    new = _new_fixture()
+    del new["serve/rollover_stall"]
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("required key serve/rollover_stall" in f for f in failures)
+
+
+def test_trajectory_flags_rollover_p99_beyond_2x_steady():
+    new = _new_fixture(**{"serve/rollover_p99_latency": 36000.0 * 2.5})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("rollover p99" in f and "2x" in f for f in failures)
+
+
+def test_trajectory_rejects_zero_or_nonfinite_rollover_rows():
+    new = _new_fixture(**{"serve/rollover_p99_latency": 0.0})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("rollover_p99" in f for f in failures)
+    new = _new_fixture(**{"serve/rollover_stall": float("inf")})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("rollover_stall" in f for f in failures)
 
 
 # ------------------------------------------------------------------ main()
