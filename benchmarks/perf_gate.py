@@ -1,6 +1,6 @@
 """Perf gate: compare this PR's bench JSON against the committed previous one.
 
-    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_7.json BENCH_6.json \
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_8.json BENCH_7.json \
         [--tolerance 1.25]
 
 Three kinds of checks, all printed as a table:
@@ -30,7 +30,12 @@ Three kinds of checks, all printed as a table:
   the blue/green rows (PR 7): ``serve/rollover_p99_latency`` present,
   nonzero, finite, and within 2x of the steady-state p99 (committing a new
   generation under live traffic must not blow up the tail), plus a real
-  ``serve/rollover_stall`` (commit -> whole-fleet-adopted wall time).
+  ``serve/rollover_stall`` (commit -> whole-fleet-adopted wall time);
+  and the chaos rows (PR 8): ``serve/kill_p99_latency`` nonzero and
+  finite with ``serve/fleet_restarts >= 1`` (a SIGKILLed worker's
+  in-flight requests completed through re-route + respawn), and a real
+  ``serve/rollback_wall`` (a wedged adopt hit its deadline and the store
+  rolled back to byte-identical prior weights).
 
 Exits non-zero when any check fails (CI runs it as a soft gate, same
 rationale as the PR 3 gate: a slow shared runner must not silently block
@@ -58,12 +63,17 @@ def is_derived(key: str) -> bool:
     improvement as a regression. Rollover rows are window-scoped tail
     measurements gated by their own trajectory asserts (within-run, vs the
     same run's steady p99) — cross-run microsecond comparison of a
-    commit-sized window is pure runner noise."""
+    commit-sized window is pure runner noise. The PR 8 chaos rows
+    (``kill_p99_latency``, ``rollback_wall``) are the same kind of
+    window-scoped measurement — dominated by detection/respawn
+    scheduling, gated by their own nonzero-and-finite asserts below."""
     return (
         "speedup" in key
         or "/fleet_" in key
         or "_per_s" in key
         or "/rollover_" in key
+        or "/kill_" in key
+        or "/rollback_" in key
     )
 
 
@@ -210,6 +220,31 @@ def trajectory_asserts(new: dict, old: dict) -> list[str]:
             f"serve/rollover_stall ({stall:.1f}us) is nonzero and finite "
             f"(the fleet really flipped generations)",
             stall > 0.0 and math.isfinite(stall),
+        )
+    # chaos tier (PR 8): a SIGKILLed worker's in-flight requests still
+    # completed (measured from their ORIGINAL enqueue — the supervisor
+    # really detected, re-routed, and respawned), and a wedged adopt was
+    # rolled back to byte-identical prior weights within a real wall
+    kill_p99 = require(new, "serve/kill_p99_latency", "new")
+    if kill_p99 is not None:
+        check(
+            f"serve/kill_p99_latency ({kill_p99:.1f}us) is nonzero and "
+            f"finite (re-routed requests really completed)",
+            kill_p99 > 0.0 and math.isfinite(kill_p99),
+        )
+    restarts = require(new, "serve/fleet_restarts", "new")
+    if restarts is not None:
+        check(
+            f"supervisor really respawned a killed worker "
+            f"(restarts={restarts:.0f})",
+            restarts >= 1.0,
+        )
+    rollback = require(new, "serve/rollback_wall", "new")
+    if rollback is not None:
+        check(
+            f"serve/rollback_wall ({rollback:.1f}us) is nonzero and finite "
+            f"(deadline fired and the store rolled back)",
+            rollback > 0.0 and math.isfinite(rollback),
         )
     return failures
 

@@ -13,7 +13,7 @@ amortizes to at most one shm-segment fill for the whole machine, and that
 the epoch path writes zero journal bytes. Use it in CI to prove the
 benchmark path stays runnable.
 
-Both ``--smoke`` and ``--fast`` also write ``BENCH_6.json``
+Both ``--smoke`` and ``--fast`` also write ``BENCH_8.json``
 ({name: us_per_call}, plus derived ratio/count rows such as
 ``smoke/*_speedup_*`` and ``smoke/fleet_fills``) — the machine-readable
 perf trajectory, one file per PR, uploaded as a CI artifact and gated
@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import sys
 
-BENCH_JSON = "BENCH_7.json"  # perf trajectory of this PR's benchmark pass
+BENCH_JSON = "BENCH_8.json"  # perf trajectory of this PR's benchmark pass
 
 
 def smoke() -> None:

@@ -1,6 +1,6 @@
 """Serving-tier load benchmark: p50/p99 under Poisson traffic + rollover.
 
-    PYTHONPATH=src python -m benchmarks.serve_load [--smoke] [--rollover]
+    PYTHONPATH=src python -m benchmarks.serve_load [--smoke] [--rollover | --chaos]
 
 PRs 3-5 measured how fast an epoch *loads*; this harness measures what the
 loaded fleet *does*: a dispatcher drives Poisson arrivals through shm
@@ -40,19 +40,39 @@ engine: ``serve/generate_hostsync`` times the OLD decode loop (a blocking
 ``serve/generate_devacc`` (device-side accumulation, one transfer at the
 end), reported as us per decoded token.
 
-Rows are MERGED into ``BENCH_7.json`` (``run.py --smoke`` writes the load
+``--chaos`` is PR 8's hardening measurement, two halves:
+
+* **kill-a-worker tail** — a supervised fleet (``supervise=True``) serves
+  the full schedule while a fault plan SIGKILLs worker 0 mid-decode
+  (``die_at_step``). The dispatcher detects the death through the dead
+  rsp-ring owner record, re-routes the in-flight frames verbatim
+  (original enqueue timestamps, so the latency is honest), and respawns
+  the worker with backoff. Emits ``serve/kill_p99_latency`` (p99 of the
+  re-routed requests, measured from their ORIGINAL enqueue) plus
+  ``serve/fleet_restarts`` and ``serve/fleet_rerouted`` counts.
+* **rollback wall** — in-process: commit a v2 generation, wedge the
+  reload via the fault hook, adopt with a deadline; the deadline fires,
+  ``abort_adopt`` rolls the store forward to a generation that re-adopts
+  the v1 world, and the engine is byte-identical to v1 again. Emits
+  ``serve/rollback_wall``: wall time from the deadline firing to
+  serving the rolled-back weights (the adopt call's total wall minus
+  the deadline itself).
+
+Rows are MERGED into ``BENCH_8.json`` (``run.py --smoke`` writes the load
 rows first in CI; this harness adds the serving rows), and
-``perf_gate.py`` gates the rollover rows against the steady-state ones.
+``perf_gate.py`` gates the rollover and chaos rows against the
+steady-state ones.
 """
 
 from __future__ import annotations
 
 import hashlib
 import sys
+import time
 
 import numpy as np
 
-BENCH_JSON = "BENCH_7.json"
+BENCH_JSON = "BENCH_8.json"
 
 ARCH = "mamba2-370m"          # constant-state decode: the serving workhorse
 
@@ -197,6 +217,13 @@ def run(
         emit_value("serve/tok_per_s", rep.tok_per_s, tag)
         emit_value("serve/fleet_ready_s", max(rep.ready_s or [0.0]),
                    "slowest worker spin-up (epoch load + first attach)")
+        # supervision counters: honest rows even when zero — no fault was
+        # injected in this mode, so a nonzero value here means a worker
+        # really died (the --chaos pass overwrites these with its kill run)
+        emit_value("serve/fleet_restarts", rep.restarts,
+                   "supervisor respawns (0 expected: no fault injected)")
+        emit_value("serve/fleet_rerouted", rep.rerouted_requests,
+                   "in-flight re-routes (0 expected: no fault injected)")
 
         if rollover:
             _check_rollover(ws, app_name, rep, workers=workers,
@@ -253,7 +280,121 @@ def _check_rollover(ws, app_name, rep, *, workers, pre_roll_segments) -> None:
          f"commit->fleet-adopted wall;old_segments_gcd={len(pre_roll_segments)}")
 
 
+def run_chaos(*, smoke: bool = True) -> None:
+    """``--chaos``: kill-a-worker tail + wedge->deadline->rollback wall."""
+    from repro.serve import run_traffic
+
+    from .common import emit, emit_value, fresh_workspace, write_bench_json
+
+    workers = 2 if smoke else 3
+    n_requests = 16 if smoke else 48
+    print("name,us_per_call,derived")
+    ws = fresh_workspace()
+    try:
+        cfg, app_name = _publish_serve_app(ws, ARCH)
+
+        # Half 1: SIGKILL worker 0 mid-decode under a supervised fleet.
+        # The supervisor must finish the whole schedule anyway: dead-owner
+        # detection -> verbatim re-route of the in-flight frames -> respawn.
+        # die_at_step counts CUMULATIVE serve-loop decode steps, warmup
+        # included: the one warmup request costs max_new steps, so step
+        # max_new+2 kills worker 0 two steps into its first MEASURED batch
+        max_new = 8
+        rep = run_traffic(
+            ws,
+            app_name,
+            arch=ARCH,
+            workers=workers,
+            n_requests=n_requests,
+            rate_hz=200.0,
+            prompt_len=12,
+            max_new_tokens=max_new,
+            max_batch=2,
+            supervise=True,
+            faults={"die_at_step": max_new + 2, "worker": 0},
+        )
+        s = rep.summary()
+        assert rep.completed == n_requests, f"lost requests under kill: {s}"
+        assert rep.failed == 0, f"unrecovered worker failures: {s}"
+        assert rep.restarts >= 1, f"fault plan never killed a worker: {s}"
+        assert rep.rerouted_requests >= 1, f"nothing was in flight: {s}"
+        kill_p99 = rep.kill_p99_s
+        assert kill_p99 > 0 and np.isfinite(kill_p99), s
+        emit(
+            "serve/kill_p99_latency",
+            kill_p99,
+            f"workers={workers};restarts={rep.restarts};"
+            f"rerouted={rep.rerouted_requests};from ORIGINAL enqueue",
+        )
+        emit_value("serve/fleet_restarts", rep.restarts,
+                   "supervisor respawns (capped-backoff)")
+        emit_value("serve/fleet_rerouted", rep.rerouted_requests,
+                   "in-flight frames replayed to surviving workers")
+
+        # Half 2: wedged reload -> deadline -> auto-rollback, in-process.
+        _bench_rollback_wall(cfg, ws, app_name)
+    finally:
+        ws.close()
+        print(f"wrote {write_bench_json(BENCH_JSON, merge=True)}")
+
+
+def _bench_rollback_wall(cfg, ws, app_name) -> None:
+    """Commit v2, wedge the reload, adopt with a deadline; time the
+    recovery (deadline fires -> abort_adopt -> serving v1 bytes again)."""
+    from repro import models
+    from repro.ckpt import bundle_from_params
+    from repro.core.errors import AdoptDeadlineError
+    from repro.serve import FaultPlan, ServeEngine
+    from repro.serve import faults as serve_faults
+
+    from .common import emit
+
+    engine = ServeEngine.from_workspace(cfg, ws, app_name, cache_len=16)
+    good = _image_digest(ws.load(app_name, strategy="stable-mmap-cached"))
+    gen_before = ws.epoch_gen
+
+    params2 = {
+        n: np.asarray(v) for n, v in models.init_params(cfg, 7).items()
+    }
+    bundle, payload = bundle_from_params(f"weights:{cfg.name}", "v2-bad",
+                                         params2)
+    with ws.management() as tx:
+        tx.publish(bundle, payload)
+
+    deadline_s = 0.25
+    serve_faults.install(FaultPlan(wedge_adopt_s=30.0))
+    try:
+        t0 = time.perf_counter()
+        try:
+            engine.adopt_epoch(ws, app_name, deadline_s=deadline_s)
+        except AdoptDeadlineError as err:
+            wall = time.perf_counter() - t0
+            rolled_back_to = err.rolled_back_to
+        else:
+            raise AssertionError("wedged adopt_epoch did not deadline")
+    finally:
+        serve_faults.clear()
+
+    # rollback is a FORWARD generation: v2 commit bumped the gen, the
+    # abort bumped it again re-adopting the v1 world
+    assert rolled_back_to == gen_before + 2, (rolled_back_to, gen_before)
+    assert ws.epoch_gen == rolled_back_to
+    after = _image_digest(ws.load(app_name, strategy="stable-mmap-cached"))
+    assert after == good, "rollback did not restore the v1 bytes"
+    rollback_wall = wall - deadline_s
+    assert rollback_wall > 0, (wall, deadline_s)
+    emit(
+        "serve/rollback_wall",
+        rollback_wall,
+        f"deadline_s={deadline_s};wedge_s=30;rolled_back_to="
+        f"{rolled_back_to};bytes==v1",
+    )
+
+
 def main() -> None:
+    if "--chaos" in sys.argv:
+        run_chaos(smoke="--smoke" in sys.argv)
+        return
     rollover = "--rollover" in sys.argv
     if "--smoke" in sys.argv:
         run(workers=2, n_requests=24, rate_hz=200.0, rollover=rollover)

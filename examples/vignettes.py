@@ -27,6 +27,11 @@ Vignette 7 — roll a library under load (blue/green): while the fleet keeps
              let every worker flip at a request boundary
              (epoch_watch/adopt_epoch), then drain and gc the old
              generation's segments — zero requests dropped end to end.
+Vignette 8 — survive a bad roll: commit a v3 whose reload wedges, let the
+             adopt deadline fire, and watch ``abort_adopt`` roll the store
+             FORWARD to a generation that re-adopts the v2 world —
+             byte-identical weights, journal-replay safe, the aborted
+             generation reclaimed by the next drain gc.
 """
 
 import numpy as np
@@ -350,6 +355,69 @@ def main() -> None:
         f"segment(s); the v2 world keeps serving"
     )
     ws.load("serve:mamba", strategy="stable-mmap-cached")
+
+    # ---------------------------------------------------------------- vignette 8
+    print("=== Vignette 8: survive a bad roll (Grace) ===")
+    # Grace ships a v3 that wedges on reload (a fault plan stands in for a
+    # hung filesystem / corrupt bundle). The adopt deadline is the ONLY
+    # thing standing between her and a wedged fleet: it fires, abort_adopt
+    # rolls the store FORWARD (rollback is a new generation, so every
+    # watcher's epoch_watch sees it like any commit), and the engine is
+    # serving the v2 bytes again — provably.
+    import time as _time
+
+    from repro.core.errors import AdoptDeadlineError
+    from repro.serve import FaultPlan, ServeEngine
+    from repro.serve import faults as _faults
+
+    engine = ServeEngine.from_workspace(tr_cfg, ws, "serve:mamba",
+                                        cache_len=16)
+    good = h.hexdigest()          # the v2 digest vignette 7 just verified
+    gen_good = ws.epoch_gen
+
+    v3_mamba = {
+        n: np.asarray(v) for n, v in models.init_params(tr_cfg, 4).items()
+    }
+    b3, p3 = bundle_from_params("weights:mamba", "v3", v3_mamba)
+    with ws.management() as tx:
+        tx.publish(b3, p3)
+    print(f"  committed v3 as generation {ws.epoch_gen} — but its reload "
+          f"wedges")
+
+    _faults.install(FaultPlan(wedge_adopt_s=30.0))
+    try:
+        t0 = _time.perf_counter()
+        try:
+            engine.adopt_epoch(ws, "serve:mamba", deadline_s=0.3)
+            raise AssertionError("wedged adopt did not deadline")
+        except AdoptDeadlineError as err:
+            wall = _time.perf_counter() - t0
+            rolled_back_to = err.rolled_back_to
+    finally:
+        _faults.clear()
+
+    assert rolled_back_to == gen_good + 2 == ws.epoch_gen
+    img3 = ws.load("serve:mamba", strategy="stable-mmap-cached")
+    h3 = _hashlib.blake2b(digest_size=16)
+    for nm in sorted(img3.tensors):
+        h3.update(
+            np.ascontiguousarray(img3.tensors[nm]).view(np.uint8).tobytes()
+        )
+    assert h3.hexdigest() == good  # byte-identical to pre-roll v2
+    print(
+        f"  deadline fired at 0.3s; rolled back to generation "
+        f"{ws.epoch_gen} in {wall:.2f}s total — weights byte-identical "
+        f"to v2"
+    )
+    ws.gc(drain=True)             # the aborted v3 generation is reclaimed
+    ws.load("serve:mamba", strategy="stable-mmap-cached")
+    print("  drain: aborted generation reclaimed; v2 keeps serving")
+    print("  failure mode          detection                recovery")
+    print("  -------------------   ----------------------   ---------------------------")
+    print("  wedged/slow reload    adopt_epoch deadline     auto-rollback (forward gen)")
+    print("  bad weights shipped   operator / digest        ws.rollback_epoch()")
+    print("  SIGKILLed worker      dead rsp-ring owner      supervisor re-route + respawn")
+    print("  stuck request         per-request deadline     DEADLINE frame, slot freed")
     ws.close()
 
 

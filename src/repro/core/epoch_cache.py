@@ -317,6 +317,25 @@ class EpochCache:
             e.nbytes for e in list(self._entries.values()) if e.token != tok
         )
 
+    def generations(self) -> dict[int, dict]:
+        """Entry count + accounted bytes per resident token generation.
+
+        Observability over the retire chain: back-to-back commits leave
+        SEVERAL retired generations draining at once (each pinned by its
+        own in-flight requests); this names each one so an operator — or
+        ``Workspace.gc(dry_run=True)`` — can see exactly what a drain
+        would reclaim, per generation."""
+        out: dict[int, dict] = {}
+        tok = self._token
+        for e in list(self._entries.values()):
+            g = out.setdefault(
+                e.token,
+                {"entries": 0, "bytes": 0, "retired": e.token != tok},
+            )
+            g["entries"] += 1
+            g["bytes"] += e.nbytes
+        return out
+
     # ---------------------------------------------------------------- reads
     def get(self, section: str, key) -> Optional[Any]:
         """Lock-free read: returns the entry or None (miss / stale token).

@@ -65,3 +65,24 @@ class PayloadIntegrityError(StableLinkingError):
 
 class StateSchemaError(StableLinkingError):
     """state.json was written by a newer schema than this build supports."""
+
+
+class RollbackError(StableLinkingError):
+    """An epoch rollback was requested but cannot be honoured (no retained
+    generation to re-adopt, or the requested generation left the window)."""
+
+
+class EpochAdoptError(StableLinkingError):
+    """A serving engine failed to adopt a newly committed generation."""
+
+
+class AdoptDeadlineError(EpochAdoptError):
+    """``adopt_epoch(deadline_s=...)`` hit its deadline (wedged reload).
+
+    Raised AFTER the engine auto-rolled the store back to the still-live
+    previous generation and re-lifted its params — the serving loop that
+    catches this resumes admission on known-good weights."""
+
+    def __init__(self, message: str, *, rolled_back_to: int = 0):
+        self.rolled_back_to = rolled_back_to
+        super().__init__(message)

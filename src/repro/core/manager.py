@@ -46,7 +46,12 @@ from enum import Enum
 from typing import Callable, Optional
 
 from .epoch_cache import process_cache
-from .errors import ImmutableEpochError, ModeError, UnknownObjectError
+from .errors import (
+    ImmutableEpochError,
+    ModeError,
+    RollbackError,
+    UnknownObjectError,
+)
 from .objects import StoreObject
 from .registry import Registry, World
 
@@ -56,7 +61,26 @@ class Mode(str, Enum):
     EPOCH = "epoch"
 
 
+def _load_retained(st: dict) -> list[dict]:
+    return [
+        {
+            "epoch_gen": int(e.get("epoch_gen", 0)),
+            "world": dict(e.get("world", {})),
+        }
+        for e in st.get("retained", [])
+        if e.get("world")
+    ]
+
+
 class Manager:
+    #: How many outgoing generations each commit keeps reclaim-protected
+    #: (the retained chain's length cap). 2 covers a commit landing while
+    #: the fleet is still draining the PREVIOUS window — back-to-back
+    #: rollovers; generations trimmed past the cap are gracefully retired:
+    #: their pinned cache entries drain through the retire machinery and
+    #: their store files become collectable at the next gc.
+    RETAIN_GENERATIONS = 2
+
     def __init__(self, registry: Registry):
         self.registry = registry
         st = registry.read_state()
@@ -64,12 +88,19 @@ class Manager:
         self._epoch = int(st.get("epoch", 0))
         self._epoch_gen = int(st.get("epoch_gen", self._epoch))
         self._world = dict(st.get("world", {}))      # committed bindings
-        # The previous generation's committed bindings: retained through a
-        # commit (blue/green rollover window) until Workspace.gc(drain=True)
-        # drops them, so gen N's tables/arenas/segments stay reclaim-
-        # protected while a fleet drains onto gen N+1.
-        self._previous = dict(st.get("previous", {}))
-        self._previous_epoch_gen = int(st.get("previous_epoch_gen", 0))
+        # The retained generation chain (oldest first): outgoing committed
+        # worlds kept through commits (blue/green rollover window) until
+        # Workspace.gc(drain=True) drops them, so each retained gen's
+        # tables/arenas/segments stay reclaim-protected while a fleet
+        # drains onto the newest generation. Capped at RETAIN_GENERATIONS.
+        self._retained: list[dict] = _load_retained(st)
+        # Nonzero after a rollback: the generation that was aborted (its
+        # world re-joins the chain so a mid-flip fleet can drain back).
+        # Cleared by the next normal commit.
+        self._rolled_back_from = int(st.get("rolled_back_from", 0))
+        # Generations the most recent commit/rollback trimmed off the
+        # chain (in-memory observability of the graceful retirement).
+        self.last_retired: list[int] = []
         if self._mode == Mode.EPOCH:
             # A stale pending snapshot (e.g. from a crash mid-management in a
             # different process) must not survive into epoch state.
@@ -120,11 +151,32 @@ class Manager:
 
     @property
     def previous_epoch_gen(self) -> int:
-        return self._previous_epoch_gen
+        """Generation number of the newest retained world (0 = none)."""
+        return self._retained[-1]["epoch_gen"] if self._retained else 0
 
     @property
     def previous_bindings(self) -> dict[str, str]:
-        return dict(self._previous)
+        """Bindings of the newest retained world (compat accessor over the
+        head of the generation chain)."""
+        return dict(self._retained[-1]["world"]) if self._retained else {}
+
+    @property
+    def rolled_back_from(self) -> int:
+        """The generation the most recent rollback aborted (0 = the current
+        generation was reached by a normal commit)."""
+        return self._rolled_back_from
+
+    def retained_generations(self) -> list[int]:
+        """Generation numbers currently in the retained chain (oldest
+        first) — every one of them is reclaim-protected."""
+        return [e["epoch_gen"] for e in self._retained]
+
+    def retained_worlds(self) -> list[tuple[int, World]]:
+        """(epoch_gen, World) for every retained generation, oldest first."""
+        return [
+            (e["epoch_gen"], World(self.registry, e["world"]))
+            for e in self._retained
+        ]
 
     @property
     def staged_edits(self) -> list[dict]:
@@ -132,21 +184,29 @@ class Manager:
         return [dict(e) for e in self._staged_edits]
 
     def previous_world(self) -> Optional[World]:
-        """The retained previous generation's world view, or None once it
-        has been dropped (``drop_previous`` / fresh store)."""
-        if not self._previous:
+        """The newest retained generation's world view, or None once the
+        chain has been dropped (``drop_previous`` / fresh store)."""
+        if not self._retained:
             return None
-        return World(self.registry, self._previous)
+        return World(self.registry, self._retained[-1]["world"])
 
     def drop_previous(self) -> None:
-        """End the two-generation window: forget generation N's bindings
-        so the next ``Workspace.gc`` may reclaim its tables/arenas/segments.
-        Called by ``Workspace.gc(drain=True)`` after the fleet drained."""
-        if not self._previous and not self._previous_epoch_gen:
+        """End the rollover window: forget every retained generation's
+        bindings so the next ``Workspace.gc`` may reclaim their tables/
+        arenas/segments. Called by ``Workspace.gc(drain=True)`` after the
+        fleet drained."""
+        if not self._retained:
             return
-        self._previous = {}
-        self._previous_epoch_gen = 0
+        self._retained = []
         self._persist()
+
+    def _trim_retained(self) -> None:
+        """Cap the chain: generations past RETAIN_GENERATIONS are
+        gracefully retired — recorded in ``last_retired``, their keys
+        become collectable at the next gc, and their still-pinned cache
+        entries drain through the retire machinery (never flash-cleared)."""
+        while len(self._retained) > self.RETAIN_GENERATIONS:
+            self.last_retired.append(self._retained.pop(0)["epoch_gen"])
 
     def refresh(self) -> bool:
         """Re-read the persisted state and adopt a sibling process's commit.
@@ -169,8 +229,8 @@ class Manager:
         self._epoch = int(st.get("epoch", 0))
         self._epoch_gen = gen
         self._world = dict(st.get("world", {}))
-        self._previous = dict(st.get("previous", {}))
-        self._previous_epoch_gen = int(st.get("previous_epoch_gen", 0))
+        self._retained = _load_retained(st)
+        self._rolled_back_from = int(st.get("rolled_back_from", 0))
         self._staged = dict(self._world)
         self._journal_seq = int(st.get("journal_seq", self._journal_seq))
         self._world_view = None
@@ -380,19 +440,100 @@ class Manager:
             # the session still open. Runs after materialize so it edits
             # the NEW generation's tables.
             self.on_edits(new_world, self.staged_edits)
-        # Generation rollover: keep the outgoing committed world beside the
-        # new one. Its tables/arenas/shm segments stay gc-protected until
-        # the operator ends the drain (Workspace.gc(drain=True)).
-        self._previous = dict(self._world)
-        self._previous_epoch_gen = self._epoch_gen
+        # Generation rollover: push the outgoing committed world onto the
+        # retained chain beside the new one. Its tables/arenas/shm segments
+        # stay gc-protected until the operator ends the drain
+        # (Workspace.gc(drain=True)) or the chain cap retires it — a commit
+        # landing while the fleet still drains the PREVIOUS window keeps
+        # BOTH draining generations protected instead of implicitly
+        # forgetting the older one.
+        self.last_retired = []
+        if self._world:
+            self._retained.append(
+                {"epoch_gen": self._epoch_gen, "world": dict(self._world)}
+            )
+            self._trim_retained()
         self._world = dict(self._staged)
         self._epoch = new_epoch
         self._epoch_gen += 1
+        self._rolled_back_from = 0
         self._staged_edits = []
         self._mode = Mode.EPOCH
         self._journal_clear()
         self._persist()
         return self._epoch
+
+    def rollback(self, to_gen: Optional[int] = None) -> int:
+        """Abort a bad flip: re-adopt a still-retained generation's world.
+
+        Epoch mode only (an open management session has ``abort_mgmt``).
+        The target defaults to the newest retained generation — the world
+        that was serving before the bad commit. A rollback is itself a new
+        generation (``epoch_gen`` stays monotone, so every ``EpochWatch``
+        in the fleet notices it exactly like a commit) whose bindings are
+        byte-identical to the target's; the aborted generation takes the
+        target's place in the retained chain, so a worker caught mid-flip
+        onto it can drain back before its segments are reclaimed. The
+        state records ``rolled_back_from`` (cleared by the next normal
+        commit) and the journal records the abort as a ``rollback`` row —
+        replay ignores it, so a later ``management(resume=True)`` can
+        never resurrect the aborted generation's staged ops.
+
+        Returns the new (rolled-back) ``epoch_gen``.
+        """
+        if self._mode == Mode.MANAGEMENT:
+            raise ModeError(
+                "rollback during management time: abort the open session "
+                "first (abort_mgmt)"
+            )
+        if not self._retained:
+            raise RollbackError(
+                "no retained generation to roll back to (the rollover "
+                "window was drained)"
+            )
+        if to_gen is None:
+            entry = self._retained[-1]
+        else:
+            matches = [
+                e for e in self._retained if e["epoch_gen"] == int(to_gen)
+            ]
+            if not matches:
+                raise RollbackError(
+                    f"generation {to_gen} is not in the retained window "
+                    f"(retained: {self.retained_generations()})"
+                )
+            entry = matches[-1]
+        bad_gen, bad_world = self._epoch_gen, dict(self._world)
+        self.last_retired = []
+        self._retained = [e for e in self._retained if e is not entry]
+        if bad_world:
+            self._retained.append(
+                {"epoch_gen": bad_gen, "world": bad_world}
+            )
+            self._trim_retained()
+        self._world = dict(entry["world"])
+        self._staged = dict(self._world)
+        self._epoch += 1
+        self._epoch_gen += 1
+        self._rolled_back_from = bad_gen
+        # Same cache discipline as a commit: the aborted generation's
+        # entries are retired (pins drain), new loads fill under the new
+        # token — and hit the target generation's still-live files.
+        self.epoch_cache.bump_epoch()
+        if self.epoch_cache is not process_cache():
+            process_cache().bump_epoch()
+        if self.journal is not None:
+            # The abort is journaled (then superseded at the next session
+            # boundary). Replay applies only publish/remove ops, so this
+            # marker can never re-stage anything.
+            self.journal.clear()
+            self.journal.record(
+                "rollback",
+                name=f"epoch_gen:{bad_gen}",
+                version=str(entry["epoch_gen"]),
+            )
+        self._persist()
+        return self._epoch_gen
 
     # --------------------------------------------------------------- internal
     def _journal_record(self, op: str, obj: StoreObject) -> None:
@@ -422,8 +563,15 @@ class Manager:
                 "world": self._world,
                 "pending": self._staged,
                 "pending_edits": self._staged_edits,
-                "previous": self._previous,
-                "previous_epoch_gen": self._previous_epoch_gen,
+                # previous/previous_epoch_gen mirror the chain head so
+                # schema-3 readers keep seeing the two-generation window
+                "previous": self.previous_bindings,
+                "previous_epoch_gen": self.previous_epoch_gen,
+                "retained": [
+                    {"epoch_gen": e["epoch_gen"], "world": dict(e["world"])}
+                    for e in self._retained
+                ],
+                "rolled_back_from": self._rolled_back_from,
                 "journal_seq": self._journal_seq,
                 "mtime": time.time(),
             }

@@ -34,10 +34,18 @@ across store resets) plus ``previous`` / ``previous_epoch_gen``, which keep
 the previous committed world's bindings alongside the new generation so a
 live fleet can drain on N while N+1 serves (blue/green rollover — the old
 generation's tables, arenas, and shm segments stay reclaim-protected until
-``Workspace.gc(drain=True)``). ``read_state`` migrates older schemas in
-place, so stores written by older builds keep working. A state written by
-a *newer* schema than this build understands raises ``StateSchemaError``
-instead of being silently misread.
+``Workspace.gc(drain=True)``). v4 generalizes the two-generation window
+into an explicit **retained generation chain**: ``retained`` is a list of
+``{"epoch_gen": g, "world": {...}}`` entries (oldest first) so a commit
+landing mid-drain keeps BOTH still-draining generations reclaim-protected
+instead of implicitly forgetting the older one, and adds
+``rolled_back_from`` — nonzero after ``Workspace.rollback_epoch`` aborted
+a bad flip, naming the generation that was rolled back (cleared by the
+next normal commit). ``previous`` / ``previous_epoch_gen`` are still
+written (mirroring the newest retained entry) for older readers.
+``read_state`` migrates older schemas in place, so stores written by older
+builds keep working. A state written by a *newer* schema than this build
+understands raises ``StateSchemaError`` instead of being silently misread.
 """
 
 from __future__ import annotations
@@ -56,8 +64,10 @@ from .objects import StoreObject, payload_digest
 # Current state.json schema. v1 = unversioned (pre-journal); v2 adds the
 # `schema` stamp and `journal_seq` (last journal entry the state has seen);
 # v3 adds `epoch_gen` plus the retained previous generation (`previous`,
-# `previous_epoch_gen`) for blue/green epoch rollover.
-STATE_SCHEMA = 3
+# `previous_epoch_gen`) for blue/green epoch rollover; v4 generalizes that
+# into the `retained` generation chain and adds the `rolled_back_from`
+# abort marker.
+STATE_SCHEMA = 4
 
 
 class Registry:
@@ -175,6 +185,8 @@ class Registry:
             "pending": {},
             "previous": {},
             "previous_epoch_gen": 0,
+            "retained": [],
+            "rolled_back_from": 0,
             "journal_seq": 0,
         }
 
@@ -196,7 +208,9 @@ class Registry:
         return self.root / "shm"
 
     # --------------------------------------------------------------- garbage
-    def gc_stores(self, live_keys: Iterable[tuple[str, str]]) -> "GcReport":
+    def gc_stores(
+        self, live_keys: Iterable[tuple[str, str]], *, dry_run: bool = False
+    ) -> "GcReport":
         """Delete ``tables/`` entries (materialized tables, baked arenas,
         sidecars) whose (app hash, key) is not in ``live_keys``.
 
@@ -206,9 +220,11 @@ class Registry:
         staged during management) — see ``Workspace.gc``, which is the
         only caller; nothing ever runs this implicitly during an epoch.
         Unknown file shapes in ``tables/`` are left untouched.
+        ``dry_run=True`` reports the same candidates without unlinking
+        anything (the operator preflight before closing a rollback window).
         """
         live = {f"{app_hash[:16]}-{key[:16]}" for app_hash, key in live_keys}
-        report = GcReport()
+        report = GcReport(dry_run=dry_run)
         tables = self.root / "tables"
         for p in sorted(tables.iterdir()) if tables.exists() else []:
             if not p.is_file():
@@ -221,7 +237,8 @@ class Registry:
                 report.kept_files += 1
                 continue
             size = p.stat().st_size
-            p.unlink()
+            if not dry_run:
+                p.unlink()
             report.removed.append(p.name)
             report.bytes_reclaimed += size
         return report
@@ -234,12 +251,18 @@ class GcReport:
     ``Workspace.gc`` also folds shared-memory segment reclamation into the
     same report: unlinked segment names land in ``removed`` (and their
     sizes in ``bytes_reclaimed``), with ``segments_removed`` counting them
-    separately from table-store files."""
+    separately from table-store files. ``dry_run=True`` marks a preflight
+    pass: the same names/bytes are reported but nothing was unlinked, and
+    ``retired_entries``/``retired_bytes`` name what a ``drain`` would
+    additionally reclaim from the epoch caches."""
 
     removed: list[str] = field(default_factory=list)
     kept_files: int = 0
     bytes_reclaimed: int = 0
     segments_removed: int = 0
+    dry_run: bool = False
+    retired_entries: int = 0     # epoch-cache entries a drain would reclaim
+    retired_bytes: int = 0
 
     @property
     def removed_files(self) -> int:
@@ -247,10 +270,13 @@ class GcReport:
 
     def summary(self) -> dict:
         return {
+            "dry_run": self.dry_run,
             "removed_files": self.removed_files,
             "segments_removed": self.segments_removed,
             "kept_files": self.kept_files,
             "bytes_reclaimed": self.bytes_reclaimed,
+            "retired_entries": self.retired_entries,
+            "retired_bytes": self.retired_bytes,
             "removed": sorted(self.removed),
         }
 
@@ -278,6 +304,24 @@ def migrate_state(state: dict) -> dict:
         state.setdefault("epoch_gen", int(state.get("epoch", 0)))
         state.setdefault("previous", {})
         state.setdefault("previous_epoch_gen", 0)
+    if schema < 4:
+        # v3's single previous generation becomes a one-entry chain; an
+        # empty previous world means the window was already closed.
+        state = dict(state)
+        state["schema"] = 4
+        if "retained" not in state:
+            prev = dict(state.get("previous", {}))
+            state["retained"] = (
+                [
+                    {
+                        "epoch_gen": int(state.get("previous_epoch_gen", 0)),
+                        "world": prev,
+                    }
+                ]
+                if prev
+                else []
+            )
+        state.setdefault("rolled_back_from", 0)
     return state
 
 

@@ -541,12 +541,17 @@ def unlink_segment(name: str) -> bool:
 
 
 def gc_segments(
-    registry, live_keys: Iterable[tuple[str, str]]
+    registry,
+    live_keys: Iterable[tuple[str, str]],
+    *,
+    dry_run: bool = False,
 ) -> tuple[list[str], int]:
     """Reclaim dead segments of this root (see module docstring's contract).
 
     ``live_keys`` is the same (app hash, closure key) live set
-    ``Registry.gc_stores`` consumes. Returns (removed names, bytes)."""
+    ``Registry.gc_stores`` consumes. Returns (removed names, bytes).
+    ``dry_run=True`` reports the same condemned segments without unlinking
+    anything (segments or records) — the operator preflight."""
     live = {(a[:16], k[:16]) for a, k in live_keys}
     removed: list[str] = []
     bytes_reclaimed = 0
@@ -569,6 +574,11 @@ def gc_segments(
             if shm_ring.gc_ring_record(
                 rec, pid_alive=_pid_alive, segment_ready=_segment_ready
             ):
+                if dry_run:
+                    if segment_exists(name):
+                        removed.append(name)
+                        bytes_reclaimed += int(rec.get("size", 0))
+                    continue
                 if unlink_segment(name):
                     removed.append(name)
                     bytes_reclaimed += int(rec.get("size", 0))
@@ -598,9 +608,15 @@ def gc_segments(
             elif ready is None:
                 # segment already gone (another root's gc, reboot): the
                 # record is the orphan — drop it without counting bytes
-                rec_path.unlink(missing_ok=True)
+                if not dry_run:
+                    rec_path.unlink(missing_ok=True)
                 continue
         if keep:
+            continue
+        if dry_run:
+            if segment_exists(name):
+                removed.append(name)
+                bytes_reclaimed += int(rec.get("size", 0))
             continue
         if unlink_segment(name):
             removed.append(name)

@@ -286,6 +286,33 @@ class ShmRing:
         return data
 
 
+def ring_record(registry, channel: str) -> dict | None:
+    """The published record of ``channel``'s ring under this root (owner
+    pid, size, creation time), or None when no record exists."""
+    path = shm_records_dir(registry) / f"{ring_name(registry.root, channel)}.json"
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+
+
+def ring_owner_alive(registry, channel: str, *, pid_alive=None) -> bool | None:
+    """Is the process that owns ``channel``'s ring still alive?
+
+    The supervisor's dead-worker detector: a worker owns its response
+    ring, so its record's ``owner_pid`` going dead is the authoritative
+    signal that the worker is gone (it works even when the supervisor did
+    not spawn the worker and has no ``Process`` handle to poll). Returns
+    None when no record exists — the ring was never created, or a gc
+    already reclaimed it."""
+    rec = ring_record(registry, channel)
+    if rec is None:
+        return None
+    if pid_alive is None:
+        from .shm_arena import _pid_alive as pid_alive
+    return bool(pid_alive(int(rec.get("owner_pid", 0))))
+
+
 def gc_ring_record(rec: dict, *, pid_alive, segment_ready) -> bool:
     """Should this ``kind: "ring"`` record's segment be reclaimed?
 

@@ -67,6 +67,7 @@ class EpochChange:
     epoch_gen: int
     previous_epoch_gen: int
     world_hash: str = ""
+    rolled_back_from: int = 0   # nonzero: this generation is a rollback
 
 
 class EpochWatch:
@@ -79,11 +80,35 @@ class EpochWatch:
     time persists (staging churn) move the stat without moving the
     generation and are filtered out here, so a poller flips exactly once
     per commit. Returns the ``EpochChange`` on a new generation, else None.
+
+    Coarse-mtime fallback: two commits of the same byte size landing
+    within the filesystem's mtime granularity (same ``st_mtime_ns``, same
+    ``st_size`` — ext3, some network filesystems, 1s-granularity mounts)
+    leave the stat identical, which the fast path would read as "nothing
+    happened" forever. When the stat is unchanged the watch therefore
+    still re-parses the state every ``fallback_interval_s`` (default
+    250ms) and trusts the parsed ``epoch_gen`` — the missed double commit
+    is noticed at most one fallback interval late instead of never.
+    ``fallback_interval_s=None`` disables the fallback (pure stat
+    behaviour, for cost-sensitive pollers on known-fine-grained
+    filesystems).
     """
 
-    def __init__(self, registry: Registry, *, epoch_gen: int):
+    def __init__(
+        self,
+        registry: Registry,
+        *,
+        epoch_gen: int,
+        fallback_interval_s: Optional[float] = 0.25,
+    ):
         self._registry = registry
         self.epoch_gen = int(epoch_gen)
+        self._fallback_interval_s = fallback_interval_s
+        self._next_fallback = (
+            time.monotonic() + fallback_interval_s
+            if fallback_interval_s is not None
+            else None
+        )
         self._stat: Optional[tuple[int, int]] = None
         try:
             st = os.stat(registry.state_path)
@@ -92,6 +117,7 @@ class EpochWatch:
             pass
         self.polls = 0          # observability: stat probes issued
         self.parses = 0         # ... of which re-parsed the state file
+        self.fallback_parses = 0  # ... forced by the coarse-mtime fallback
 
     def poll(self) -> Optional[EpochChange]:
         self.polls += 1
@@ -101,8 +127,22 @@ class EpochWatch:
             return None
         stat = (st.st_mtime_ns, st.st_size)
         if stat == self._stat:
-            return None
-        self._stat = stat
+            # Same stat: usually "nothing happened", but a same-size commit
+            # within the mtime granularity window looks exactly like this.
+            # Fall back to a throttled parse of epoch_gen.
+            if self._next_fallback is None:
+                return None
+            now = time.monotonic()
+            if now < self._next_fallback:
+                return None
+            self._next_fallback = now + self._fallback_interval_s
+            self.fallback_parses += 1
+        else:
+            self._stat = stat
+            if self._fallback_interval_s is not None:
+                self._next_fallback = (
+                    time.monotonic() + self._fallback_interval_s
+                )
         self.parses += 1
         try:
             state = self._registry.read_state()
@@ -121,6 +161,7 @@ class EpochWatch:
             world_hash=World(
                 self._registry, state.get("world", {})
             ).world_hash,
+            rolled_back_from=int(state.get("rolled_back_from", 0)),
         )
 
 
@@ -276,7 +317,9 @@ class Workspace:
         return self.manager.world()
 
     # ------------------------------------------------------------- rollover
-    def epoch_watch(self) -> EpochWatch:
+    def epoch_watch(
+        self, *, fallback_interval_s: Optional[float] = 0.25
+    ) -> EpochWatch:
         """A commit detector seeded at this workspace's current generation.
 
         The read half of the blue/green handshake: a serving loop polls the
@@ -284,8 +327,15 @@ class Workspace:
         sibling process's ``end_mgmt`` lands generation N+1, flips at a
         request boundary via ``ws.refresh()`` / ``engine.adopt_epoch()``
         while its in-flight requests finish on N.
+
+        ``fallback_interval_s`` throttles the coarse-mtime fallback parse
+        (see :class:`EpochWatch`); ``None`` disables it.
         """
-        return EpochWatch(self.registry, epoch_gen=self.epoch_gen)
+        return EpochWatch(
+            self.registry,
+            epoch_gen=self.epoch_gen,
+            fallback_interval_s=fallback_interval_s,
+        )
 
     def refresh(self) -> bool:
         """Adopt a sibling process's committed generation (read-side flip).
@@ -305,6 +355,32 @@ class Workspace:
             if self.executor.epoch_cache is not process_cache():
                 process_cache().bump_epoch()
         return changed
+
+    def rollback_epoch(self, *, to_gen: Optional[int] = None) -> int:
+        """Abort a bad flip: re-adopt a retained generation (default: the
+        one serving before the last commit) as a NEW generation with
+        byte-identical bindings.
+
+        The previous world is still live on disk (the retained chain keeps
+        its tables/arenas/segments reclaim-protected), so the re-adopt is
+        a cheap re-link, not a restore. ``epoch_gen`` stays monotone — a
+        rollback propagates through every ``ws.epoch_watch()`` in the
+        fleet exactly like a commit — and ``state.json`` records
+        ``rolled_back_from`` until the next normal commit; the journal
+        records the abort. Refreshes first so a stale workspace always
+        rolls back from the true newest generation. Returns the new
+        ``epoch_gen``. The manager raises ``RollbackError`` when the
+        window was already drained, ``ModeError`` during an open
+        management session.
+        """
+        self.manager.refresh()
+        gen = self.manager.rollback(to_gen=to_gen)
+        # Manager.rollback bumped its own epoch_cache (and the process
+        # cache); mirror end_mgmt's discipline for a privately injected
+        # executor cache that the manager does not know about.
+        if self.executor.epoch_cache is not self.manager.epoch_cache:
+            self.executor.epoch_cache.bump_epoch()
+        return gen
 
     def objects(self) -> Iterator[StoreObject]:
         return self.registry.iter_objects()
@@ -455,7 +531,7 @@ class Workspace:
         return report
 
     # -------------------------------------------------------------- garbage
-    def gc(self, *, drain: bool = False) -> GcReport:
+    def gc(self, *, drain: bool = False, dry_run: bool = False) -> GcReport:
         """Reclaim dead store entries: delete every ``tables/`` file
         (materialized table, baked arena, sidecar) whose (app, closure) key
         appears in no world this workspace still honours, and unlink every
@@ -467,14 +543,23 @@ class Workspace:
         The live set is the committed world plus — during management time —
         the staged world, including each world's legacy world-hash keys, so
         nothing a current or in-flight epoch could load is ever touched.
-        **The previous generation is live too** (blue/green window): after
-        a commit the old world's tables, arenas, and shm segments stay
-        protected by default, because a fleet's in-flight requests may
-        still be finishing on generation N while N+1 serves. Once every
-        reader has flipped, ``gc(drain=True)`` closes the window: the
-        retained previous world is dropped (memory and state), retired
-        epoch-cache entries are reclaimed, and generation N's store files
-        and segments become collectable in the same pass.
+        **Every retained generation is live too** (the rollover window,
+        now a chain): after a commit the outgoing world's tables, arenas,
+        and shm segments stay protected by default — back-to-back commits
+        keep BOTH still-draining generations protected — because a fleet's
+        in-flight requests may still be finishing on them, and because the
+        chain is what ``rollback_epoch`` rolls back to. Once every reader
+        has flipped, ``gc(drain=True)`` closes the window: the retained
+        chain is dropped (memory and state), retired epoch-cache entries
+        are reclaimed, and the old generations' store files and segments
+        become collectable in the same pass.
+
+        ``dry_run=True`` is the operator preflight before ``drain=True``
+        closes a rollback window: the report names exactly what the same
+        call without ``dry_run`` would reclaim (tables, arenas, shm
+        segments, rings — and, via ``retired_entries``/``retired_bytes``,
+        the epoch-cache entries a drain would release), but nothing is
+        unlinked, no state is persisted, and no cache token moves.
 
         Only an explicit call runs this; it is never triggered implicitly
         during an epoch. Returns a ``GcReport`` (``bytes_reclaimed``,
@@ -482,19 +567,19 @@ class Workspace:
         token-bumped afterwards so no mapping outlives its backing file
         unnoticed.
         """
-        if drain:
-            # Close the two-generation window first so the previous
-            # world's keys drop out of the live set computed below. Adopt
-            # any sibling's newer commit before persisting the drop, so a
-            # stale manager can never clobber a newer generation's state.
+        if drain and not dry_run:
+            # Close the rollover window first so the retained chain's keys
+            # drop out of the live set computed below. Adopt any sibling's
+            # newer commit before persisting the drop, so a stale manager
+            # can never clobber a newer generation's state.
             self.manager.refresh()
             self.manager.drop_previous()
         worlds = [self.manager.committed_world()]
         if self.mode == Mode.MANAGEMENT:
             worlds.append(self.manager.world())
-        prev = self.manager.previous_world()
-        if prev is not None:
-            worlds.append(prev)
+        if not drain:
+            # every retained generation in the chain stays protected
+            worlds.extend(w for _, w in self.manager.retained_worlds())
         # Another process may have committed (or staged) a newer world since
         # this workspace was opened; its keys are just as live. Re-read the
         # persisted state so a long-lived workspace can never gc a newer
@@ -504,7 +589,10 @@ class Workspace:
             worlds.append(World(self.registry, st.get("world", {})))
             worlds.append(World(self.registry, st.get("pending", {})))
             if not drain:
-                worlds.append(World(self.registry, st.get("previous", {})))
+                for entry in st.get("retained", []):
+                    worlds.append(
+                        World(self.registry, entry.get("world", {}))
+                    )
         except Exception:
             pass  # unreadable state: fall back to the in-memory views
         live: set[tuple[str, str]] = set()
@@ -522,25 +610,33 @@ class Workspace:
                     # broken staged closure: it has no materialized key to
                     # protect (materialization would fail), skip it
                     continue
-        report = self.registry.gc_stores(live)
+        report = self.registry.gc_stores(live, dry_run=dry_run)
         from repro.core import shm_arena
 
-        seg_removed, seg_bytes = shm_arena.gc_segments(self.registry, live)
+        seg_removed, seg_bytes = shm_arena.gc_segments(
+            self.registry, live, dry_run=dry_run
+        )
         report.removed.extend(seg_removed)
         report.segments_removed = len(seg_removed)
         report.bytes_reclaimed += seg_bytes
-        # Mirror end_mgmt: a private (injected) cache is bumped AND the
-        # process-wide one, so default-wired workspaces over the same root
-        # never keep serving mappings of files this gc just unlinked.
         from repro.core.epoch_cache import process_cache
 
         caches = [self.executor.epoch_cache]
         if self.executor.epoch_cache is not process_cache():
             caches.append(process_cache())
+        if dry_run:
+            # preflight only: report what a drain would additionally
+            # reclaim from the epoch caches, touch nothing
+            report.retired_entries = sum(c.retired_count() for c in caches)
+            report.retired_bytes = sum(c.retired_bytes() for c in caches)
+            return report
+        # Mirror end_mgmt: a private (injected) cache is bumped AND the
+        # process-wide one, so default-wired workspaces over the same root
+        # never keep serving mappings of files this gc just unlinked.
         for cache in caches:
             cache.bump_epoch()
             if drain:
-                # end of the two-generation window: retired (old-gen,
+                # end of the rollover window: retired (old-gen,
                 # still-pinned) entries are reclaimed now that no reader
                 # is entitled to them any more
                 cache.drain_retired()

@@ -1,4 +1,5 @@
 from .engine import FleetReport, ServeEngine
+from .faults import FaultPlan
 from .scheduler import (
     STOP,
     Completion,
@@ -11,6 +12,7 @@ from .traffic import TrafficReport, run_traffic
 
 __all__ = [
     "Completion",
+    "FaultPlan",
     "FleetReport",
     "Request",
     "STOP",

@@ -19,6 +19,7 @@ the shm segment; everyone else attaches — ``repro.core.shm_arena``).
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -27,6 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.core.errors import AdoptDeadlineError
+
+from . import faults
 
 
 @dataclass
@@ -48,6 +52,8 @@ class FleetReport:
     strategy: str
     wall_s: float = 0.0
     workers: list = field(default_factory=list)   # one result dict each
+    restarts: int = 0                # supervised workers respawned after death
+    rerouted_requests: int = 0       # in-flight requests re-routed off a corpse
 
     @property
     def fills(self) -> int:
@@ -100,6 +106,10 @@ class FleetReport:
             "errors": self.errors,
             "segments": sorted(s for s in self.segments if s),
             "pids": [w.get("pid") for w in self.workers],
+            # honest even at zero: a fleet that never needed the supervisor
+            # reports restarts=0, not a missing key
+            "restarts": self.restarts,
+            "rerouted_requests": self.rerouted_requests,
         }
 
 
@@ -167,6 +177,17 @@ class ServeEngine:
             return {n: jnp.asarray(a) for n, a in image.tensors.items()}
         return {n: jnp.asarray(image[n]) for n in image.keys()}
 
+    def _reload(self, ws, app_name, strategy, param_builder):
+        """The wedgeable half of an epoch reload: load + lift (the caller
+        refreshes first, on its own thread — a deadline-abandoned reload
+        must not mutate workspace state). The fault hook at the top is
+        what the chaos tier wedges/slows; returns (image, params) without
+        touching ``self`` so an abandoned reload can never clobber the
+        engine after a rollback already re-adopted the old weights."""
+        faults.on_adopt_reload()
+        image = ws.load(app_name, strategy=strategy)
+        return image, self._lift_params(image, param_builder)
+
     def adopt_epoch(
         self,
         ws,
@@ -174,6 +195,7 @@ class ServeEngine:
         *,
         strategy: str = "stable-mmap-cached",
         param_builder=None,
+        deadline_s: float = 0.0,
     ):
         """Flip this engine onto a newly committed generation (blue/green).
 
@@ -187,12 +209,81 @@ class ServeEngine:
         against the new weights. Returns the reloaded image (its
         ``tensors`` digest is what rollover tests verify against an
         independent fresh load of N+1).
+
+        ``deadline_s > 0`` bounds how long a flip may wedge: the reload
+        runs on a daemon thread and, if it has not finished inside the
+        deadline, the engine **auto-rolls-back** — ``abort_adopt`` adopts
+        the still-live previous generation as a NEW generation (so sibling
+        watchers converge on it too), re-lifts the old weights, and this
+        call raises :class:`repro.core.errors.AdoptDeadlineError` with
+        ``rolled_back_to`` set. The serve loop treats that exception as
+        "resume admission on the weights we already have": a wedged roll
+        costs bounded stall, never a hung fleet. The abandoned reload
+        thread only ever touches its local ``(image, params)`` pair, which
+        is discarded.
         """
+        ws.refresh()
+        if deadline_s and deadline_s > 0:
+            box: dict = {}
+
+            def _run():
+                try:
+                    box["result"] = self._reload(
+                        ws, app_name, strategy, param_builder
+                    )
+                except BaseException as e:   # surfaced below, not swallowed
+                    box["error"] = e
+
+            t = threading.Thread(
+                target=_run, name="adopt-epoch-reload", daemon=True
+            )
+            t.start()
+            t.join(deadline_s)
+            if t.is_alive():
+                gen = self.abort_adopt(
+                    ws, app_name, strategy=strategy, param_builder=param_builder
+                )
+                raise AdoptDeadlineError(
+                    f"adopt_epoch for {app_name!r} exceeded its "
+                    f"{deadline_s:.3f}s deadline; rolled back to "
+                    f"generation {gen}",
+                    rolled_back_to=gen,
+                )
+            if "error" in box:
+                raise box["error"]
+            image, params = box["result"]
+        else:
+            image, params = self._reload(ws, app_name, strategy, param_builder)
+        self.params = params
+        self.load_stats = image.stats
+        return image
+
+    def abort_adopt(
+        self,
+        ws,
+        app_name: str,
+        *,
+        strategy: str = "stable-mmap-cached",
+        param_builder=None,
+    ) -> int:
+        """Abandon a wedged flip: roll the *store* back, then re-adopt.
+
+        ``ws.rollback_epoch()`` re-publishes the newest retained world as a
+        brand-new generation (monotone ``epoch_gen``, ``rolled_back_from``
+        marker in state), so every sibling's EpochWatch converges on the
+        rollback exactly like a commit. This engine then reloads through
+        the normal path — byte-identical to what it served before the flip
+        started — and returns the new generation number. The abort reload
+        deliberately bypasses the ``faults.on_adopt_reload`` hook: a
+        wedge-on-adopt plan must not be able to wedge the rollback that
+        rescues the fleet from it.
+        """
+        gen = ws.rollback_epoch()
         ws.refresh()
         image = ws.load(app_name, strategy=strategy)
         self.params = self._lift_params(image, param_builder)
         self.load_stats = image.stats
-        return image
+        return gen
 
     @classmethod
     def spawn_fleet(

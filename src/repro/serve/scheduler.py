@@ -35,13 +35,16 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.core.errors import EpochAdoptError
+
+from . import faults
 
 #: Source sentinel: no more requests will ever arrive; drain and return.
 STOP = object()
@@ -55,6 +58,16 @@ class Request:
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int
     enqueued_ts: float = 0.0         # dispatcher clock; 0 = unknown
+    deadline_s: float = 0.0          # seconds after enqueue; 0 = no deadline
+
+    def expired(self, now: float) -> bool:
+        """Past its deadline (measured from enqueue, CLOCK_MONOTONIC —
+        comparable across processes on one machine)."""
+        return (
+            self.deadline_s > 0.0
+            and self.enqueued_ts > 0.0
+            and now - self.enqueued_ts > self.deadline_s
+        )
 
 
 @dataclass
@@ -66,6 +79,7 @@ class Completion:
     admitted_ts: float
     finished_ts: float
     enqueued_ts: float = 0.0
+    status: str = "ok"               # "ok" | "deadline" (expired, partial)
 
     @property
     def latency_s(self) -> float:
@@ -89,6 +103,9 @@ class ServeLoopReport:
     wall_s: float = 0.0
     rollovers: int = 0               # epoch flips taken at a request boundary
     rollover_stall_s: float = 0.0    # commit noticed -> flip complete, summed
+    coalesced_rollovers: int = 0     # commits superseded before their flip
+    rollover_aborts: int = 0         # flips that deadlined and rolled back
+    deadline_expired: int = 0        # requests retired with a DEADLINE frame
 
     def summary(self) -> dict:
         return {
@@ -102,6 +119,9 @@ class ServeLoopReport:
             "wall_s": self.wall_s,
             "rollovers": self.rollovers,
             "rollover_stall_s": self.rollover_stall_s,
+            "coalesced_rollovers": self.coalesced_rollovers,
+            "rollover_aborts": self.rollover_aborts,
+            "deadline_expired": self.deadline_expired,
         }
 
 
@@ -275,6 +295,39 @@ class SlotScheduler:
                 self.slot_meta[idx] = None
         return done
 
+    def expire(self, now: float) -> list[Completion]:
+        """Retire every in-flight slot whose request blew its deadline.
+
+        The slot's partial row comes back in a ``status="deadline"``
+        completion — the request is *answered* (a structured DEADLINE
+        frame on the wire), never silently dropped, and its slot frees
+        immediately instead of decoding tokens nobody is waiting for.
+        """
+        done: list[Completion] = []
+        out_buf = self._state[2] if self._state is not None else None
+        for idx, meta in enumerate(self.slot_meta):
+            if meta is None or not meta.request.expired(now):
+                continue
+            got = min(meta.steps_done, self.max_new_cap)
+            row = (
+                np.asarray(out_buf[idx])[:got]
+                if out_buf is not None
+                else np.zeros((0,), np.int32)
+            )
+            done.append(
+                Completion(
+                    rid=meta.request.rid,
+                    tokens=row,
+                    admitted_ts=meta.admitted_ts,
+                    finished_ts=now,
+                    enqueued_ts=meta.request.enqueued_ts,
+                    status="deadline",
+                )
+            )
+            self.active[idx] = False
+            self.slot_meta[idx] = None
+        return done
+
 
 def run_serve_loop(
     engine,
@@ -309,6 +362,21 @@ def run_serve_loop(
     every later request decodes against N+1. The report counts
     ``rollovers`` and the summed ``rollover_stall_s`` (commit noticed ->
     flip complete).
+
+    Hardening semantics (the chaos tier's contract):
+
+    * **Coalescing** — the watch keeps polling while a flip is pending,
+      so back-to-back commits landing mid-drain collapse into ONE flip to
+      the newest generation (``coalesced_rollovers`` counts the commits
+      superseded on the way).
+    * **Abort** — if ``on_epoch`` raises ``EpochAdoptError`` (e.g.
+      ``engine.adopt_epoch(deadline_s=...)`` deadlined and auto-rolled
+      back), the loop counts a ``rollover_abort`` and resumes admission
+      immediately on the generation the engine already re-adopted.
+    * **Deadlines** — a ``Request.deadline_s`` bounds queue-to-finish;
+      expired requests (queued or in-flight) are retired with a
+      ``status="deadline"`` completion carrying whatever partial row they
+      earned — a structured DEADLINE frame, never a silent drop.
     """
     report = ServeLoopReport()
     sched = SlotScheduler(engine, max_batch=max_batch, max_new_cap=max_new_cap)
@@ -322,16 +390,28 @@ def run_serve_loop(
     while True:
         # 0) rollover handshake: notice a landed commit (throttled), flip
         # at a request boundary — never mid-decode for any in-flight slot
+        # Polling CONTINUES while a flip is pending: back-to-back commits
+        # landing mid-drain coalesce to the newest generation (one flip,
+        # counted per superseded commit), instead of queueing stale flips.
         now = time.perf_counter()
-        if epoch_watch is not None and pending_epoch is None and now >= next_watch:
+        if epoch_watch is not None and now >= next_watch:
             next_watch = now + watch_interval_s
             change = epoch_watch.poll()
             if change is not None:
+                if pending_epoch is None:
+                    stall_t0 = now
+                else:
+                    report.coalesced_rollovers += 1
                 pending_epoch = change
-                stall_t0 = now
         if pending_epoch is not None and sched.n_active == 0:
             if on_epoch is not None:
-                on_epoch(pending_epoch)
+                try:
+                    on_epoch(pending_epoch)
+                except EpochAdoptError:
+                    # deadline fired and the engine already rolled back to
+                    # the still-live generation: resume admission on the
+                    # weights we have — a wedged flip never hangs the loop
+                    report.rollover_aborts += 1
             report.rollovers += 1
             report.rollover_stall_s += time.perf_counter() - stall_t0
             pending_epoch = None
@@ -345,8 +425,39 @@ def run_serve_loop(
             if got is STOP:
                 draining = True
                 break
+            if got.deadline_s > 0 and got.enqueued_ts == 0.0:
+                # local source with no dispatcher clock: the deadline
+                # counts from acceptance, or it could never fire
+                got = replace(got, enqueued_ts=time.perf_counter())
             queue.append(got)
         report.peak_queue = max(report.peak_queue, len(queue))
+
+        # 1b) deadline sweep — queued requests first (they expire without
+        # ever costing a prefill), then in-flight slots (freed with their
+        # partial row). Either way the caller gets a structured DEADLINE
+        # completion; nothing is silently dropped.
+        now = time.perf_counter()
+        if queue:
+            still = deque()
+            for req in queue:
+                if req.expired(now):
+                    report.deadline_expired += 1
+                    sink(
+                        Completion(
+                            rid=req.rid,
+                            tokens=np.zeros((0,), np.int32),
+                            admitted_ts=now,
+                            finished_ts=now,
+                            enqueued_ts=req.enqueued_ts,
+                            status="deadline",
+                        )
+                    )
+                else:
+                    still.append(req)
+            queue = still
+        for comp in sched.expire(now):
+            report.deadline_expired += 1
+            sink(comp)
 
         # 2) admit into free slots (prefill interleaves with decode here);
         # held back while a generation flip waits for in-flight slots
@@ -358,6 +469,7 @@ def run_serve_loop(
 
         # 3) advance every active slot one token
         if sched.n_active:
+            faults.on_decode_step(report.steps + 1)
             sched.step()
             report.steps += 1
 

@@ -28,8 +28,11 @@ cross-process clock agreement beyond CLOCK_MONOTONIC being system-wide).
 
 Wire format (fixed little-endian structs + int32 token payloads):
 
-    request    <qiid>  rid, max_new, n_tokens, enqueued_ts  + tokens
-    completion <qiddd> rid, n_tokens, admitted, finished, enqueued + tokens
+    request    <qiidd>  rid, max_new, n_tokens, enqueued_ts, deadline_s
+               + tokens (deadline_s: seconds from enqueue; 0 = none)
+    completion <qiiddd> rid, status, n_tokens, admitted, finished,
+               enqueued + tokens (status: 0 ok, 1 DEADLINE — the request
+               expired and came back with its partial row, never dropped)
     rid sentinels: -1 STOP (drain and exit), -2 worker READY (engine
     built; payload = per-worker spin-up seconds), -3 worker ERROR
     (payload = utf-8 traceback excerpt, surfaced in the report instead of
@@ -37,6 +40,19 @@ Wire format (fixed little-endian structs + int32 token payloads):
     payload = JSON {worker, epoch_gen, digest} where digest content-hashes
     the tensors the worker now serves — the dispatcher verifies it against
     an independent load of the new generation).
+
+**Supervision** (``run_traffic(..., supervise=True)``): the dispatcher
+doubles as a supervisor. A worker that dies — SIGKILL included — is
+detected through its response ring's owner record (``core.shm_ring.
+ring_owner_alive``: the dead pid is right there in shm, no waitpid race),
+its in-flight requests are re-routed to surviving workers (request frames
+are retained by rid, so the re-sent frame carries the ORIGINAL enqueue
+time — re-routed latency is honest end-to-end), and the worker is
+respawned with capped exponential backoff onto the SAME request ring: the
+pop cursor lives in the shared header, so frames the corpse never popped
+are simply consumed by its replacement. Duplicate completions (a frame
+both replayed from the ring and re-routed) are deduped by rid. Respawned
+workers get no fault plan — a chaos kill fires once.
 
 **Blue/green rollover under load** (``run_traffic(..., rollover_at=...,
 rollover_fn=...)``): after request ``rollover_at`` is sent, the dispatcher
@@ -59,10 +75,14 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.shm_ring import ShmRing, ShmRingError
+from repro.core.shm_ring import ShmRing, ShmRingError, ring_owner_alive
 
-_REQ_HDR = struct.Struct("<qiid")       # rid, max_new, n_tokens, enqueued_ts
-_RSP_HDR = struct.Struct("<qiddd")      # rid, n_tokens, admitted, finished, enq
+_REQ_HDR = struct.Struct("<qiidd")   # rid, max_new, n_toks, enqueued, deadline
+_RSP_HDR = struct.Struct("<qiiddd")  # rid, status, n_toks, admitted, fin, enq
+_ST_OK = 0
+_ST_DEADLINE = 1
+_STATUS_NAMES = {_ST_OK: "ok", _ST_DEADLINE: "deadline"}
+_STATUS_CODES = {v: k for k, v in _STATUS_NAMES.items()}
 _RID_STOP = -1
 _RID_READY = -2
 _RID_ERROR = -3
@@ -74,38 +94,47 @@ RING_SLOTS = 64                          # per ring; queue depth per worker
 
 # ------------------------------------------------------------------- wire
 def encode_request(rid: int, prompt: np.ndarray, max_new: int,
-                   enqueued_ts: float) -> bytes:
+                   enqueued_ts: float, deadline_s: float = 0.0) -> bytes:
     toks = np.ascontiguousarray(prompt, dtype="<i4")
-    return _REQ_HDR.pack(rid, max_new, toks.size, enqueued_ts) + toks.tobytes()
+    return (
+        _REQ_HDR.pack(rid, max_new, toks.size, enqueued_ts, deadline_s)
+        + toks.tobytes()
+    )
 
 
 def decode_request(data: bytes):
-    rid, max_new, n, enq = _REQ_HDR.unpack_from(data)
+    rid, max_new, n, enq, deadline = _REQ_HDR.unpack_from(data)
     if rid == _RID_STOP:
-        return rid, None, 0, 0.0
+        return rid, None, 0, 0.0, 0.0
     toks = np.frombuffer(data, dtype="<i4", count=n, offset=_REQ_HDR.size)
-    return rid, toks.astype(np.int32), max_new, enq
+    return rid, toks.astype(np.int32), max_new, enq, deadline
 
 
 def encode_completion(rid: int, tokens: np.ndarray, admitted: float,
-                      finished: float, enqueued: float) -> bytes:
+                      finished: float, enqueued: float,
+                      status: str = "ok") -> bytes:
     toks = np.ascontiguousarray(tokens, dtype="<i4")
     return (
-        _RSP_HDR.pack(rid, toks.size, admitted, finished, enqueued)
+        _RSP_HDR.pack(
+            rid, _STATUS_CODES.get(status, _ST_OK), toks.size,
+            admitted, finished, enqueued,
+        )
         + toks.tobytes()
     )
 
 
 def _encode_blob(rid: int, blob: bytes, value: float = 0.0) -> bytes:
-    return _RSP_HDR.pack(rid, len(blob), value, 0.0, 0.0) + blob
+    return _RSP_HDR.pack(rid, _ST_OK, len(blob), value, 0.0, 0.0) + blob
 
 
 def decode_completion(data: bytes):
-    rid, n, admitted, finished, enq = _RSP_HDR.unpack_from(data)
+    rid, status, n, admitted, finished, enq = _RSP_HDR.unpack_from(data)
     if rid < 0:
-        return rid, data[_RSP_HDR.size:_RSP_HDR.size + n], admitted, 0.0, 0.0
+        blob = data[_RSP_HDR.size:_RSP_HDR.size + n]
+        return rid, blob, admitted, 0.0, 0.0, "ok"
     toks = np.frombuffer(data, dtype="<i4", count=n, offset=_RSP_HDR.size)
-    return rid, toks.astype(np.int32), admitted, finished, enq
+    name = _STATUS_NAMES.get(status, "ok")
+    return rid, toks.astype(np.int32), admitted, finished, enq, name
 
 
 def _push_blocking(ring: ShmRing, data: bytes, *, timeout: float) -> None:
@@ -147,6 +176,8 @@ def _traffic_worker(
     max_batch: int,
     max_new_cap: int,
     slot_bytes: int,
+    fault_plan: dict | None = None,
+    adopt_deadline_s: float = 0.0,
 ) -> None:
     """One serving worker: epoch-path engine + serve_loop over the rings.
 
@@ -156,15 +187,22 @@ def _traffic_worker(
     payload) is pushed only after the engine exists. Any failure is
     pushed as an ERROR frame before re-raising, so the dispatcher learns
     the traceback the moment the process dies instead of at join timeout.
+
+    ``fault_plan`` is a ``faults.FaultPlan`` as a dict (spawn-picklable);
+    it arms only if its ``worker`` field matches ``widx`` (or is -1).
+    ``adopt_deadline_s > 0`` bounds every blue/green flip: a wedged reload
+    deadlines, auto-rolls-back, and the serve loop resumes admission.
     """
     import traceback as _tb
 
     from repro.configs import get_config
     from repro.link import Workspace
 
+    from . import faults
     from .engine import ServeEngine
     from .scheduler import STOP, Request
 
+    faults.install_for_worker(fault_plan, widx)
     ws = Workspace.open(root)
     rsp = ShmRing.create(
         ws.registry, rsp_channel(session, widx),
@@ -189,11 +227,12 @@ def _traffic_worker(
             data = req.pop()
             if data is None:
                 return None
-            rid, toks, max_new, enq = decode_request(data)
+            rid, toks, max_new, enq, deadline = decode_request(data)
             if rid == _RID_STOP:
                 return STOP
             return Request(
-                rid=rid, prompt=toks, max_new_tokens=max_new, enqueued_ts=enq
+                rid=rid, prompt=toks, max_new_tokens=max_new,
+                enqueued_ts=enq, deadline_s=deadline,
             )
 
         def sink(comp):
@@ -202,6 +241,7 @@ def _traffic_worker(
                 encode_completion(
                     comp.rid, comp.tokens, comp.admitted_ts,
                     comp.finished_ts, comp.enqueued_ts,
+                    status=getattr(comp, "status", "ok"),
                 ),
                 timeout=60.0,
             )
@@ -214,7 +254,10 @@ def _traffic_worker(
             import hashlib as _hashlib
             import json as _json
 
-            image = engine.adopt_epoch(ws, app_name, strategy=strategy)
+            image = engine.adopt_epoch(
+                ws, app_name, strategy=strategy,
+                deadline_s=adopt_deadline_s,
+            )
             h = _hashlib.blake2b(digest_size=16)
             tensors = getattr(image, "tensors", None) or {}
             for tname in sorted(tensors):
@@ -271,6 +314,11 @@ class TrafficReport:
     rollover_wall_s: float = 0.0        # commit start -> last worker adopted
     rollover_latencies_s: list = field(default_factory=list)  # during the flip
     steady_latencies_s: list = field(default_factory=list)    # outside it
+    # supervision (populated when supervise=True saw a worker die):
+    restarts: int = 0                   # workers respawned after death
+    rerouted_requests: int = 0          # in-flight requests re-sent elsewhere
+    deadline_expired: int = 0           # completions that came back DEADLINE
+    kill_latencies_s: list = field(default_factory=list)  # rerouted req e2e
 
     @property
     def failed(self) -> int:
@@ -330,6 +378,19 @@ class TrafficReport:
         within ~2x the steady-state p99."""
         return self._rollover_quantile(99.0)
 
+    @property
+    def kill_p99_s(self) -> float:
+        """p99 end-to-end latency of the requests a worker died holding.
+
+        Measured from the ORIGINAL enqueue (the re-routed frame carries
+        it), so this is the honest cost a client saw across the kill:
+        detect + reroute + the surviving worker's service time. 0.0 when
+        nothing was ever re-routed — reported anyway; an absent row and a
+        zero row are different claims."""
+        if not self.kill_latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.kill_latencies_s), 99.0))
+
     def summary(self) -> dict:
         return {
             "workers": self.workers,
@@ -354,6 +415,12 @@ class TrafficReport:
             "rollover_completions": len(self.rollover_latencies_s),
             "rollover_p50_latency_s": round(self.rollover_p50_s, 4),
             "rollover_p99_latency_s": round(self.rollover_p99_s, 4),
+            # supervision counters are honest zeros when nothing died
+            "restarts": self.restarts,
+            "rerouted_requests": self.rerouted_requests,
+            "deadline_expired": self.deadline_expired,
+            "kill_completions": len(self.kill_latencies_s),
+            "kill_p99_latency_s": round(self.kill_p99_s, 4),
         }
 
 
@@ -376,6 +443,10 @@ def run_traffic(
     session: str | None = None,
     rollover_at: int | None = None,
     rollover_fn=None,
+    request_deadline_s: float = 0.0,
+    adopt_deadline_s: float = 0.0,
+    supervise: bool = False,
+    faults: dict | None = None,
 ) -> TrafficReport:
     """Drive a Poisson request load through a spawned serving fleet.
 
@@ -406,6 +477,21 @@ def run_traffic(
     ``report.rollover_latencies_s`` (p99-during-rollover), and each
     adoption's tensors digest lands in ``report.adoptions`` for
     content-hash verification against the new generation.
+
+    Hardening knobs (the chaos tier drives all four together):
+
+    * ``request_deadline_s`` — every measured request carries this budget;
+      a worker retires expired requests with a DEADLINE completion
+      (``report.deadline_expired``) instead of dropping them.
+    * ``adopt_deadline_s`` — bounds each worker's blue/green flip; a
+      wedged reload auto-rolls-back (``engine.adopt_epoch(deadline_s=)``).
+    * ``supervise`` — the dispatcher respawns dead workers (detected via
+      the rsp-ring owner record) with capped exponential backoff and
+      re-routes their in-flight requests to survivors; completions are
+      deduped by rid, so a SIGKILL costs bounded p99
+      (``report.kill_p99_s``) and zero lost requests.
+    * ``faults`` — a ``serve.faults.FaultPlan`` as a dict, shipped to the
+      targeted worker's process (respawned workers get none).
     """
     cache_len = cache_len or (prompt_len + max_new_tokens + 4)
     session = session or f"traffic-{uuid.uuid4().hex[:8]}"
@@ -422,13 +508,17 @@ def run_traffic(
         )
         for i in range(workers)
     ]
+    def _worker_args(i: int, plan: dict | None):
+        return (
+            ws.root, app_name, arch, strategy, session, i,
+            cache_len, max_batch, max_new_tokens, slot_bytes,
+            plan, adopt_deadline_s,
+        )
+
     procs = [
         ctx.Process(
             target=_traffic_worker,
-            args=(
-                ws.root, app_name, arch, strategy, session, i,
-                cache_len, max_batch, max_new_tokens, slot_bytes,
-            ),
+            args=_worker_args(i, faults),
             daemon=True,
         )
         for i in range(workers)
@@ -448,6 +538,15 @@ def run_traffic(
     alive = [True] * workers
     deadline = time.monotonic() + timeout
     first_send = last_recv = 0.0
+    # supervision bookkeeping: every sent frame is retained by rid so a
+    # dead worker's in-flight requests can be re-routed verbatim (original
+    # enqueue time included), and completions are deduped by rid because a
+    # frame can come back twice (ring replay by the respawn + re-route).
+    sent_frames: dict[int, bytes] = {}
+    owner: dict[int, int] = {}           # rid -> worker currently holding it
+    done_rids: set[int] = set()
+    rerouted_rids: set[int] = set()
+    restarts_per = [0] * workers
 
     def _reap(i: int, blob: bytes | None) -> None:
         """Record worker i's death as a structured error, once."""
@@ -467,6 +566,46 @@ def run_traffic(
     roll_active = False      # commit issued, not every worker adopted yet
     roll_t0 = 0.0
 
+    def _respawn(i: int) -> None:
+        """Supervisor: worker ``i`` died. Confirm through the rsp-ring
+        owner record (the dead pid sits in shm — no waitpid race), bring a
+        replacement up with capped exponential backoff, and re-route every
+        request the corpse was holding to surviving workers. The request
+        ring is dispatcher-owned and its pop cursor lives in the shared
+        header, so frames the corpse never popped are consumed by the
+        replacement as-is; only popped-but-unanswered frames need the
+        re-route, and rid dedup absorbs any overlap between the two."""
+        if ring_owner_alive(ws.registry, rsp_channel(session, i)) is True:
+            return               # record says the owner is alive: not dead
+        alive[i] = False
+        report.restarts += 1
+        restarts_per[i] += 1
+        victims = sorted(
+            rid for rid, w in owner.items() if w == i and rid not in done_rids
+        )
+        try:                     # replacement re-creates the rsp ring
+            rsp_rings[i].close()
+            rsp_rings[i].unlink(ws.registry)
+        except Exception:
+            pass
+        time.sleep(min(0.05 * (2 ** (restarts_per[i] - 1)), 1.0))
+        p = ctx.Process(
+            target=_traffic_worker, args=_worker_args(i, None), daemon=True
+        )
+        p.start()
+        procs[i] = p
+        rsp_rings[i] = ShmRing.attach(
+            ws.registry, rsp_channel(session, i), timeout=60.0
+        )
+        alive[i] = True
+        targets = [j for j in range(workers) if alive[j] and j != i] or [i]
+        for n, rid in enumerate(victims):
+            t = targets[n % len(targets)]
+            _push_blocking(req_rings[t], sent_frames[rid], timeout=30.0)
+            owner[rid] = t
+            rerouted_rids.add(rid)
+            report.rerouted_requests += 1
+
     def _drain() -> None:
         nonlocal last_recv, warmed, roll_active
         for i, ring in enumerate(rsp_rings):
@@ -474,7 +613,7 @@ def run_traffic(
                 data = ring.pop()
                 if data is None:
                     break
-                rid, payload, a, f, enq = decode_completion(data)
+                rid, payload, a, f, enq, status = decode_completion(data)
                 if rid == _RID_READY:
                     report.ready_s.append(a)
                 elif rid == _RID_ADOPTED:
@@ -490,33 +629,47 @@ def run_traffic(
                 elif rid == _RID_ERROR:
                     _reap(i, payload)
                 elif rid >= _RID_WARM:
-                    warmed += 1
+                    if rid not in done_rids:
+                        done_rids.add(rid)
+                        warmed += 1
                 else:
+                    if rid in done_rids:
+                        continue     # duplicate: replayed AND re-routed
+                    done_rids.add(rid)
+                    owner.pop(rid, None)
                     now = time.perf_counter()
                     last_recv = max(last_recv, now)
                     report.completed += 1
-                    report.tokens_out += int(payload.size)
-                    report.latencies_s.append(now - enq)
-                    if roll_active:
-                        report.rollover_latencies_s.append(now - enq)
+                    if status == "deadline":
+                        # structured DEADLINE frame: answered, not served
+                        report.deadline_expired += 1
                     else:
-                        report.steady_latencies_s.append(now - enq)
+                        report.tokens_out += int(payload.size)
+                        report.latencies_s.append(now - enq)
+                        if roll_active:
+                            report.rollover_latencies_s.append(now - enq)
+                        else:
+                            report.steady_latencies_s.append(now - enq)
+                    if rid in rerouted_rids:
+                        report.kill_latencies_s.append(now - enq)
             if alive[i] and not procs[i].is_alive() and procs[i].exitcode:
-                _reap(i, None)
+                if supervise:
+                    _respawn(i)
+                else:
+                    _reap(i, None)
 
     try:
         # ---- warmup phase: compile every worker off the measured clock
         warm_expect = 0
         for w in range(workers):
             for j in range(warmup_per_worker):
-                _push_blocking(
-                    req_rings[w],
-                    encode_request(
-                        _RID_WARM + w * warmup_per_worker + j,
-                        prompts[(w + j) % n_requests], max_new_tokens, 0.0,
-                    ),
-                    timeout=30.0,
+                wrid = _RID_WARM + w * warmup_per_worker + j
+                frame = encode_request(
+                    wrid, prompts[(w + j) % n_requests], max_new_tokens, 0.0,
                 )
+                _push_blocking(req_rings[w], frame, timeout=30.0)
+                sent_frames[wrid] = frame
+                owner[wrid] = w
                 warm_expect += 1
         while warmed < warm_expect:
             _drain()
@@ -553,9 +706,12 @@ def run_traffic(
                 sent = False
                 for t in targets:
                     frame = encode_request(
-                        k, prompts[k], max_new_tokens, time.perf_counter()
+                        k, prompts[k], max_new_tokens, time.perf_counter(),
+                        request_deadline_s,
                     )
                     if req_rings[t].push(frame):
+                        sent_frames[k] = frame
+                        owner[k] = t
                         nxt = (t + 1) % workers
                         sent = True
                         break
@@ -570,7 +726,7 @@ def run_traffic(
                 first_send = time.perf_counter()
 
         # ---- drain phase: STOP each worker, collect the tail
-        stop_frame = _REQ_HDR.pack(_RID_STOP, 0, 0, 0.0)
+        stop_frame = _REQ_HDR.pack(_RID_STOP, 0, 0, 0.0, 0.0)
         for i, ring in enumerate(req_rings):
             if not alive[i]:
                 continue

@@ -579,3 +579,71 @@ def test_rotation_crash_between_archive_and_rewrite_recovers(tmp_path):
         assert tx.resumed                      # resynced from the snapshot
         assert tx.diff().added == {"lib": b.content_hash}
     assert "lib" in ws2.world()
+
+
+# ------------------------------------------------- rollback x journal replay
+def test_resume_after_rollback_does_not_resurrect_aborted_generation(tmp_path):
+    """``rollback_epoch`` clears the journal before recording its marker,
+    so ``management(resume=True)`` over a rolled-back world replays
+    NOTHING from the aborted generation — its ops are gone, not lurking in
+    a journal that a later resume would re-stage."""
+    ws = Workspace.open(tmp_path / "store")
+    _publish_base(ws)
+    v1_hash = ws.world().bindings["w"]
+
+    # generation N+1: the roll that will turn out to be bad
+    with ws.management() as tx:
+        b2 = build_bundle(
+            "w",
+            {
+                "s/a": np.full(8, 9.0, np.float32),
+                "s/b": np.full((2, 3), 9.0, np.float32),
+            },
+            version="2",
+        )
+        tx.publish(*b2)
+    assert ws.world().bindings["w"] == b2[0].content_hash
+
+    bad_gen = ws.epoch_gen
+    new_gen = ws.rollback_epoch()
+    assert new_gen > bad_gen
+    assert ws.world().bindings["w"] == v1_hash        # rolled back, byte-for-byte
+
+    # the journal carries only the rollback marker, and replay over the
+    # committed world is a no-op (replay applies publish/remove, never
+    # rollback rows)
+    ops = [e.op for e in ws.journal.entries()]
+    assert ops == ["rollback"]
+    replayed = ws.journal.replay(dict(ws.manager.committed_bindings))
+    assert replayed == dict(ws.manager.committed_bindings)
+
+    # a fresh session resuming over the rolled-back store stages nothing
+    ws2 = Workspace.open(tmp_path / "store")
+    assert ws2.mode == Mode.EPOCH
+    with ws2.management(resume=True) as tx:
+        assert not tx.resumed                # nothing crashed: clean entry
+        assert tx.diff().is_empty            # v2 did NOT come back
+    assert ws2.world().bindings["w"] == v1_hash
+    # the next clean commit supersedes the rollback marker entirely
+    assert ws2.manager.rolled_back_from == 0
+
+
+def test_rollback_refused_inside_management(tmp_path):
+    """Mid-transaction state is exactly what rollback must never touch:
+    it targets committed generations only."""
+    from repro.core.errors import RollbackError
+
+    ws = Workspace.open(tmp_path / "store")
+    _publish_base(ws)
+    with ws.management() as tx:
+        b2 = build_bundle("w2", {"t": np.ones(2, np.float32)})
+        tx.publish(*b2)
+        with pytest.raises(ModeError):
+            ws.rollback_epoch()
+    # and with no retained generation there is nothing to roll back to:
+    # the first commit's outgoing world was empty, so the chain is empty
+    ws_first = Workspace.open(tmp_path / "fresh")
+    _publish_base(ws_first)
+    assert ws_first.manager.retained_generations() == []
+    with pytest.raises(RollbackError):
+        ws_first.rollback_epoch()

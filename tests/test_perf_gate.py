@@ -43,6 +43,9 @@ def _new_fixture(**overrides) -> dict:
         "serve/tok_per_s": 1000.0,
         "serve/rollover_p99_latency": 52000.0,
         "serve/rollover_stall": 61000.0,
+        "serve/kill_p99_latency": 450000.0,
+        "serve/fleet_restarts": 1.0,
+        "serve/rollback_wall": 7000.0,
     }
     base.update(overrides)
     return base
@@ -83,6 +86,12 @@ def test_is_derived_classifies_unsweepable_rows():
     # never compared across runners
     assert perf_gate.is_derived("serve/rollover_p99_latency")
     assert perf_gate.is_derived("serve/rollover_stall")
+    # chaos rows (PR 8): detection/respawn-scheduling dominated — gated by
+    # their own nonzero-finite asserts, never swept across runners
+    assert perf_gate.is_derived("serve/kill_p99_latency")
+    assert perf_gate.is_derived("serve/rollback_wall")
+    assert perf_gate.is_derived("serve/fleet_restarts")
+    assert perf_gate.is_derived("serve/fleet_rerouted")
 
 
 # --------------------------------------------------------------- compare()
@@ -202,6 +211,31 @@ def test_trajectory_rejects_zero_or_nonfinite_rollover_rows():
     new = _new_fixture(**{"serve/rollover_stall": float("inf")})
     failures = perf_gate.trajectory_asserts(new, _old_fixture())
     assert any("rollover_stall" in f for f in failures)
+
+
+def test_trajectory_requires_chaos_rows():
+    """PR 8: a trajectory without the chaos measurements fails the gate —
+    a SIGKILLed worker and a rolled-back wedge must really have run."""
+    for key in ("serve/kill_p99_latency", "serve/rollback_wall",
+                "serve/fleet_restarts"):
+        new = _new_fixture()
+        del new[key]
+        failures = perf_gate.trajectory_asserts(new, _old_fixture())
+        assert any(f"required key {key}" in f for f in failures)
+
+
+def test_trajectory_rejects_fake_chaos_rows():
+    # a zero kill p99 means no re-routed request ever completed
+    new = _new_fixture(**{"serve/kill_p99_latency": 0.0})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("kill_p99_latency" in f for f in failures)
+    # zero restarts means the fault plan never killed anyone
+    new = _new_fixture(**{"serve/fleet_restarts": 0.0})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("respawned" in f for f in failures)
+    new = _new_fixture(**{"serve/rollback_wall": float("nan")})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("rollback_wall" in f for f in failures)
 
 
 # ------------------------------------------------------------------ main()
