@@ -1,6 +1,6 @@
 """Perf gate: compare this PR's bench JSON against the committed previous one.
 
-    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_8.json BENCH_7.json \
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_9.json BENCH_8.json \
         [--tolerance 1.25]
 
 Three kinds of checks, all printed as a table:
@@ -18,6 +18,12 @@ Three kinds of checks, all printed as a table:
   explicit failure (a placeholder leaked into the trajectory), and an
   *absent* one is a soft failure (printed, exit code set) rather than a
   crash.
+* **Measured-row zero-rejection** — every *measured* (non-derived) row in
+  the new trajectory must be a real timing. Through PR 8, ``smoke/explain``
+  and ``smoke/gc`` were literal 0.0 placeholders the regression sweep then
+  silently skipped — the same placeholder-blindness the derived-row check
+  closed, on the measured side. Rows where zero is the *measurement* (the
+  journal's epoch-path byte delta) are allowlisted in ``ZERO_VALID``.
 * **Trajectory asserts** — the cross-process runtime's headline claims:
   repeat ``stable-shm`` loads within 2x of ``stable-mmap-cached`` (an
   EpochCache hit over the shared segment, not a remap) and faster than
@@ -35,7 +41,13 @@ Three kinds of checks, all printed as a table:
   finite with ``serve/fleet_restarts >= 1`` (a SIGKILLed worker's
   in-flight requests completed through re-route + respawn), and a real
   ``serve/rollback_wall`` (a wedged adopt hit its deadline and the store
-  rolled back to byte-identical prior weights).
+  rolled back to byte-identical prior weights); and the store-tier rows
+  (PR 9): ``store/fetch_cold``/``store/fetch_warm`` nonzero and finite
+  with the warm fetch pinned near the shm-attach floor (an EpochCache
+  hit, never a re-download), ``store/fetch_under_faults`` bounded (a
+  truncated + refused fetch recovered inside its retry budget, not a
+  wedge), and ``store/quarantined >= 1`` (the corrupt-transfer scenario
+  really exercised the verify-before-admit path).
 
 Exits non-zero when any check fails (CI runs it as a soft gate, same
 rationale as the PR 3 gate: a slow shared runner must not silently block
@@ -66,7 +78,11 @@ def is_derived(key: str) -> bool:
     commit-sized window is pure runner noise. The PR 8 chaos rows
     (``kill_p99_latency``, ``rollback_wall``) are the same kind of
     window-scoped measurement — dominated by detection/respawn
-    scheduling, gated by their own nonzero-and-finite asserts below."""
+    scheduling, gated by their own nonzero-and-finite asserts below.
+    Store-tier ratio/count rows (``compress_ratio``, ``quarantined``) are
+    plain derived values, and ``fetch_under_faults`` is fault-schedule +
+    backoff-jitter dominated — all three are gated by their own trajectory
+    asserts instead of the cross-run microsecond sweep."""
     return (
         "speedup" in key
         or "/fleet_" in key
@@ -74,6 +90,9 @@ def is_derived(key: str) -> bool:
         or "/rollover_" in key
         or "/kill_" in key
         or "/rollback_" in key
+        or "_ratio" in key
+        or "/quarantined" in key
+        or "_under_faults" in key
     )
 
 
@@ -103,7 +122,28 @@ def compare(new: dict, old: dict, tolerance: float) -> list[str]:
 REQUIRED_DERIVED = (
     "smoke/mmap_speedup_vs_dynamic",
     "smoke/cached_speedup_vs_mmap",
+    "store/compress_ratio",
 )
+
+# measured rows where a literal 0.0 is the honest measurement, not a
+# placeholder: the journal row asserts the epoch path wrote ZERO bytes
+ZERO_VALID = frozenset({"smoke/journal_epoch_overhead"})
+
+
+def check_measured_zeros(new: dict) -> list[str]:
+    """Every measured row must carry a real timing (see module docstring).
+
+    Mirrors ``check_derived``'s placeholder-rejection on the measured side:
+    a 0.0 microsecond row outside ``ZERO_VALID`` means a harness emitted a
+    placeholder the regression sweep would silently skip forever."""
+    failures: list[str] = []
+    for k in sorted(new):
+        if is_derived(k) or k in ZERO_VALID:
+            continue
+        if new[k] <= MIN_REAL_US:
+            print(f"FAIL measured row {k} is a zero-valued placeholder")
+            failures.append(f"measured row {k} zero-valued ({new[k]!r})")
+    return failures
 
 
 def check_derived(new: dict) -> list[str]:
@@ -246,6 +286,46 @@ def trajectory_asserts(new: dict, old: dict) -> list[str]:
             f"(deadline fired and the store rolled back)",
             rollback > 0.0 and math.isfinite(rollback),
         )
+    # store tier (PR 9): one machine baked + exported, a fresh machine
+    # fetched through the tiered store — cold fetch real, warm fetch an
+    # EpochCache hit (near the shm-attach floor, never a re-download),
+    # the faulted fetch bounded, and the corrupt transfer quarantined
+    fetch_cold = require(new, "store/fetch_cold", "new")
+    if fetch_cold is not None:
+        check(
+            f"store/fetch_cold ({fetch_cold:.1f}us) is nonzero and finite",
+            fetch_cold > 0.0 and math.isfinite(fetch_cold),
+        )
+    fetch_warm = require(new, "store/fetch_warm", "new")
+    if fetch_warm is not None:
+        check(
+            f"store/fetch_warm ({fetch_warm:.1f}us) is nonzero and finite",
+            fetch_warm > 0.0 and math.isfinite(fetch_warm),
+        )
+        if new_shm is not None:
+            # 10x headroom over the shm-attach floor: same order of
+            # magnitude (a cache hit), an order below the per-load CoW
+            # mmap (~190us) and three below a re-download (~7000us)
+            check(
+                f"store/fetch_warm ({fetch_warm:.1f}us) within 10x of "
+                f"stable-shm attach ({new_shm:.1f}us) — warm fetch is an "
+                f"EpochCache hit, not a re-download",
+                fetch_warm <= new_shm * 10.0,
+            )
+    faulted = require(new, "store/fetch_under_faults", "new")
+    if faulted is not None:
+        check(
+            f"store/fetch_under_faults ({faulted:.1f}us) bounded "
+            f"(< 60s: recovered inside the retry budget, not a wedge)",
+            0.0 < faulted < 60e6 and math.isfinite(faulted),
+        )
+    quarantined = require(new, "store/quarantined", "new")
+    if quarantined is not None:
+        check(
+            f"corrupt transfer really quarantined "
+            f"(quarantined={quarantined:.0f})",
+            quarantined >= 1.0,
+        )
     return failures
 
 
@@ -261,6 +341,7 @@ def main() -> int:
         old = json.load(f)
     failures = compare(new, old, args.tolerance)
     failures += check_derived(new)
+    failures += check_measured_zeros(new)
     failures += trajectory_asserts(new, old)
     if failures:
         print(f"\nperf gate FAILED ({len(failures)}):")

@@ -13,13 +13,19 @@ amortizes to at most one shm-segment fill for the whole machine, and that
 the epoch path writes zero journal bytes. Use it in CI to prove the
 benchmark path stays runnable.
 
-Both ``--smoke`` and ``--fast`` also write ``BENCH_8.json``
+Both ``--smoke`` and ``--fast`` also write ``BENCH_9.json``
 ({name: us_per_call}, plus derived ratio/count rows such as
 ``smoke/*_speedup_*`` and ``smoke/fleet_fills``) — the machine-readable
 perf trajectory, one file per PR, uploaded as a CI artifact and gated
 against the committed previous-PR file by ``benchmarks/perf_gate.py``.
-The serving-tier rows (``serve/*``) are merged into the same file by
-``benchmarks/serve_load.py``, which CI runs after this harness.
+The serving-tier rows (``serve/*``) and store-tier rows (``store/*``)
+are merged into the same file by ``benchmarks/serve_load.py`` and
+``benchmarks/store_load.py``, which CI runs after this harness.
+
+Every measured (non-derived) row carries an honest timing: the gate's
+zero-rejection (``perf_gate.check_measured_zeros``) fails the trajectory
+if a microsecond row is a literal 0.0 placeholder — ``smoke/explain`` and
+``smoke/gc`` were exactly that through PR 8.
 
 Emits ``name,us_per_call,derived`` CSV rows:
     microbench/*   — paper Fig. 1 & 7 (n x f grid, dynamic vs stable)
@@ -34,7 +40,7 @@ from __future__ import annotations
 
 import sys
 
-BENCH_JSON = "BENCH_8.json"  # perf trajectory of this PR's benchmark pass
+BENCH_JSON = "BENCH_9.json"  # perf trajectory of this PR's benchmark pass
 
 
 def smoke() -> None:
@@ -156,8 +162,11 @@ def _smoke_body(ws) -> None:
          f"procs={n_procs};fills={fills};attaches={n_procs - fills}")
     emit_value("smoke/fleet_fills", fills, f"procs={n_procs}")
 
+    # observability cost is a real number now, not a 0.0 placeholder: the
+    # gate's zero-rejection would (rightly) fail the old row
     rep = ws.explain(app.name)
-    emit("smoke/explain", 0.0,
+    mean, *_ = timeit(lambda: ws.explain(app.name), warmup=1, trials=3)
+    emit("smoke/explain", mean,
          f"source={rep.source};relocations={rep.relocations}")
 
     # management-time observability: journaled upgrade + pre-commit preview
@@ -197,8 +206,12 @@ def _smoke_body(ws) -> None:
     # store GC: explicit-only reclamation of dead (app, closure) entries.
     # Nothing is orphaned here (the republish reused every key), so this
     # asserts gc never touches live entries — loads still work after it.
+    # The timing is the steady-state full-scan cost (live-set walk over
+    # tables + segments + store dirs), measured over repeat passes; the
+    # first pass's reclaim counts ride along as the derived column.
     g = ws.gc()
-    emit("smoke/gc", 0.0,
+    mean, *_ = timeit(lambda: ws.gc(), warmup=0, trials=3)
+    emit("smoke/gc", mean,
          f"removed={g.removed_files};bytes={g.bytes_reclaimed}")
     ws.load(app.name, strategy="stable-mmap-cached")
 

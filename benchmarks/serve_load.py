@@ -58,7 +58,7 @@ end), reported as us per decoded token.
   serving the rolled-back weights (the adopt call's total wall minus
   the deadline itself).
 
-Rows are MERGED into ``BENCH_8.json`` (``run.py --smoke`` writes the load
+Rows are MERGED into ``BENCH_9.json`` (``run.py --smoke`` writes the load
 rows first in CI; this harness adds the serving rows), and
 ``perf_gate.py`` gates the rollover and chaos rows against the
 steady-state ones.
@@ -72,7 +72,7 @@ import time
 
 import numpy as np
 
-BENCH_JSON = "BENCH_8.json"
+BENCH_JSON = "BENCH_9.json"
 
 ARCH = "mamba2-370m"          # constant-state decode: the serving workhorse
 

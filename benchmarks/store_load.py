@@ -1,0 +1,200 @@
+"""Store-tier benchmark: fetch latency through the tiered arena store.
+
+    PYTHONPATH=src python -m benchmarks.store_load --smoke
+
+One ephemeral *baker* workspace publishes and bakes a world, exports it
+(``ws.export_store()``) and serves it over an in-process
+``repro.launch.store`` server; ephemeral *fetcher* workspaces — objects
+replicated, ``tables/`` stripped, the fresh-machine simulation — warm
+through ``stable-remote`` and are byte-compared against the baker's
+arenas after every scenario (a benchmark that serves wrong bytes fast is
+not a benchmark).
+
+Rows merged into ``BENCH_9.json`` (after ``run.py --smoke`` writes the
+load-strategy rows; the perf gate reads them from the same file):
+
+    store/fetch_cold        — download + verify + install + shm publish,
+                              reset between trials (measured, gated)
+    store/fetch_warm        — repeat load over the warmed machine: an
+                              EpochCache hit, gated ~ shm-attach cost
+    store/fetch_under_faults— cold fetch surviving a truncation + a
+                              refused connect (derived: fault-schedule
+                              and backoff-dominated, gated bounded-only)
+    store/quarantined       — count of corrupt transfers quarantined in
+                              the flipped-byte scenario (derived, >=1)
+    store/compress_ratio    — raw bytes / transferred blob bytes for the
+                              exported world (derived, > 0)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+BENCH_JSON = "BENCH_9.json"
+BOUND_S = 60.0  # hard sanity bound on any faulted scenario's wall
+
+
+def _publish_world(ws):
+    from repro.configs.paper_microbench import make_world_spec
+
+    from .common import publish_world
+
+    bundles, app = make_world_spec(8, 16)
+    publish_world(ws, bundles + [(app, b"")])
+    return app.name
+
+
+def _fresh_fetcher():
+    """A never-baked machine: same world, no tables, private cache."""
+    from repro.core import EpochCache
+    from repro.link import Workspace
+
+    ws = Workspace.ephemeral("repro-store-bench-", epoch_cache=EpochCache())
+    name = _publish_world(ws)
+    for p in Path(ws.root).glob("tables/*"):
+        p.unlink()
+    return ws, name
+
+
+def _arena_bytes(ws, name):
+    world = ws.world()
+    app = world.resolve(name)
+    key = ws.executor.closure_key(app, world)
+    return ws.registry.arena_path(app.content_hash, key).read_bytes()
+
+
+def smoke() -> None:
+    from repro.core.arena_store import FetchPolicy
+    from repro.launch.store import StoreServer
+    from repro.serve.faults import StoreFaultPlan
+
+    from .common import emit, emit_value, timeit
+
+    policy = FetchPolicy(
+        connect_timeout_s=2.0,
+        read_timeout_s=2.0,
+        retry_budget=6,
+        backoff_base_s=0.01,
+        backoff_max_s=0.2,
+    )
+
+    from repro.core import EpochCache
+    from repro.link import Workspace
+
+    baker = Workspace.ephemeral("repro-store-baker-", epoch_cache=EpochCache())
+    fetchers = []
+    server = None
+    try:
+        name = _publish_world(baker)
+        baker.load(name, strategy="stable-mmap")  # force the bake to exist
+        export = baker.export_store()
+        assert export["entries"] >= 1, "baker exported nothing"
+        emit_value(
+            "store/compress_ratio",
+            export["raw_bytes"] / max(export["blob_bytes"], 1),
+            f"codec={export['codec']};entries={export['entries']}",
+        )
+        truth = _arena_bytes(baker, name)
+
+        server = StoreServer(Path(baker.root) / "store").start()
+
+        # -- cold fetch: full tier walk (index + download + verify +
+        # install + shm publish), reset to a fresh machine between trials
+        def cold():
+            ws, app_name = _fresh_fetcher()
+            fetchers.append(ws)
+            ws.attach_store(server.url, policy=policy)
+            t0 = time.perf_counter()
+            ws.load(app_name, strategy="stable-remote")
+            dt = time.perf_counter() - t0
+            assert _arena_bytes(ws, app_name) == truth, "cold fetch bytes!"
+            rep = ws.store_report()
+            assert rep.blobs_fetched == 1 and not rep.degraded, rep.summary()
+            return dt
+
+        cold_walls = [cold() for _ in range(3)]
+        emit("store/fetch_cold", sum(cold_walls) / len(cold_walls),
+             f"trials={len(cold_walls)}")
+
+        # -- warm fetch: the machine the cold trial just warmed; repeat
+        # loads are EpochCache hits — the gate pins this near shm attach
+        warm_ws = fetchers[-1]
+        warm_name = name
+        # min, not mean: a cache hit is a floor measurement — one GC pause
+        # or scheduler blip in a ~10us trial swamps the mean on a shared
+        # runner, exactly the noise the gate's shm-attach pin must not see
+        _, best, _ = timeit(
+            lambda: warm_ws.load(warm_name, strategy="stable-remote"),
+            warmup=3, trials=9,
+        )
+        emit("store/fetch_warm", best, "epoch_cache_hit;min_of_9")
+        assert warm_ws.store_report().fetch_attempts <= 2, (
+            "warm loads walked the store again"
+        )
+        server.stop()
+        server = None
+
+        # -- faulted fetch: one mid-stream truncation (must RESUME, not
+        # restart) plus one refused connect, still byte-identical
+        blob_len = export["blob_bytes"] // export["entries"]
+        faults = StoreFaultPlan(truncate_at=blob_len // 2, truncate_n=1,
+                                refuse_n=1)
+        server = StoreServer(
+            Path(baker.root) / "store", faults=faults
+        ).start()
+        ws, app_name = _fresh_fetcher()
+        fetchers.append(ws)
+        ws.attach_store(server.url, policy=policy)
+        t0 = time.perf_counter()
+        ws.load(app_name, strategy="stable-remote")
+        faulted_wall = time.perf_counter() - t0
+        assert faulted_wall < BOUND_S, f"faulted fetch took {faulted_wall}s"
+        assert _arena_bytes(ws, app_name) == truth, "faulted fetch bytes!"
+        rep = ws.store_report()
+        assert rep.fetch_resumed >= 1, "truncation did not resume"
+        assert not rep.degraded, rep.summary()
+        emit_value("store/fetch_under_faults", faulted_wall * 1e6,
+                   f"retries={rep.fetch_retries};resumed={rep.fetch_resumed}")
+        server.stop()
+
+        # -- corrupt store: a flipped byte must quarantine, never admit
+        server = StoreServer(
+            Path(baker.root) / "store",
+            faults=StoreFaultPlan(flip_at=blob_len // 3, flip_n=1),
+        ).start()
+        ws, app_name = _fresh_fetcher()
+        fetchers.append(ws)
+        ws.attach_store(server.url, policy=policy)
+        ws.load(app_name, strategy="stable-remote")
+        assert _arena_bytes(ws, app_name) == truth, "post-quarantine bytes!"
+        rep = ws.store_report()
+        assert rep.quarantined >= 1, "flipped byte was not quarantined"
+        emit_value("store/quarantined", rep.quarantined,
+                   f"blobs_fetched={rep.blobs_fetched}")
+    finally:
+        if server is not None:
+            server.stop()
+        for ws in fetchers:
+            ws.close()
+        baker.close()
+
+
+def main() -> None:
+    from .common import write_bench_json
+
+    if "--smoke" not in sys.argv:
+        print("store_load only has a --smoke mode", file=sys.stderr)
+        raise SystemExit(2)
+    print("name,us_per_call,derived")
+    try:
+        smoke()
+    finally:
+        # merge: CI runs this after run.py --smoke + serve_load.py wrote
+        # the same trajectory file; partial rows still reach the artifact
+        print(f"wrote {write_bench_json(BENCH_JSON, merge=True)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,14 @@ Vignette 8 — survive a bad roll: commit a v3 whose reload wedges, let the
              FORWARD to a generation that re-adopts the v2 world —
              byte-identical weights, journal-replay safe, the aborted
              generation reclaimed by the next drain gc.
+Vignette 9 — survive a flaky artifact store: one machine bakes and exports
+             (``ws.export_store()``), a fleet of fresh machines warms
+             through ``stable-remote`` while the wire truncates a stream
+             mid-blob (the fetch RESUMES via a range read), flips a byte
+             (the hash check quarantines the transfer and a clean retry
+             lands), and finally the store drops dead mid-rollout (warmup
+             completes DEGRADED via local fallback bakes) — every loaded
+             arena byte-identical to the baker's throughout.
 """
 
 import numpy as np
@@ -418,6 +426,125 @@ def main() -> None:
     print("  bad weights shipped   operator / digest        ws.rollback_epoch()")
     print("  SIGKILLed worker      dead rsp-ring owner      supervisor re-route + respawn")
     print("  stuck request         per-request deadline     DEADLINE frame, slot freed")
+
+    # ---------------------------------------------------------------- vignette 9
+    print("=== Vignette 9: survive a flaky artifact store (Heidi) ===")
+    # Heidi bakes ONCE on this machine and ships the bytes to a fleet that
+    # never bakes: ws.export_store() publishes every baked arena as a
+    # content-addressed, zlib-framed blob; repro.launch.store serves it;
+    # fresh machines warm through the `stable-remote` strategy. The wire
+    # is hostile today — streams truncate, bytes flip, and the store dies
+    # mid-rollout — and not one corrupt byte may become epoch-visible.
+    from pathlib import Path as _Path
+
+    from repro.core import EpochCache as _EpochCache
+    from repro.core.arena_store import FetchPolicy
+    from repro.launch.store import StoreServer
+    from repro.serve.faults import StoreFaultPlan
+
+    export = ws.export_store()
+    print(
+        f"  baker exported {export['entries']} arena blob(s): "
+        f"{export['raw_bytes']} raw -> {export['blob_bytes']} encoded "
+        f"({export['codec']})"
+    )
+    policy = FetchPolicy(connect_timeout_s=1.0, read_timeout_s=1.0,
+                         retry_budget=6, backoff_base_s=0.02,
+                         backoff_max_s=0.25)
+    mamba_world = ws.world()
+    mamba_app = mamba_world.resolve("serve:mamba")
+    mamba_key = ws.executor.closure_key(mamba_app, mamba_world)
+    truth = ws.registry.arena_path(
+        mamba_app.content_hash, mamba_key
+    ).read_bytes()
+
+
+    def fresh_machine():
+        # the fleet machine: objects replicated, never baked — identical
+        # content hashes, empty tables/
+        m = Workspace.ephemeral(prefix="repro-vignette9-",
+                                epoch_cache=_EpochCache())
+        b2, p2 = bundle_from_params("weights:mamba", "v2", v2_mamba)
+        with m.management() as tx:
+            tx.publish(b2, p2)
+            tx.publish(tr_app)
+        for p in _Path(m.root).glob("tables/*"):
+            p.unlink()
+        return m
+
+
+    blob_len = export["blob_bytes"] // max(export["entries"], 1)
+    # -- a mid-stream truncation: the fetch must RESUME, not restart
+    srv = StoreServer(
+        _Path(ws.root) / "store",
+        faults=StoreFaultPlan(truncate_at=blob_len // 2, truncate_n=1),
+    ).start()
+    m1 = fresh_machine()
+    m1.attach_store(srv.url, policy=policy)
+    m1.load("serve:mamba", strategy="stable-remote")
+    r1 = m1.store_report()
+    assert r1.fetch_resumed >= 1 and not r1.degraded
+    assert m1.registry.arena_path(
+        mamba_app.content_hash, mamba_key
+    ).read_bytes() == truth
+    print(
+        f"  truncated at byte {blob_len // 2}: resumed via range read "
+        f"(retries={r1.fetch_retries}, resumed={r1.fetch_resumed}); "
+        f"arena byte-identical to the baker's"
+    )
+    srv.stop()
+    m1.close()
+
+    # -- a flipped byte: the content-hash check quarantines the transfer
+    srv = StoreServer(
+        _Path(ws.root) / "store",
+        faults=StoreFaultPlan(flip_at=blob_len // 3, flip_n=1),
+    ).start()
+    m2 = fresh_machine()
+    m2.attach_store(srv.url, policy=policy)
+    m2.load("serve:mamba", strategy="stable-remote")
+    r2 = m2.store_report()
+    assert r2.quarantined == 1 and not r2.degraded
+    assert m2.registry.arena_path(
+        mamba_app.content_hash, mamba_key
+    ).read_bytes() == truth
+    qdir = _Path(m2.root) / "store" / "quarantine"
+    print(
+        f"  flipped byte caught by blake2b before admission: "
+        f"{len(list(qdir.glob('*.bad')))} quarantined transfer(s) with "
+        f"structured records; clean retry landed identical bytes"
+    )
+    g9 = m2.gc()
+    assert g9.store_files_removed >= 2
+    print(
+        f"  ws.gc() reclaimed {g9.store_files_removed} quarantine file(s) "
+        f"(never retried from quarantine — corrupt bytes leave the machine)"
+    )
+    srv.stop()
+    m2.close()
+
+    # -- the store drops dead mid-rollout: degrade, don't wedge
+    m3 = fresh_machine()
+    warm9 = m3.warmup(["serve:mamba"], store="http://127.0.0.1:9",
+                      policy=policy)
+    assert warm9.degraded and warm9.store["fallback_bakes"] == 1
+    assert m3.registry.arena_path(
+        mamba_app.content_hash, mamba_key
+    ).read_bytes() == truth
+    print(
+        f"  dead store: warmup completed DEGRADED "
+        f"(fallback_bakes={warm9.store['fallback_bakes']}) — local bake, "
+        f"same bytes, fleet still comes up"
+    )
+    m3.close()
+
+    print("  failure mode          detection                recovery")
+    print("  -------------------   ----------------------   ---------------------------")
+    print("  refused connect       socket error             capped backoff + jitter, budgeted")
+    print("  truncated stream      short read vs length     range-read RESUME of the partial")
+    print("  flipped/corrupt bytes blake2b vs index digest  quarantine (+record), clean re-fetch")
+    print("  slow-loris stall      per-read timeout         cut the cord, resume")
+    print("  dead store            retry budget exhausted   degrade: local bake, degraded=True")
     ws.close()
 
 

@@ -26,6 +26,10 @@ Engine-room surface:
     shm_arena, run_fleet         — cross-process shared arenas: named POSIX
                                    shm segments so N worker processes map
                                    one physical copy (``stable-shm``)
+    TieredStore, export_store    — tiered remote arena store: one machine
+                                   bakes + exports, a fleet fetches with a
+                                   verified, resumable, retried path and
+                                   degrades to local bakes (``stable-remote``)
     ShmRing                      — the serving data plane: SPSC shm
                                    request/response rings (fixed slots,
                                    per-slot generation counters, record-
@@ -34,6 +38,13 @@ Engine-room surface:
     CompileCache                 — AOT executable materialization
 """
 
+from .arena_store import (
+    ArenaStoreError,
+    FetchPolicy,
+    StoreReport,
+    TieredStore,
+    export_store,
+)
 from .compile_cache import CompileCache, CompileStats, cache_key
 from .epoch_cache import ArenaEntry, CacheStats, EpochCache, process_cache
 from .errors import (
@@ -89,6 +100,11 @@ from .symbol_index import IndexedResolver, SymbolIndex, closure_hash
 
 __all__ = [
     "ArenaEntry",
+    "ArenaStoreError",
+    "FetchPolicy",
+    "StoreReport",
+    "TieredStore",
+    "export_store",
     "CacheStats",
     "CompileCache",
     "CompileStats",

@@ -102,6 +102,8 @@ class LoadStats:
     cache_hit: bool = False     # served from the process EpochCache
     shm_attached: bool = False  # stable-shm: attached an existing segment
     shm_segment: str = ""       # stable-shm: segment name (census/debug)
+    store_source: str = ""      # stable-remote: tier that produced the
+                                # arena (tables/cache/remote/bake)
 
     @property
     def startup_s(self) -> float:
@@ -290,6 +292,10 @@ class Executor:
         # stale (a changed binding changes the world hash).
         self._closure_key_cache: dict[tuple[str, str], str] = {}
         self.last_materialization: Optional[MaterializationResult] = None
+        # Tiered arena store (core/arena_store.TieredStore) consulted by
+        # the stable-remote strategy when the baked arena is missing
+        # locally; attached by Workspace.attach_store / warmup(store=...).
+        self.arena_store = None
         # Wire the Manager's end_mgmt hooks (Figure 5's dashed control edge)
         # and point its commit-time invalidation at our cache.
         manager.on_materialize = self.materialize_all
@@ -729,6 +735,38 @@ class Executor:
             table=None,
             stats=stats,
         )
+
+    def _load_stable_remote(self, app: StoreObject, world: World) -> LoadedImage:
+        """Tiered-store epoch load: make sure the baked arena exists
+        locally (tables/ → local store cache → verified remote fetch →
+        degraded local bake), then serve it exactly like ``stable-shm``.
+
+        Repeat loads are EpochCache hits and skip the tier walk outright —
+        the warm path is the shm attach, so a fetched fleet pays the
+        network exactly once per (app, closure) per machine. With no store
+        attached this is ``stable-shm`` plus two stat calls, which keeps
+        the strategy loadable on a baking machine and in the benchmark
+        sweep without a server."""
+        key = self.closure_key(app, world)
+        ckey = (str(self.registry.root), app.content_hash, key)
+        source = "tables"
+        if self.epoch_cache.get("shm-arena", ckey) is None:
+            apath = self.registry.arena_path(app.content_hash, key)
+            mpath = self.registry.arena_meta_path(app.content_hash, key)
+            if not (apath.exists() and mpath.exists()):
+                store = self.arena_store
+                if store is None:
+                    raise StaleTableError(
+                        f"no baked arena for {app.name} under closure "
+                        f"{key[:12]} and no arena store attached — bake via "
+                        "end_mgmt, or attach one (Workspace.attach_store / "
+                        "warmup(store=...))"
+                    )
+                source = store.ensure_arena(self, app, world, key)
+        image = self._load_stable_shm(app, world)
+        image.stats.strategy = "stable-remote"
+        image.stats.store_source = source
+        return image
 
     def _load_dynamic(self, app: StoreObject, world: World) -> LoadedImage:
         stats = LoadStats(strategy="dynamic")

@@ -263,16 +263,20 @@ class GcReport:
     dry_run: bool = False
     retired_entries: int = 0     # epoch-cache entries a drain would reclaim
     retired_bytes: int = 0
+    store_files_removed: int = 0  # store-tier quarantine/partial files
+                                  # reclaimed (names land in `removed` as
+                                  # "store/<sub>/<file>")
 
     @property
     def removed_files(self) -> int:
-        return len(self.removed) - self.segments_removed
+        return len(self.removed) - self.segments_removed - self.store_files_removed
 
     def summary(self) -> dict:
         return {
             "dry_run": self.dry_run,
             "removed_files": self.removed_files,
             "segments_removed": self.segments_removed,
+            "store_files_removed": self.store_files_removed,
             "kept_files": self.kept_files,
             "bytes_reclaimed": self.bytes_reclaimed,
             "retired_entries": self.retired_entries,

@@ -654,7 +654,8 @@ def _close_live_segments() -> None:  # pragma: no cover - interpreter exit
 
 
 # ------------------------------------------------------------------- fleet
-def _fleet_worker(root, app_name, strategy, arch, max_new, barrier, queue):
+def _fleet_worker(root, app_name, strategy, arch, max_new, barrier, queue,
+                  store_url=None):
     """Spawn-target for one fleet replica (module-level: picklable by name).
 
     Imports stay inside the function so a load-only probe never pays the
@@ -671,6 +672,10 @@ def _fleet_worker(root, app_name, strategy, arch, max_new, barrier, queue):
         from repro.link import Workspace
 
         ws = Workspace.open(root)
+        if store_url:
+            # fleet warm-through-store: missing arenas are fetched
+            # (verified, resumable, retried) before the shm publish
+            ws.attach_store(store_url)
         barrier.wait(timeout=120)
         t0 = _time.perf_counter()
         image = ws.load(app_name, strategy=strategy)
@@ -727,6 +732,7 @@ def run_fleet(
     arch: Optional[str] = None,
     max_new: int = 0,
     timeout: float = 180.0,
+    store_url: Optional[str] = None,
 ) -> list[dict]:
     """Spawn ``processes`` real OS worker processes that concurrently load
     ``app_name`` from the workspace at ``root`` and report back.
@@ -752,7 +758,7 @@ def run_fleet(
         ctx.Process(
             target=_fleet_worker,
             args=(os.fspath(root), app_name, strategy, arch, max_new,
-                  barrier, queue),
+                  barrier, queue, store_url),
             daemon=True,
         )
         for _ in range(processes)

@@ -26,6 +26,14 @@ Built-ins mirror the paper's Figure 5 (and push past it):
                   (``core/shm_arena.py``); read-only like the cached
                   strategy, guarded by the epoch token + closure key +
                   sidecar generation stamp
+    stable-remote — tiered-store epoch load: the baked arena is found in
+                  ``tables/``, the local store cache, or fetched (verified,
+                  resumable, retried) from a remote served store — then
+                  published/attached exactly like ``stable-shm``. With no
+                  store attached it degrades to the local tiers, so the
+                  benchmark sweep and a baking machine need no server
+                  (``core/arena_store.py``; attach via ``ws.attach_store``
+                  or ``ws.warmup(..., store=...)``)
     dynamic     — traditional dynamic linking (baseline; untouched so
                   benchmarks keep a faithful ld.so comparison point)
     indexed     — dynamic-shaped load resolving through the per-closure
@@ -157,6 +165,11 @@ def _stable_mmap_cached(executor, app, world):
 @register_strategy("stable-shm")
 def _stable_shm(executor, app, world):
     return executor._load_stable_shm(app, world)
+
+
+@register_strategy("stable-remote")
+def _stable_remote(executor, app, world):
+    return executor._load_stable_remote(app, world)
 
 
 @register_strategy("dynamic")

@@ -176,6 +176,10 @@ class WarmupReport:
     cache_hits: int = 0          # EpochCache hits during the warmup
     cache_fills: int = 0         # entries filled (first touch this epoch)
     images: dict = field(default_factory=dict)  # name -> LoadedImage
+    degraded: bool = False       # store tier: some arena came from a
+                                 # fallback bake instead of a fetch
+    store: Optional[dict] = None  # StoreReport.summary() when a store
+                                  # was attached for this warmup
 
     def summary(self) -> dict:
         return {
@@ -185,6 +189,8 @@ class WarmupReport:
             "names": sorted(self.names),
             "cache_hits": self.cache_hits,
             "cache_fills": self.cache_fills,
+            "degraded": self.degraded,
+            "store": self.store,
         }
 
 
@@ -491,8 +497,10 @@ class Workspace:
         self,
         names=None,
         *,
-        strategy: str = "stable-mmap-cached",
+        strategy: Optional[str] = None,
         workers: int = 4,
+        store=None,
+        policy=None,
     ) -> WarmupReport:
         """Batch-preload a world at epoch start (fleet warm-start, one call).
 
@@ -503,7 +511,25 @@ class Workspace:
         for it. After ``warmup`` returns, every ``ws.load`` of a warmed app
         this epoch is a cache hit. The report carries the per-app images
         (``report.images``) plus hit/fill counts for observability.
+
+        ``store=`` turns the warmup into a fleet warm-THROUGH-store: pass
+        a served store URL (``repro.launch.store``) — or an existing
+        ``TieredStore`` — and missing arenas are downloaded (verified,
+        resumable, retried; see ``core/arena_store``) then published to
+        shm, instead of requiring a local bake. One machine bakes and
+        exports; every other machine warms with one call. The default
+        strategy flips to ``stable-remote`` when a store is attached;
+        ``policy=`` forwards a ``FetchPolicy``. ``report.degraded`` /
+        ``report.store`` surface what the fetch path had to survive.
         """
+        if store is not None:
+            self.attach_store(store, policy=policy)
+        if strategy is None:
+            strategy = (
+                "stable-remote"
+                if self.executor.arena_store is not None
+                else "stable-mmap-cached"
+            )
         t0 = time.perf_counter()
         images = self.executor.load_all(
             names, strategy=strategy, workers=workers
@@ -524,11 +550,53 @@ class Workspace:
             cache_fills=len(flags) - sum(flags),
             images=images,
         )
+        tiered = self.executor.arena_store
+        if tiered is not None:
+            report.degraded = tiered.report.degraded
+            report.store = tiered.report.summary()
         for name, image in images.items():
             stats = getattr(image, "stats", None)
             if stats is not None:
                 self._last_stats[name] = stats
         return report
+
+    # ------------------------------------------------------------ store tier
+    def attach_store(self, store, *, policy=None, codec: str = "zlib"):
+        """Attach the tiered arena store consulted by ``stable-remote``.
+
+        ``store`` is a served store URL (``"http://host:port"``, see
+        ``python -m repro.launch.store``), or an already-built
+        ``TieredStore`` (tests compose fault policies directly). Returns
+        the attached ``TieredStore`` (``.report`` carries the counters).
+        """
+        from repro.core.arena_store import TieredStore
+
+        if isinstance(store, TieredStore):
+            tiered = store
+        else:
+            tiered = TieredStore(
+                self.registry, url=os.fspath(store) if not isinstance(store, str) else store,
+                policy=policy, codec=codec,
+            )
+        self.executor.arena_store = tiered
+        return tiered
+
+    def detach_store(self) -> None:
+        self.executor.arena_store = None
+
+    def export_store(self, *, codec: str = "zlib") -> dict:
+        """Publish every baked arena into ``<root>/store/`` (blobs +
+        index) so ``repro.launch.store`` can serve this machine's bakes
+        to a fleet. Returns the export summary (entries, raw vs encoded
+        bytes)."""
+        from repro.core.arena_store import export_store
+
+        return export_store(self.registry, codec=codec)
+
+    def store_report(self):
+        """The attached store's ``StoreReport`` (None when detached)."""
+        tiered = self.executor.arena_store
+        return tiered.report if tiered is not None else None
 
     # -------------------------------------------------------------- garbage
     def gc(self, *, drain: bool = False, dry_run: bool = False) -> GcReport:
@@ -561,11 +629,16 @@ class Workspace:
         the epoch-cache entries a drain would release), but nothing is
         unlinked, no state is persisted, and no cache token moves.
 
+        The store tier rides along: quarantine records and orphaned
+        partial downloads under ``<root>/store/`` are reclaimed in the
+        same pass (``store_files_removed``) — verified blobs are kept as
+        the warm fetch cache.
+
         Only an explicit call runs this; it is never triggered implicitly
         during an epoch. Returns a ``GcReport`` (``bytes_reclaimed``,
-        ``removed_files``, ``segments_removed``). The epoch cache is
-        token-bumped afterwards so no mapping outlives its backing file
-        unnoticed.
+        ``removed_files``, ``segments_removed``, ``store_files_removed``).
+        The epoch cache is token-bumped afterwards so no mapping outlives
+        its backing file unnoticed.
         """
         if drain and not dry_run:
             # Close the rollover window first so the retained chain's keys
@@ -619,6 +692,18 @@ class Workspace:
         report.removed.extend(seg_removed)
         report.segments_removed = len(seg_removed)
         report.bytes_reclaimed += seg_bytes
+        # Store tier: quarantine records and orphaned partial downloads
+        # are reclaim-on-gc by contract (quarantined bytes are never
+        # retried, so nothing ever reads them again). Verified blobs stay
+        # — they are the warm fetch cache.
+        from repro.core.arena_store import gc_store_dirs
+
+        store_removed, store_bytes = gc_store_dirs(
+            self.registry, dry_run=dry_run
+        )
+        report.removed.extend(store_removed)
+        report.store_files_removed = len(store_removed)
+        report.bytes_reclaimed += store_bytes
         from repro.core.epoch_cache import process_cache
 
         caches = [self.executor.epoch_cache]

@@ -296,6 +296,7 @@ class ServeEngine:
         arch: str | None = None,
         max_new: int = 0,
         timeout: float = 180.0,
+        store_url: str | None = None,
     ) -> FleetReport:
         """Spawn a true multi-process serving fleet over one workspace.
 
@@ -310,6 +311,11 @@ class ServeEngine:
         the shared segment. Returns a ``FleetReport`` (fills/attaches per
         the one-fill-per-machine contract, per-worker load stats and
         tensor digests for byte-identity checks).
+
+        ``store_url`` hands every worker a served arena store
+        (``repro.launch.store``) to fetch missing bakes from — pair it
+        with ``strategy="stable-remote"`` for the download-then-publish
+        fleet warm-start.
         """
         from repro.core.shm_arena import run_fleet
 
@@ -322,6 +328,7 @@ class ServeEngine:
             arch=arch,
             max_new=max_new,
             timeout=timeout,
+            store_url=store_url,
         )
         return FleetReport(
             processes=processes,

@@ -25,6 +25,12 @@ survive:
 ``worker`` restricts a plan to one fleet worker index (``-1`` = any), so
 a chaos run can kill worker 0 while workers 1..N-1 prove the re-route
 path. Respawned workers are handed no plan — they must survive.
+
+PR 9 adds :class:`StoreFaultPlan` — the network-side analogue for the
+served arena store (``repro.launch.store``). It is consumed server-side
+by the store's request handler rather than through the process-global
+hooks above, so a chaos test can break the wire while the fetching
+process under test runs entirely fault-free code.
 """
 
 from __future__ import annotations
@@ -43,6 +49,45 @@ class FaultPlan:
     slow_reload_s: float = 0.0   # slow every epoch reload by this much
     die_at_step: int = 0         # SIGKILL self at decode dispatch N (0=off)
     worker: int = -1             # fleet worker index this applies to (-1=any)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass
+class StoreFaultPlan:
+    """Network faults for the served arena store (PR 9's chaos tier).
+
+    Consumed by ``repro.launch.store.StoreServer``: the handler consults
+    the plan per request and mutates the wire, never the bytes on disk —
+    the store's own content is always intact, which is exactly why the
+    client-side verification has to be what protects the fleet.
+
+    * ``refuse_n`` — drop the first N connections without an HTTP
+      response (reader sees a reset: the refused-connect mode).
+    * ``flap_every`` — refuse every k-th request forever (flapping
+      server; retries must converge anyway).
+    * ``truncate_at``/``truncate_n`` — close the stream after byte k of
+      the payload, for the first N blob requests (mid-stream truncation;
+      the client must RESUME via a range read, not restart).
+    * ``flip_at``/``flip_n`` — flip one payload byte at offset k for the
+      first N blob requests (corruption in transit; the client must
+      quarantine, never admit).
+    * ``stall_s``/``stall_n`` — sleep this long mid-stream for the first
+      N blob requests (slow-loris; the client's read timeout must fire).
+    * ``down_after`` — serve N requests, then refuse everything (the
+      store dies mid-warmup; warmup must degrade, not wedge). -1 = never.
+    """
+
+    refuse_n: int = 0
+    flap_every: int = 0
+    truncate_at: int = -1
+    truncate_n: int = 0
+    flip_at: int = -1
+    flip_n: int = 0
+    stall_s: float = 0.0
+    stall_n: int = 0
+    down_after: int = -1
 
     def to_dict(self) -> dict:
         return asdict(self)

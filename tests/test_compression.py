@@ -67,3 +67,91 @@ print("rel err", rel)
         env=env, timeout=300,
     )
     assert out.returncode == 0, out.stdout + out.stderr
+
+
+# --------------------------------------------------------------- byte codec
+# The store-transfer framing (encode_bytes/decode_bytes). Property-style:
+# seeded generators sweep the input space; every frame must roundtrip
+# byte-identically and every mangled frame must raise CodecError, never
+# return wrong bytes silently — the store's verify-before-admit path leans
+# on that.
+
+from repro.dist.compression import (  # noqa: E402
+    CodecError,
+    available_codecs,
+    decode_bytes,
+    encode_bytes,
+)
+
+
+def _corpus():
+    rng = np.random.default_rng(7)
+    yield b""
+    yield b"\x00"
+    yield bytes(4096)                                   # one long run
+    yield bytes(rng.integers(0, 256, 4096, dtype=np.uint8))  # incompressible
+    yield (b"\x00" * 300 + b"\xff" * 300 + b"ab") * 17  # runs > 255
+    yield np.arange(2048, dtype=np.uint8).tobytes()     # no runs, structured
+    yield np.zeros(65536, np.float32).tobytes()         # arena-like payload
+    for n in (1, 2, 255, 256, 257, 1 << 12):
+        yield bytes(rng.integers(0, 4, n, dtype=np.uint8))  # runny random
+
+
+@pytest.mark.parametrize("codec", ["none", "rle", "zlib"])
+def test_codec_roundtrip_property(codec):
+    if codec not in available_codecs():
+        pytest.skip(f"{codec} not available in this build")
+    for data in _corpus():
+        frame = encode_bytes(data, codec)
+        decode = decode_bytes(frame)
+        assert decode == data
+        # framed: header + payload, never a bare passthrough
+        assert len(frame) >= 14 and frame[:4] == b"RPBC"
+
+
+def test_codec_falls_back_to_none_when_not_smaller():
+    rng = np.random.default_rng(3)
+    data = bytes(rng.integers(0, 256, 4096, dtype=np.uint8))
+    frame = encode_bytes(data, "rle")  # RLE inflates random bytes
+    assert decode_bytes(frame) == data
+    assert len(frame) == 14 + len(data)  # none-frame, not an inflated one
+
+
+def test_codec_compresses_runny_payloads():
+    data = np.zeros(1 << 16, np.float32).tobytes()
+    for codec in ("rle", "zlib"):
+        if codec not in available_codecs():
+            continue
+        assert len(encode_bytes(data, codec)) < len(data) // 8
+
+
+def test_codec_rejects_mangled_frames():
+    data = b"hello " * 400
+    for codec in ("none", "rle", "zlib"):
+        frame = bytearray(encode_bytes(data, codec))
+        with pytest.raises(CodecError):
+            decode_bytes(bytes(frame[: len(frame) // 2]))  # truncated
+        with pytest.raises(CodecError):
+            decode_bytes(b"XXXX" + bytes(frame[4:]))       # bad magic
+        wrong_len = bytearray(frame)
+        wrong_len[6] ^= 0x01  # raw-length field
+        with pytest.raises(CodecError):
+            decode_bytes(bytes(wrong_len))
+    with pytest.raises(CodecError):
+        decode_bytes(b"")                                  # no header at all
+    with pytest.raises(CodecError):
+        # valid header, corrupt zlib payload
+        good = encode_bytes(np.arange(256, dtype=np.uint8).tobytes() * 8, "zlib")
+        body = bytearray(good)
+        if len(body) > 20:
+            body[18] ^= 0xFF
+        decode_bytes(bytes(body))
+
+
+def test_codec_unknown_names_raise():
+    with pytest.raises(CodecError):
+        encode_bytes(b"x", "lz77-from-the-future")
+    frame = bytearray(encode_bytes(b"x", "none"))
+    frame[5] = 250  # codec id nobody registered
+    with pytest.raises(CodecError):
+        decode_bytes(bytes(frame))

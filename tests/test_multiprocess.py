@@ -431,3 +431,80 @@ def test_spawn_fleet_amortizes_to_one_fill(shm_ws):
     again = ServeEngine.spawn_fleet(ws, "app", processes=4, timeout=JOIN_S)
     assert again.fills == 0 and again.attaches == 4
     assert again.segments == report.segments
+
+
+def _refresh_race_worker(root, ready, stop, queue):
+    """The long-lived replica: one Workspace, a refresh+load loop, racing
+    the parent's commits and ``gc(drain=True)`` window-closes. Reports
+    every value observed; any unrecoverable error or torn read is a bug."""
+    from repro.core.errors import StaleTableError
+    from repro.link import Workspace
+
+    ws = Workspace.open(root)
+    values, errors, loads = set(), [], 0
+    while not stop.is_set():
+        if loads:
+            ready.set()  # first load landed: parent may start committing
+        try:
+            ws.refresh()
+            img = ws.load("app", strategy="stable-shm")
+        except StaleTableError:
+            # mid-commit or window closed under us: the NEXT refresh+load
+            # must recover; looping is the contract, not a workaround
+            time.sleep(0.002)
+            continue
+        except Exception as e:  # anything else is unrecoverable by contract
+            errors.append(repr(e))
+            if len(errors) >= 3:
+                break
+            continue
+        arr = np.asarray(img["s/a"])
+        lo, hi = float(arr.min()), float(arr.max())
+        if lo != hi:
+            errors.append(f"torn read: min {lo} != max {hi}")
+            break
+        values.add(lo)
+        loads += 1
+    queue.put({"values": sorted(values), "errors": errors, "loads": loads})
+
+
+def test_refresh_races_sibling_gc_drain(shm_ws):
+    """``ws.refresh()`` in a sibling process racing ``gc(drain=True)``
+    across the two-generation window: the parent commits a new world and
+    IMMEDIATELY closes the rollover window each time, while the child
+    refresh+loads in a tight loop. The child must only ever observe fully
+    committed worlds — no torn bytes, no unrecoverable error — even when
+    a drain unlinks the generation it attached a moment earlier."""
+    ws = shm_ws
+    _publish(ws, value=1.0, version="1")
+    ws.load("app", strategy="stable-shm")    # parent serves gen 1
+
+    ready = CTX.Event()
+    stop = CTX.Event()
+    queue = CTX.Queue()
+    proc = CTX.Process(
+        target=_refresh_race_worker,
+        args=(os.fspath(ws.root), ready, stop, queue),
+    )
+    proc.start()
+    committed = {1.0}
+    try:
+        assert ready.wait(timeout=JOIN_S), "race worker never became ready"
+        for i in range(2, 7):
+            v = float(i)
+            _publish(ws, value=v, version=str(i))
+            committed.add(v)
+            # close the window with zero grace: the child may be attached
+            # to the generation this drain unlinks
+            ws.gc(drain=True)
+            time.sleep(0.05)
+    finally:
+        stop.set()
+    out = _drain(queue, 1)
+    _join_all([proc])
+    assert out, "race worker never reported"
+    rec = out[0]
+    assert rec["errors"] == [], rec
+    assert rec["loads"] > 0
+    # every observed value is a committed world's — never a blend
+    assert set(rec["values"]) <= committed, rec

@@ -46,6 +46,13 @@ def _new_fixture(**overrides) -> dict:
         "serve/kill_p99_latency": 450000.0,
         "serve/fleet_restarts": 1.0,
         "serve/rollback_wall": 7000.0,
+        "smoke/explain": 250.0,
+        "smoke/gc": 700.0,
+        "store/fetch_cold": 7000.0,
+        "store/fetch_warm": 9.0,
+        "store/fetch_under_faults": 25000.0,
+        "store/quarantined": 1.0,
+        "store/compress_ratio": 16.0,
     }
     base.update(overrides)
     return base
@@ -92,6 +99,14 @@ def test_is_derived_classifies_unsweepable_rows():
     assert perf_gate.is_derived("serve/rollback_wall")
     assert perf_gate.is_derived("serve/fleet_restarts")
     assert perf_gate.is_derived("serve/fleet_rerouted")
+    # store-tier ratio/count rows + the fault-schedule-dominated faulted
+    # fetch: gated by their own trajectory asserts, never swept
+    assert perf_gate.is_derived("store/compress_ratio")
+    assert perf_gate.is_derived("store/quarantined")
+    assert perf_gate.is_derived("store/fetch_under_faults")
+    # the clean fetch paths ARE swept once both trajectories carry them
+    assert not perf_gate.is_derived("store/fetch_cold")
+    assert not perf_gate.is_derived("store/fetch_warm")
 
 
 # --------------------------------------------------------------- compare()
@@ -236,6 +251,61 @@ def test_trajectory_rejects_fake_chaos_rows():
     new = _new_fixture(**{"serve/rollback_wall": float("nan")})
     failures = perf_gate.trajectory_asserts(new, _old_fixture())
     assert any("rollback_wall" in f for f in failures)
+
+
+def test_trajectory_requires_store_rows():
+    """PR 9: a trajectory without the store-tier measurements fails the
+    gate — the tiered fetch path must really have run, faults included."""
+    for key in ("store/fetch_cold", "store/fetch_warm",
+                "store/fetch_under_faults", "store/quarantined"):
+        new = _new_fixture()
+        del new[key]
+        failures = perf_gate.trajectory_asserts(new, _old_fixture())
+        assert any(f"required key {key}" in f for f in failures)
+
+
+def test_trajectory_pins_warm_fetch_to_shm_attach():
+    # a warm fetch that re-walks the store (or re-downloads) blows the
+    # 10x-of-shm-attach pin
+    new = _new_fixture(**{"store/fetch_warm": 10.0 * 50})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("fetch_warm" in f and "10x" in f for f in failures)
+
+
+def test_trajectory_bounds_faulted_fetch():
+    new = _new_fixture(**{"store/fetch_under_faults": 120e6})  # 2 min
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("fetch_under_faults" in f for f in failures)
+
+
+def test_trajectory_requires_a_real_quarantine():
+    # zero quarantined means the corrupt-transfer scenario never ran
+    new = _new_fixture(**{"store/quarantined": 0.0})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("quarantined" in f for f in failures)
+
+
+# ---------------------------------------------------- check_measured_zeros()
+def test_measured_zero_rejection_flags_placeholders():
+    """Through PR 8 ``smoke/explain`` and ``smoke/gc`` were literal 0.0
+    rows the sweep silently skipped — now an explicit failure."""
+    new = _new_fixture(**{"smoke/explain": 0.0, "smoke/gc": 0.0})
+    failures = perf_gate.check_measured_zeros(new)
+    assert len(failures) == 2
+    assert all("zero-valued" in f for f in failures)
+
+
+def test_measured_zero_rejection_allowlists_true_zero_rows():
+    # the journal row MEASURES zero bytes on the epoch path: zero is honest
+    assert perf_gate.check_measured_zeros(_new_fixture()) == []
+    assert "smoke/journal_epoch_overhead" in perf_gate.ZERO_VALID
+
+
+def test_measured_zero_rejection_ignores_derived_rows():
+    # a legitimately-zero derived count (fleet attached everywhere) is the
+    # derived checks' business, not the measured sweep's
+    new = _new_fixture(**{"smoke/fleet_fills": 0.0})
+    assert perf_gate.check_measured_zeros(new) == []
 
 
 # ------------------------------------------------------------------ main()

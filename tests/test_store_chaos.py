@@ -1,0 +1,419 @@
+"""Store chaos tier: the tiered remote arena store under network faults.
+
+The invariant that matters, proven under every ``StoreFaultPlan`` mode: no
+corrupted or torn blob ever becomes an epoch-visible arena. Whatever the
+wire does — truncate mid-stream, flip bytes, stall, refuse, die — a load
+through ``stable-remote`` either serves bytes identical to the baking
+machine's ``.arena`` or degrades to a local bake; and the failure modes
+stay bounded (retry budgets, read timeouts) instead of wedging a warmup.
+
+Topology per test: a *baker* workspace publishes a world, bakes, exports
+(``ws.export_store()``) and serves it over an in-process ``StoreServer``
+(faults injected on the wire, bytes on disk pristine); a *fetcher*
+workspace publishes the same deterministic world, has its local bakes
+stripped (the fresh-machine simulation — objects replicated, never
+baked), and must reconstruct them through the store.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+pytest.importorskip("_posixshmem")  # stable-remote publishes to POSIX shm
+
+from repro.core import EpochCache, SymbolRef, shm_arena
+from repro.core.arena_store import ArenaStoreError, FetchPolicy, TieredStore
+from repro.launch.store import StoreServer
+from repro.link import Workspace
+from repro.serve.faults import StoreFaultPlan
+
+from conftest import build_app, build_bundle
+
+# Tight budgets: every fault mode must converge (or give up) fast enough
+# for a test tier. A wedge shows up as a test timeout, which is the bug.
+POLICY = FetchPolicy(
+    connect_timeout_s=1.0,
+    read_timeout_s=1.0,
+    retry_budget=6,
+    backoff_base_s=0.01,
+    backoff_max_s=0.1,
+    chunk_bytes=1 << 14,
+)
+BOUND_S = 30.0  # generous wall bound; typical faulted fetches take < 2s
+
+
+def _make_world(ws, *, apps=1, value=3.0):
+    """Deterministic world: same (value, apps) -> same hashes everywhere."""
+    names = []
+    with ws.management() as tx:
+        for i in range(apps):
+            tensors = {
+                "w": np.full((96, 64), value + i, np.float32),
+                "b": np.arange(512, dtype=np.float32) * (value + i),
+            }
+            tx.publish(*build_bundle(f"lib{i}", tensors))
+            tx.publish(build_app(
+                f"app{i}",
+                [SymbolRef("w", (96, 64), "float32"),
+                 SymbolRef("b", (512,), "float32")],
+                [f"lib{i}"],
+            ))
+            names.append(f"app{i}")
+    return names
+
+
+def _strip_bakes(ws) -> int:
+    """The fresh-machine simulation: objects present, tables/ empty."""
+    n = 0
+    for p in Path(ws.root).glob("tables/*"):
+        p.unlink()
+        n += 1
+    assert n, "nothing to strip — world was never baked?"
+    return n
+
+
+def _arena_bytes(ws, name: str) -> bytes:
+    world = ws.world()
+    app = world.resolve(name)
+    key = ws.executor.closure_key(app, world)
+    return ws.registry.arena_path(app.content_hash, key).read_bytes()
+
+
+@pytest.fixture()
+def baker(tmp_path):
+    ws = Workspace.open(tmp_path / "baker", epoch_cache=EpochCache())
+    try:
+        yield ws
+    finally:
+        shm_arena.unlink_root_segments(ws.registry)
+
+
+@pytest.fixture()
+def fetcher(tmp_path):
+    ws = Workspace.open(tmp_path / "fetcher", epoch_cache=EpochCache())
+    try:
+        yield ws
+    finally:
+        shm_arena.unlink_root_segments(ws.registry)
+
+
+def _serve(baker, faults=None) -> StoreServer:
+    baker.export_store()
+    return StoreServer(Path(baker.root) / "store", faults=faults).start()
+
+
+def _attach(fetcher, url) -> TieredStore:
+    return fetcher.attach_store(url, policy=POLICY)
+
+
+# ---------------------------------------------------------------- happy path
+def test_cold_fetch_is_byte_identical_and_publishes_shm(baker, fetcher):
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    srv = _serve(baker)
+    try:
+        _attach(fetcher, srv.url)
+        img = fetcher.load(names[0], strategy="stable-remote")
+    finally:
+        srv.stop()
+    assert img.stats.store_source == "remote"
+    assert img.stats.shm_segment          # download-then-publish-to-shm
+    np.testing.assert_array_equal(
+        img["w"], np.full((96, 64), 3.0, np.float32)
+    )
+    # the epoch-visible arena is byte-identical to the baking machine's
+    assert _arena_bytes(fetcher, names[0]) == _arena_bytes(baker, names[0])
+    report = fetcher.store_report()
+    assert report.blobs_fetched == 1 and not report.degraded
+    # compressed transfer actually transferred fewer bytes than raw
+    assert 0 < report.bytes_fetched < report.raw_bytes
+
+
+def test_warm_load_skips_the_store_entirely(baker, fetcher):
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    srv = _serve(baker)
+    try:
+        _attach(fetcher, srv.url)
+        fetcher.load(names[0], strategy="stable-remote")
+        attempts = fetcher.store_report().fetch_attempts
+        img = fetcher.load(names[0], strategy="stable-remote")
+    finally:
+        srv.stop()
+    assert img.stats.cache_hit            # EpochCache, no tier walk
+    assert img.stats.store_source == "tables"
+    assert fetcher.store_report().fetch_attempts == attempts
+
+
+def test_local_store_cache_serves_without_a_server(baker, fetcher):
+    """Tier 2: a verified blob in <root>/store survives a dead remote AND
+    a re-stripped tables/ — the next install needs no network at all."""
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    srv = _serve(baker)
+    try:
+        _attach(fetcher, srv.url)
+        fetcher.load(names[0], strategy="stable-remote")
+    finally:
+        srv.stop()                        # remote is now gone
+    _strip_bakes(fetcher)
+    ws2 = Workspace.open(fetcher.root, epoch_cache=EpochCache())
+    ws2.attach_store(srv.url, policy=POLICY)  # dead URL on purpose
+    img = ws2.load(names[0], strategy="stable-remote")
+    assert img.stats.store_source == "cache"
+    assert not ws2.store_report().degraded
+    assert _arena_bytes(ws2, names[0]) == _arena_bytes(baker, names[0])
+
+
+# ------------------------------------------------------------- fault modes
+def test_truncated_fetch_resumes_not_restarts(baker, fetcher):
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    blob_len = _blob_len(baker)
+    srv = _serve(baker, StoreFaultPlan(truncate_at=blob_len // 2, truncate_n=1))
+    try:
+        _attach(fetcher, srv.url)
+        t0 = time.monotonic()
+        fetcher.load(names[0], strategy="stable-remote")
+        wall = time.monotonic() - t0
+    finally:
+        srv.stop()
+    report = fetcher.store_report()
+    assert report.fetch_resumed >= 1      # range read, not a restart
+    assert report.fetch_retries >= 1
+    assert report.quarantined == 0        # truncation is a transport fault
+    assert not report.degraded
+    assert wall < BOUND_S
+    assert srv.fault_state.counters()["truncated"] == 1
+    assert _arena_bytes(fetcher, names[0]) == _arena_bytes(baker, names[0])
+
+
+def test_flipped_byte_quarantines_and_never_admits(baker, fetcher):
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    blob_len = _blob_len(baker)
+    srv = _serve(baker, StoreFaultPlan(flip_at=blob_len // 3, flip_n=1))
+    try:
+        _attach(fetcher, srv.url)
+        fetcher.load(names[0], strategy="stable-remote")
+    finally:
+        srv.stop()
+    report = fetcher.store_report()
+    assert report.quarantined == 1
+    assert report.blobs_fetched == 1      # the clean retry made it
+    assert not report.degraded
+    # the corrupt bytes never became epoch-visible
+    assert _arena_bytes(fetcher, names[0]) == _arena_bytes(baker, names[0])
+    # structured quarantine record beside the evidence
+    qdir = Path(fetcher.root) / "store" / "quarantine"
+    records = sorted(qdir.glob("*.json"))
+    assert len(records) == 1
+    rec = json.loads(records[0].read_text())
+    assert rec["reason"]
+    assert rec["digest_expected"]
+    assert rec["bytes"] >= 0
+    assert sorted(qdir.glob("*.bad")), "quarantine kept no evidence bytes"
+    # only the VERIFIED blob ever landed in the local cache tier
+    blobs = list((Path(fetcher.root) / "store" / "blobs").glob("*"))
+    assert len(blobs) == 1
+    # ws.gc() reclaims quarantine (never-retried contract: bytes leave)
+    g = fetcher.gc()
+    assert g.store_files_removed == 2     # .bad + .json
+    assert not list(qdir.glob("*"))
+    # blobs (the warm cache) survive gc
+    assert list((Path(fetcher.root) / "store" / "blobs").glob("*"))
+
+
+def test_refused_connects_retry_within_budget(baker, fetcher):
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    srv = _serve(baker, StoreFaultPlan(refuse_n=2))
+    try:
+        _attach(fetcher, srv.url)
+        fetcher.load(names[0], strategy="stable-remote")
+    finally:
+        srv.stop()
+    report = fetcher.store_report()
+    assert report.fetch_retries >= 2
+    assert not report.degraded
+    assert _arena_bytes(fetcher, names[0]) == _arena_bytes(baker, names[0])
+
+
+def test_flapping_server_converges_bounded(baker, fetcher):
+    names = _make_world(baker, apps=2)
+    _make_world(fetcher, apps=2)
+    _strip_bakes(fetcher)
+    srv = _serve(baker, StoreFaultPlan(flap_every=2))  # every 2nd req refused
+    try:
+        _attach(fetcher, srv.url)
+        t0 = time.monotonic()
+        report = fetcher.warmup(names, store=None)  # store already attached
+        wall = time.monotonic() - t0
+    finally:
+        srv.stop()
+    assert report.strategy == "stable-remote"
+    assert not report.degraded
+    assert wall < BOUND_S
+    sr = fetcher.store_report()
+    assert sr.blobs_fetched == 2 and sr.fetch_retries >= 1
+    for n in names:
+        assert _arena_bytes(fetcher, n) == _arena_bytes(baker, n)
+
+
+def test_slow_loris_stall_times_out_and_recovers(baker, fetcher):
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    # stall far beyond the read timeout: the client must cut the cord
+    srv = _serve(baker, StoreFaultPlan(stall_s=8.0, stall_n=1))
+    try:
+        _attach(fetcher, srv.url)
+        t0 = time.monotonic()
+        fetcher.load(names[0], strategy="stable-remote")
+        wall = time.monotonic() - t0
+    finally:
+        srv.stop()
+    report = fetcher.store_report()
+    assert report.fetch_retries >= 1
+    assert not report.degraded
+    assert wall < 8.0                     # did NOT sit out the full stall
+    assert _arena_bytes(fetcher, names[0]) == _arena_bytes(baker, names[0])
+
+
+def test_always_corrupt_store_exhausts_budget_then_bakes(baker, fetcher):
+    """A store that flips a byte on EVERY transfer can never get a blob
+    admitted: the budget exhausts, quarantine fills, and the load still
+    serves correct bytes via the local fallback bake."""
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    blob_len = _blob_len(baker)
+    srv = _serve(baker, StoreFaultPlan(flip_at=blob_len // 2, flip_n=10_000))
+    try:
+        _attach(fetcher, srv.url)
+        img = fetcher.load(names[0], strategy="stable-remote")
+    finally:
+        srv.stop()
+    report = fetcher.store_report()
+    assert img.stats.store_source == "bake"
+    assert report.degraded and report.fallback_bakes == 1
+    assert report.quarantined >= 1
+    assert report.blobs_fetched == 0      # nothing corrupt was EVER admitted
+    assert not list((Path(fetcher.root) / "store" / "blobs").glob("*"))
+    assert report.errors
+    # deterministic bake: still byte-identical to the baker
+    assert _arena_bytes(fetcher, names[0]) == _arena_bytes(baker, names[0])
+
+
+def test_dead_store_degrades_warmup_with_fallback_bakes(baker, fetcher):
+    names = _make_world(baker, apps=2)
+    _make_world(fetcher, apps=2)
+    _strip_bakes(fetcher)
+    t0 = time.monotonic()
+    report = fetcher.warmup(
+        names, store="http://127.0.0.1:9", policy=POLICY
+    )  # nothing listens there
+    wall = time.monotonic() - t0
+    assert report.degraded
+    assert report.store["fallback_bakes"] == 2
+    assert wall < BOUND_S                 # degrade, don't wedge
+    # the index failure was paid ONCE, not once per app
+    assert fetcher.store_report().fetch_attempts <= POLICY.retry_budget + 1
+    for n in names:
+        np.testing.assert_array_equal(
+            report.images[n]["w"],
+            baker.load(n, strategy="stable-shm")["w"],
+        )
+
+
+def test_store_dies_mid_warmup_degrades_not_wedges(baker, fetcher):
+    """The store serves the index + the first blob, then drops dead.
+    Warmup must complete with a mix of fetched and fallback-baked arenas,
+    all byte-identical to the baker."""
+    names = _make_world(baker, apps=3)
+    _make_world(fetcher, apps=3)
+    _strip_bakes(fetcher)
+    # request 0 = index, request 1 = first blob (+1 resume margin), then dead
+    srv = _serve(baker, StoreFaultPlan(down_after=2))
+    try:
+        _attach(fetcher, srv.url)
+        t0 = time.monotonic()
+        report = fetcher.warmup(names, workers=1)  # deterministic order
+        wall = time.monotonic() - t0
+    finally:
+        srv.stop()
+    assert report.strategy == "stable-remote"
+    assert report.degraded
+    sr = fetcher.store_report()
+    assert sr.blobs_fetched >= 1          # the store was really used...
+    assert sr.fallback_bakes >= 1         # ...and really died mid-warmup
+    assert sr.blobs_fetched + sr.fallback_bakes == 3
+    assert wall < BOUND_S
+    for n in names:
+        assert _arena_bytes(fetcher, n) == _arena_bytes(baker, n)
+
+
+def test_fleet_warm_through_store(baker, fetcher):
+    """One bake, N processes: spawn a real fleet against the fetcher root
+    with only the store URL — workers download-then-publish-to-shm and
+    share one segment per the one-fill contract."""
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    srv = _serve(baker)
+    try:
+        workers = shm_arena.run_fleet(
+            fetcher.root, names[0], processes=3,
+            strategy="stable-remote", timeout=120.0, store_url=srv.url,
+        )
+    finally:
+        srv.stop()
+    assert len(workers) == 3
+    assert not any(w.get("failed") for w in workers), workers
+    assert len({w["segment"] for w in workers}) == 1
+    assert len({w["tensors_digest"] for w in workers}) == 1
+    fills = [w for w in workers if not w["shm_attached"]]
+    assert len(fills) == 1
+    # and the fetched install really is the baker's bytes
+    assert _arena_bytes(fetcher, names[0]) == _arena_bytes(baker, names[0])
+
+
+def test_bogus_index_entry_is_rejected_not_installed(baker, fetcher):
+    """An index that names the wrong (app, closure) for a pair must not
+    get its bytes installed under our key — fallback bake instead."""
+    names = _make_world(baker)
+    _make_world(fetcher)
+    _strip_bakes(fetcher)
+    baker.export_store()
+    idx_path = Path(baker.root) / "store" / "index.json"
+    idx = json.loads(idx_path.read_text())
+    for entry in idx["entries"].values():
+        entry["closure_hash"] = "0" * 32   # lie about the closure
+    idx_path.write_text(json.dumps(idx))
+    srv = StoreServer(Path(baker.root) / "store").start()
+    try:
+        _attach(fetcher, srv.url)
+        img = fetcher.load(names[0], strategy="stable-remote")
+    finally:
+        srv.stop()
+    assert img.stats.store_source == "bake"
+    report = fetcher.store_report()
+    assert report.degraded and report.errors
+    assert _arena_bytes(fetcher, names[0]) == _arena_bytes(baker, names[0])
+
+
+def _blob_len(baker) -> int:
+    summary = baker.export_store()
+    assert summary["entries"] >= 1
+    return summary["blob_bytes"] // summary["entries"]
