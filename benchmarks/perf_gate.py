@@ -1,6 +1,6 @@
 """Perf gate: compare this PR's bench JSON against the committed previous one.
 
-    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_9.json BENCH_8.json \
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_10.json BENCH_9.json \
         [--tolerance 1.25]
 
 Three kinds of checks, all printed as a table:
@@ -47,7 +47,16 @@ Three kinds of checks, all printed as a table:
   hit, never a re-download), ``store/fetch_under_faults`` bounded (a
   truncated + refused fetch recovered inside its retry budget, not a
   wedge), and ``store/quarantined >= 1`` (the corrupt-transfer scenario
-  really exercised the verify-before-admit path).
+  really exercised the verify-before-admit path); and the streaming rows
+  (PR 10): ``serve/ttft_p50``/``serve/ttft_p99`` nonzero and finite with
+  the p99 time-to-first-token bounded by the run's completion p99 (per
+  request TTFT <= full latency, so the order statistics must agree —
+  a violation means the TTFT clock or the reassembly path lies), and the
+  fleet-fill split ``smoke/fleet_fills_cold == 1`` (a genuinely cold
+  root fills exactly once machine-wide) with ``smoke/fleet_fills_warm
+  == 0`` (the rerun attaches). The old single ``smoke/fleet_fills`` row
+  was a measured zero — the smoke harness always ran the fleet against a
+  segment it had already published, so ``<= 1`` could never fail.
 
 Exits non-zero when any check fails (CI runs it as a soft gate, same
 rationale as the PR 3 gate: a slow shared runner must not silently block
@@ -215,12 +224,22 @@ def trajectory_asserts(new: dict, old: dict) -> list[str]:
             f"({new_mmap:.1f}us)",
             new_shm < new_mmap,
         )
-    fleet_fills = require(new, "smoke/fleet_fills", "new")
-    if fleet_fills is not None:
+    # PR 10 measured-zero fix: the single smoke/fleet_fills row could only
+    # ever be 0 (the harness pre-published the segment), so "<=1" was
+    # vacuous. The split rows carry real claims in both temperatures.
+    fills_cold = require(new, "smoke/fleet_fills_cold", "new")
+    if fills_cold is not None:
         check(
-            f"fleet of N processes amortizes to <=1 shm fill "
-            f"(fills={fleet_fills:.0f})",
-            fleet_fills <= 1.0,
+            f"cold fleet fills the shm segment exactly once "
+            f"(fills_cold={fills_cold:.0f})",
+            fills_cold == 1.0,
+        )
+    fills_warm = require(new, "smoke/fleet_fills_warm", "new")
+    if fills_warm is not None:
+        check(
+            f"warm fleet attaches without filling "
+            f"(fills_warm={fills_warm:.0f})",
+            fills_warm == 0.0,
         )
     # serving tier (PR 6): the traffic plane must have measured a real
     # tail latency — present, nonzero, finite. (The p99 value itself is
@@ -326,6 +345,35 @@ def trajectory_asserts(new: dict, old: dict) -> list[str]:
             f"(quarantined={quarantined:.0f})",
             quarantined >= 1.0,
         )
+    # streaming tier (PR 10): time-to-first-token measured for real, and
+    # coherent — per-request TTFT <= full latency, so ttft_p99 must be
+    # bounded by the run's completion p99 (steady, or the rollover-window
+    # p99 when a roll stalled admissions mid-run)
+    ttft_p50 = require(new, "serve/ttft_p50", "new")
+    if ttft_p50 is not None:
+        check(
+            f"serve/ttft_p50 ({ttft_p50:.1f}us) is nonzero and finite",
+            ttft_p50 > 0.0 and math.isfinite(ttft_p50),
+        )
+    ttft_p99 = require(new, "serve/ttft_p99", "new")
+    if ttft_p99 is not None:
+        check(
+            f"serve/ttft_p99 ({ttft_p99:.1f}us) is nonzero and finite",
+            ttft_p99 > 0.0 and math.isfinite(ttft_p99),
+        )
+        if p99 is not None and p99 > 0.0:
+            bound = max(p99, roll_p99 or 0.0)
+            check(
+                f"ttft_p99 ({ttft_p99:.1f}us) <= completion p99 "
+                f"({bound:.1f}us) — first token lands before the last",
+                ttft_p99 <= bound,
+            )
+        if ttft_p50 is not None and ttft_p50 > 0.0:
+            check(
+                f"ttft_p50 ({ttft_p50:.1f}us) <= ttft_p99 "
+                f"({ttft_p99:.1f}us)",
+                ttft_p50 <= ttft_p99,
+            )
     return failures
 
 

@@ -13,9 +13,9 @@ amortizes to at most one shm-segment fill for the whole machine, and that
 the epoch path writes zero journal bytes. Use it in CI to prove the
 benchmark path stays runnable.
 
-Both ``--smoke`` and ``--fast`` also write ``BENCH_9.json``
+Both ``--smoke`` and ``--fast`` also write ``BENCH_10.json``
 ({name: us_per_call}, plus derived ratio/count rows such as
-``smoke/*_speedup_*`` and ``smoke/fleet_fills``) — the machine-readable
+``smoke/*_speedup_*`` and ``smoke/fleet_fills_cold``) — the machine-readable
 perf trajectory, one file per PR, uploaded as a CI artifact and gated
 against the committed previous-PR file by ``benchmarks/perf_gate.py``.
 The serving-tier rows (``serve/*``) and store-tier rows (``store/*``)
@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import sys
 
-BENCH_JSON = "BENCH_9.json"  # perf trajectory of this PR's benchmark pass
+BENCH_JSON = "BENCH_10.json"  # perf trajectory of this PR's benchmark pass
 
 
 def smoke() -> None:
@@ -143,24 +143,42 @@ def _smoke_body(ws) -> None:
     mean, *_ = timeit(warm, warmup=1, trials=3)
     emit("smoke/warmup_fleet", mean, f"apps={1}")
 
-    # true multi-process fleet: N real worker processes attach to the ONE
-    # shm segment the sweep's stable-shm load already published — the
-    # whole machine amortizes to at most one fill (exclusive create)
-    from repro.core.shm_arena import run_fleet
+    # true multi-process fleet, measured in BOTH temperatures. The old
+    # ``smoke/fleet_fills`` row was a measured zero: the sweep's stable-shm
+    # load had already published the segment in-process, so the fleet
+    # always attached warm and "fills" could never be anything but 0.0 —
+    # a claim about the setup, not the protocol. Split it: COLD runs the
+    # fleet against a genuinely empty root (segments unlinked first) and
+    # must fill exactly once machine-wide; WARM reruns over the segment
+    # the cold fleet just published and must fill zero times.
+    from repro.core.shm_arena import run_fleet, unlink_root_segments
 
     import time as _time
 
     n_procs = 3
+    unlink_root_segments(ws.registry)      # genuinely cold root
     t0 = _time.perf_counter()
     workers = run_fleet(ws.root, app.name, processes=n_procs, timeout=180.0)
     fleet_wall = _time.perf_counter() - t0
-    fills = sum(1 for w in workers if not w["shm_attached"])
+    fills_cold = sum(1 for w in workers if not w["shm_attached"])
     segments = {w["segment"] for w in workers}
     assert len(segments) == 1, f"fleet mapped {len(segments)} segments, want 1"
-    assert fills <= 1, f"fleet filled {fills} times, exclusive create allows 1"
+    assert fills_cold == 1, (
+        f"cold fleet filled {fills_cold} times, exclusive create means "
+        f"exactly 1"
+    )
     emit("smoke/fleet_procs", fleet_wall,
-         f"procs={n_procs};fills={fills};attaches={n_procs - fills}")
-    emit_value("smoke/fleet_fills", fills, f"procs={n_procs}")
+         f"procs={n_procs};fills={fills_cold};"
+         f"attaches={n_procs - fills_cold};cold")
+    emit_value("smoke/fleet_fills_cold", fills_cold, f"procs={n_procs}")
+
+    workers = run_fleet(ws.root, app.name, processes=n_procs, timeout=180.0)
+    fills_warm = sum(1 for w in workers if not w["shm_attached"])
+    assert fills_warm == 0, (
+        f"warm fleet filled {fills_warm} times over a published segment"
+    )
+    emit_value("smoke/fleet_fills_warm", fills_warm,
+               f"procs={n_procs};segment stays published")
 
     # observability cost is a real number now, not a 0.0 placeholder: the
     # gate's zero-rejection would (rightly) fail the old row

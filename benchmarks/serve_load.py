@@ -58,9 +58,23 @@ end), reported as us per decoded token.
   serving the rolled-back weights (the adopt call's total wall minus
   the deadline itself).
 
-Rows are MERGED into ``BENCH_9.json`` (``run.py --smoke`` writes the load
+PR 10 turns the measured load into the full serving product: requests
+ride MPMC request rings (``mpmc=True`` — the multi-dispatcher wire), the
+fleet *streams* every token back as a PARTIAL frame, and decode runs
+temperature/top-k sampling with per-request PRNG keys (tokens are a pure
+function of (seed, rid, position), so streams reassemble byte-identical
+to their completion rows — asserted here on every run). Emits:
+
+    serve/ttft_p50, serve/ttft_p99   us rows: enqueue -> first streamed
+                                     token. The streaming claim is
+                                     ttft_p99 landing well under the
+                                     full-completion p99; the perf gate
+                                     asserts nonzero, finite, and
+                                     bounded by the completion p99.
+
+Rows are MERGED into ``BENCH_10.json`` (``run.py --smoke`` writes the load
 rows first in CI; this harness adds the serving rows), and
-``perf_gate.py`` gates the rollover and chaos rows against the
+``perf_gate.py`` gates the rollover, chaos, and TTFT rows against the
 steady-state ones.
 """
 
@@ -72,7 +86,7 @@ import time
 
 import numpy as np
 
-BENCH_JSON = "BENCH_9.json"
+BENCH_JSON = "BENCH_10.json"
 
 ARCH = "mamba2-370m"          # constant-state decode: the serving workhorse
 
@@ -199,11 +213,27 @@ def run(
             max_batch=max_batch,
             rollover_at=rollover_at,
             rollover_fn=rollover_fn if rollover else None,
+            # PR 10: the measured load IS the streaming product — sampled
+            # decode, per-token PARTIAL frames, MPMC request rings
+            stream=True,
+            temperature=0.7,
+            top_k=40,
+            sampling_seed=42,
+            mpmc=True,
         )
         s = rep.summary()
         assert rep.completed == n_requests, f"lost requests: {s}"
         assert rep.failed == 0, f"worker crashes: {s}"
         assert rep.p99_s > 0 and np.isfinite(rep.p99_s), s
+        # streaming contract, asserted on the measured run itself: every
+        # request's spans reassembled complete and byte-identical
+        assert rep.stream_gaps == 0, f"stream gaps: {s}"
+        assert rep.stream_mismatches == 0, f"stream mismatches: {s}"
+        assert len(rep.stream_tokens) == n_requests, s
+        assert len(rep.ttft_s) == n_requests, s
+        # per-request TTFT <= that request's full latency, so the p99s
+        # are ordered too (pointwise domination orders order statistics)
+        assert 0 < rep.ttft_p99_s <= rep.p99_s, s
         tag = (
             f"workers={workers};rate_hz={rate_hz};completed={rep.completed};"
             f"stalls={rep.stalls}"
@@ -213,6 +243,10 @@ def run(
         # so this row stays comparable across trajectories either way
         emit("serve/p50_latency", rep.steady_p50_s, tag)
         emit("serve/p99_latency", rep.steady_p99_s, tag)
+        emit("serve/ttft_p50", rep.ttft_p50_s,
+             f"enqueue->first streamed token;{tag}")
+        emit("serve/ttft_p99", rep.ttft_p99_s,
+             f"enqueue->first streamed token;frames={rep.partial_frames}")
         emit_value("serve/req_per_s", rep.req_per_s, tag)
         emit_value("serve/tok_per_s", rep.tok_per_s, tag)
         emit_value("serve/fleet_ready_s", max(rep.ready_s or [0.0]),

@@ -10,7 +10,7 @@ through ``stable-remote`` and are byte-compared against the baker's
 arenas after every scenario (a benchmark that serves wrong bytes fast is
 not a benchmark).
 
-Rows merged into ``BENCH_9.json`` (after ``run.py --smoke`` writes the
+Rows merged into ``BENCH_10.json`` (after ``run.py --smoke`` writes the
 load-strategy rows; the perf gate reads them from the same file):
 
     store/fetch_cold        — download + verify + install + shm publish,
@@ -32,7 +32,7 @@ import sys
 import time
 from pathlib import Path
 
-BENCH_JSON = "BENCH_9.json"
+BENCH_JSON = "BENCH_10.json"
 BOUND_S = 60.0  # hard sanity bound on any faulted scenario's wall
 
 

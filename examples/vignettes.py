@@ -40,6 +40,13 @@ Vignette 9 — survive a flaky artifact store: one machine bakes and exports
              lands), and finally the store drops dead mid-rollout (warmup
              completes DEGRADED via local fallback bakes) — every loaded
              arena byte-identical to the baker's throughout.
+Vignette 10 — stream a sampled response through a shared ring: workers
+             push every generated token as its own PARTIAL frame on the
+             MPMC response rings (temperature/top-k sampling with
+             per-request PRNG keys), the dispatcher reassembles each
+             stream in seq order and verifies it byte-for-byte against
+             the final completion frame, and the report's TTFT quantiles
+             show the first token landing well before the last.
 """
 
 import numpy as np
@@ -545,6 +552,61 @@ def main() -> None:
     print("  flipped/corrupt bytes blake2b vs index digest  quarantine (+record), clean re-fetch")
     print("  slow-loris stall      per-read timeout         cut the cord, resume")
     print("  dead store            retry budget exhausted   degrade: local bake, degraded=True")
+
+    # ---------------------------------------------------------------- vignette 10
+    print("=== Vignette 10: stream a sampled response through a shared ring ===")
+    # Ivan's users watch tokens appear one at a time: every decode step a
+    # worker pushes a PARTIAL frame (rid, seq, token span) on its response
+    # ring, the dispatcher reassembles each stream strictly in seq order,
+    # and at completion verifies the reassembled stream byte-for-byte
+    # against the authoritative completion frame. Decode samples with
+    # temperature/top-k — token i of request r is a pure function of
+    # (sampling_seed, r, i), so the stream a user sees never depends on
+    # which siblings shared the batch. Request rings run in MPMC mode:
+    # multiple producers reserve slots through a bakery-locked claim
+    # cursor, then write and publish independently.
+    rep10 = run_traffic(
+        ws, "serve:mamba", arch="mamba2-370m",
+        workers=2, n_requests=6, rate_hz=50.0,
+        prompt_len=8, max_new_tokens=6, max_batch=2,
+        stream=True, temperature=0.7, top_k=8, sampling_seed=42,
+        mpmc=True,
+    )
+    assert rep10.failed == 0 and rep10.completed == 6
+    assert rep10.partial_frames == 6 * 6       # every token was streamed
+    assert rep10.stream_gaps == 0              # in-order, no holes
+    assert rep10.stream_mismatches == 0        # reassembly == completion
+    assert len(rep10.stream_tokens) == 6
+    assert all(len(t) == 6 for t in rep10.stream_tokens.values())
+    print(
+        f"  {rep10.partial_frames} PARTIAL frames streamed for "
+        f"{rep10.completed} requests; {rep10.stream_gaps} gaps, "
+        f"{rep10.stream_mismatches} reassembly mismatches (asserted 0)"
+    )
+    assert 0.0 < rep10.ttft_p50_s <= rep10.ttft_p99_s <= rep10.p99_s
+    print(
+        f"  TTFT p50 {rep10.ttft_p50_s * 1e3:.1f}ms / p99 "
+        f"{rep10.ttft_p99_s * 1e3:.1f}ms vs completion p99 "
+        f"{rep10.p99_s * 1e3:.1f}ms — the first token lands well before "
+        f"the last"
+    )
+    # determinism across runs: same (seed, rid, position) -> same stream,
+    # regardless of arrival timing or batch composition
+    rep10b = run_traffic(
+        ws, "serve:mamba", arch="mamba2-370m",
+        workers=1, n_requests=6, rate_hz=200.0,
+        prompt_len=8, max_new_tokens=6, max_batch=3,
+        stream=True, temperature=0.7, top_k=8, sampling_seed=42,
+    )
+    assert set(rep10b.stream_tokens) == set(rep10.stream_tokens)
+    assert all(
+        np.array_equal(rep10b.stream_tokens[r], rep10.stream_tokens[r])
+        for r in rep10.stream_tokens
+    )
+    print(
+        "  re-served with different workers/batching/arrivals: every "
+        "stream byte-identical (per-request PRNG keys)"
+    )
     ws.close()
 
 

@@ -18,6 +18,15 @@ to the dispatcher by shm request/response rings and drives a Poisson load
 (``--rate-hz``, ``--requests``) through ``engine.serve_loop`` — the
 continuous-batching scheduler — reporting sustained req/s, tok/s, and
 p50/p99 end-to-end latency.
+
+With ``--stream`` every generated token comes back as its own PARTIAL
+frame on the response ring (the dispatcher reassembles them in order and
+verifies the reassembled stream byte-for-byte against the completion
+frame), and the report gains time-to-first-token quantiles. ``--temperature``
+and ``--top-k`` switch decode from greedy argmax to batched sampling with
+per-request PRNG keys — token i of request r depends only on
+``(--sampling-seed, r, i)``, never on batch composition. ``--mpmc`` runs
+the request rings in multi-producer mode (bakery-locked claim cursor).
 """
 
 from __future__ import annotations
@@ -64,6 +73,29 @@ def main() -> None:
     ap.add_argument(
         "--requests", type=int, default=32,
         help="number of requests --traffic sends",
+    )
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="with --traffic: stream every token as a PARTIAL frame and "
+             "report TTFT p50/p99 alongside completion latency",
+    )
+    ap.add_argument(
+        "--temperature", type=float, default=0.0,
+        help="with --traffic: sampling temperature (0 = greedy argmax)",
+    )
+    ap.add_argument(
+        "--top-k", type=int, default=0,
+        help="with --traffic: restrict sampling to the k most likely "
+             "tokens (0 = full vocabulary)",
+    )
+    ap.add_argument(
+        "--sampling-seed", type=int, default=0,
+        help="with --traffic: PRNG seed for sampled decode; tokens are a "
+             "pure function of (seed, request id, position)",
+    )
+    ap.add_argument(
+        "--mpmc", action="store_true",
+        help="with --traffic: run request rings in multi-producer mode",
     )
     ap.add_argument("--registry", default=None)
     args = ap.parse_args()
@@ -139,6 +171,11 @@ def main() -> None:
             prompt_len=args.prompt_len,
             max_new_tokens=args.max_new,
             max_batch=args.batch,
+            stream=args.stream,
+            temperature=args.temperature,
+            top_k=args.top_k,
+            sampling_seed=args.sampling_seed,
+            mpmc=args.mpmc,
         )
         payload["traffic"] = rep.summary()
     if args.registry is None:

@@ -6,6 +6,7 @@ from .scheduler import (
     Request,
     ServeLoopReport,
     SlotScheduler,
+    TokenDelta,
     run_serve_loop,
 )
 from .traffic import TrafficReport, run_traffic
@@ -19,6 +20,7 @@ __all__ = [
     "ServeEngine",
     "ServeLoopReport",
     "SlotScheduler",
+    "TokenDelta",
     "TrafficReport",
     "run_serve_loop",
     "run_traffic",

@@ -398,6 +398,11 @@ class ServeEngine:
         max_new_cap: int = 0,
         epoch_watch=None,
         on_epoch=None,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        sampling_seed: int = 0,
+        on_delta=None,
+        priority_aging_s: float = 0.05,
     ):
         """Continuous batching: admit requests into open decode slots.
 
@@ -410,6 +415,12 @@ class ServeEngine:
         ``scheduler.Completion``s go to ``sink``. Requires a positive
         ``cache_len`` (slot K/V rows need decode headroom past the
         prompt). Returns a ``scheduler.ServeLoopReport``.
+
+        ``temperature``/``top_k``/``sampling_seed`` switch the vmapped
+        decode step from greedy argmax to temperature (optionally top-k)
+        sampling with per-request PRNG keys; ``on_delta`` streams every
+        decoded token as a ``scheduler.TokenDelta`` the step it is
+        sampled; ``priority_aging_s`` bounds priority-class starvation.
         """
         from . import scheduler
 
@@ -428,4 +439,9 @@ class ServeEngine:
             max_new_cap=max_new_cap,
             epoch_watch=epoch_watch,
             on_epoch=on_epoch,
+            temperature=temperature,
+            top_k=top_k,
+            sampling_seed=sampling_seed,
+            on_delta=on_delta,
+            priority_aging_s=priority_aging_s,
         )

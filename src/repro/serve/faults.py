@@ -21,6 +21,9 @@ survive:
   dispatch (1-based). No atexit, no cleanup, no goodbye frame: exactly
   what a kernel OOM-kill looks like to the dispatcher, which must notice
   via the response ring's dead owner pid and respawn.
+* ``dup_stream_every`` — every Nth streamed PARTIAL frame is pushed
+  twice (``on_stream_frame``), forcing the dispatcher's seq-keyed
+  reassembly to prove it is idempotent under at-least-once delivery.
 
 ``worker`` restricts a plan to one fleet worker index (``-1`` = any), so
 a chaos run can kill worker 0 while workers 1..N-1 prove the re-route
@@ -48,6 +51,7 @@ class FaultPlan:
     wedge_adopt_s: float = 0.0   # hang the adopt-epoch reload this long
     slow_reload_s: float = 0.0   # slow every epoch reload by this much
     die_at_step: int = 0         # SIGKILL self at decode dispatch N (0=off)
+    dup_stream_every: int = 0    # re-push every Nth PARTIAL frame (0=off)
     worker: int = -1             # fleet worker index this applies to (-1=any)
 
     def to_dict(self) -> dict:
@@ -147,6 +151,17 @@ def on_adopt_reload() -> None:
         time.sleep(wedge)
     if p.slow_reload_s > 0:
         time.sleep(p.slow_reload_s)
+
+
+def on_stream_frame(frame_index: int) -> bool:
+    """Called per PARTIAL frame a worker pushes (1-based). True = push the
+    frame AGAIN — duplicate delivery, which the dispatcher's seq-keyed
+    reassembly must absorb idempotently (at-least-once is the honest
+    delivery contract once re-routes can replay a request's stream)."""
+    p = _ACTIVE
+    if p is None or not p.dup_stream_every:
+        return False
+    return frame_index % p.dup_stream_every == 0
 
 
 def on_decode_step(step_index: int) -> None:

@@ -34,7 +34,6 @@ loop drains queue + in-flight slots after the source signals STOP.
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field, replace
 
 import jax
@@ -52,40 +51,66 @@ STOP = object()
 
 @dataclass(frozen=True)
 class Request:
-    """One unit of traffic: a prompt and how far to decode it."""
+    """One unit of traffic: a prompt and how far to decode it.
+
+    ``enqueued_ts`` is the dispatcher's ``time.monotonic()`` stamp —
+    ``None`` (not ``0.0``: zero is a representable clock reading) means no
+    dispatcher clock exists and the serve loop rebases the deadline to its
+    own acceptance time. ``priority`` is an admission class: higher admits
+    first, FIFO within a class, and waiting requests age upward so a low
+    class is starvation-bounded rather than starved.
+    """
 
     rid: int
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int
-    enqueued_ts: float = 0.0         # dispatcher clock; 0 = unknown
+    enqueued_ts: float | None = None  # dispatcher clock; None = no clock
     deadline_s: float = 0.0          # seconds after enqueue; 0 = no deadline
+    priority: int = 0                # admission class; higher admits first
 
     def expired(self, now: float) -> bool:
-        """Past its deadline (measured from enqueue, CLOCK_MONOTONIC —
-        comparable across processes on one machine)."""
+        """Past its deadline (measured from enqueue; every stamp in the
+        serving tier is ``time.monotonic()`` = CLOCK_MONOTONIC on Linux,
+        the system-wide clock that makes a dispatcher-stamped enqueue
+        comparable inside a worker process)."""
         return (
             self.deadline_s > 0.0
-            and self.enqueued_ts > 0.0
+            and self.enqueued_ts is not None
             and now - self.enqueued_ts > self.deadline_s
         )
 
 
+@dataclass(frozen=True)
+class TokenDelta:
+    """One streamed decode increment: ``tokens`` are sequence positions
+    ``seq .. seq + len(tokens) - 1`` of request ``rid``'s continuation.
+    The consumer reassembles deltas by ``seq`` — arrival order is already
+    correct on one ring, but a re-routed request restarts at seq 0."""
+
+    rid: int
+    seq: int
+    tokens: tuple                    # ints; a span, usually length 1
+
+
 @dataclass
 class Completion:
-    """A finished request: greedy continuation + latency breakdown."""
+    """A finished request: its continuation + latency breakdown."""
 
     rid: int
     tokens: np.ndarray               # (max_new_tokens,) int32
     admitted_ts: float
     finished_ts: float
-    enqueued_ts: float = 0.0
+    enqueued_ts: float | None = None
     status: str = "ok"               # "ok" | "deadline" (expired, partial)
 
     @property
     def latency_s(self) -> float:
         """Queue-to-finish when the enqueue time is known, else
         admit-to-finish."""
-        start = self.enqueued_ts or self.admitted_ts
+        start = (
+            self.enqueued_ts if self.enqueued_ts is not None
+            else self.admitted_ts
+        )
         return self.finished_ts - start
 
 
@@ -106,6 +131,9 @@ class ServeLoopReport:
     coalesced_rollovers: int = 0     # commits superseded before their flip
     rollover_aborts: int = 0         # flips that deadlined and rolled back
     deadline_expired: int = 0        # requests retired with a DEADLINE frame
+    admitted_by_priority: dict = field(default_factory=dict)  # class -> count
+    priority_aged: int = 0           # admissions that out-ranked a higher class
+    deltas_out: int = 0              # streamed TokenDelta frames emitted
 
     def summary(self) -> dict:
         return {
@@ -122,6 +150,9 @@ class ServeLoopReport:
             "coalesced_rollovers": self.coalesced_rollovers,
             "rollover_aborts": self.rollover_aborts,
             "deadline_expired": self.deadline_expired,
+            "admitted_by_priority": dict(self.admitted_by_priority),
+            "priority_aged": self.priority_aged,
+            "deltas_out": self.deltas_out,
         }
 
 
@@ -132,36 +163,78 @@ class _Slot:
     request: Request
     admitted_ts: float
     steps_done: int                  # tokens already in out_buf for this slot
+    first_token: int = -1            # prefill's token, host-side iff streaming
 
 
 class SlotScheduler:
     """The device half of continuous batching for one ``ServeEngine``.
 
     Owns the stacked slot state (caches, next-token feeds, ``out_buf``,
-    step counters) and the two jitted programs that mutate it: ``_step``
-    (vmap-advance every slot one token) and ``_admit`` (splice one B=1
-    cache row in). Built lazily on first admission so the slot template
-    matches whatever cache pytree the model family actually produces.
+    per-slot PRNG keys, step counters) and the two jitted programs that
+    mutate it: ``_step`` (vmap-advance every slot one token) and ``_admit``
+    (splice one B=1 cache row in). Built lazily on first admission so the
+    slot template matches whatever cache pytree the model family actually
+    produces.
+
+    Sampling: ``temperature > 0`` replaces greedy argmax with temperature
+    (optionally top-k) sampling *inside* the vmapped step. Token ``i`` of
+    request ``rid`` is drawn with ``fold_in(fold_in(base, rid), i)`` where
+    ``base = PRNGKey(sampling_seed)`` — a pure function of (seed, rid, i),
+    so a mid-flight admitted row never reuses a sibling slot's key stream,
+    a re-routed request replays the identical continuation on another
+    worker, and streaming vs non-streaming modes are byte-identical. The
+    per-request key is spliced into the stacked ``keys`` state by the same
+    donated ``_admit`` program that splices the cache row.
     """
 
-    def __init__(self, engine, *, max_batch: int, max_new_cap: int = 0):
+    def __init__(
+        self,
+        engine,
+        *,
+        max_batch: int,
+        max_new_cap: int = 0,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        sampling_seed: int = 0,
+        stream: bool = False,
+    ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.engine = engine
         self.slots = max_batch
         self.max_new_cap = max_new_cap   # out_buf width; 0 = first admit's
-        self._state = None           # (cache, toks, out_buf, steps)
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.stream = stream
+        self._base_key = jax.random.PRNGKey(sampling_seed)
+        self._state = None           # (cache, toks, out_buf, steps, keys)
         self.active = np.zeros(max_batch, dtype=bool)
         self.slot_meta: list[_Slot | None] = [None] * max_batch
 
         cfg, params = engine.cfg, engine.params
+        temp, top_k_n = self.temperature, self.top_k
 
-        def _step(params, cache, toks, out_buf, steps, active):
-            def one(c, t):
+        def _pick(logits, key, pos):
+            # greedy vs sampled is a Python-static branch: temperature is
+            # a constructor constant baked into the compiled program
+            if temp <= 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            lg = logits / temp
+            if top_k_n > 0:
+                kth = jax.lax.top_k(lg, top_k_n)[0][..., -1]
+                lg = jnp.where(lg < kth, -jnp.inf, lg)
+            return jax.random.categorical(
+                jax.random.fold_in(key, pos), lg
+            ).astype(jnp.int32)
+
+        self._pick = _pick
+
+        def _step(params, cache, toks, out_buf, steps, keys, active):
+            def one(c, t, k, s):
                 logits, c = models.decode_step(cfg, params, c, t)
-                return jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32), c
+                return _pick(logits[0, -1], k, s), c
 
-            nxt, cache = jax.vmap(one)(cache, toks)
+            nxt, cache = jax.vmap(one)(cache, toks, keys, steps)
             nxt = jnp.where(active, nxt, 0)
             row = jnp.arange(out_buf.shape[0])
             idx = jnp.clip(steps, 0, out_buf.shape[1] - 1)
@@ -169,9 +242,10 @@ class SlotScheduler:
                 jnp.where(active, nxt, out_buf[row, idx])
             )
             steps = steps + active.astype(jnp.int32)
-            return cache, nxt[:, None, None], out_buf, steps
+            return cache, nxt[:, None, None], out_buf, steps, keys
 
-        def _admit(cache, toks, out_buf, steps, row_cache, tok0, idx):
+        def _admit(cache, toks, out_buf, steps, keys, row_cache, tok0,
+                   row_key, idx):
             cache = jax.tree_util.tree_map(
                 lambda s, r: jax.lax.dynamic_update_slice_in_dim(
                     s, r[None].astype(s.dtype), idx, 0
@@ -188,11 +262,20 @@ class SlotScheduler:
             toks = jax.lax.dynamic_update_slice(
                 toks, tok0.reshape(1, 1, 1).astype(jnp.int32), (idx, 0, 0)
             )
-            return cache, toks, out_buf, steps
+            keys = jax.lax.dynamic_update_slice_in_dim(
+                keys, row_key[None].astype(keys.dtype), idx, 0
+            )
+            return cache, toks, out_buf, steps, keys
 
         # donate the stacked state: both programs are in-place row updates
-        self._step_fn = jax.jit(_step, donate_argnums=(1, 2, 3, 4))
-        self._admit_fn = jax.jit(_admit, donate_argnums=(0, 1, 2, 3))
+        self._step_fn = jax.jit(_step, donate_argnums=(1, 2, 3, 4, 5))
+        self._admit_fn = jax.jit(_admit, donate_argnums=(0, 1, 2, 3, 4))
+
+    def _request_key(self, rid: int):
+        """The per-request PRNG key: fold the 64-bit rid into the base in
+        two 32-bit halves (warmup rids exceed uint32)."""
+        k = jax.random.fold_in(self._base_key, rid & 0xFFFFFFFF)
+        return jax.random.fold_in(k, (rid >> 32) & 0xFFFFFFFF)
 
     # --------------------------------------------------------------- state
     @property
@@ -214,6 +297,8 @@ class SlotScheduler:
             jnp.zeros((self.slots, 1, 1), jnp.int32),
             jnp.zeros((self.slots, max_new_cap), jnp.int32),
             jnp.zeros((self.slots,), jnp.int32),
+            jnp.zeros((self.slots,) + self._base_key.shape,
+                      self._base_key.dtype),
         )
 
     # ------------------------------------------------------------ protocol
@@ -238,7 +323,8 @@ class SlotScheduler:
                 jnp.dtype(eng.cfg.dtype),
             )
         logits, row_cache = eng._prefill(eng.params, batch)
-        tok0 = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+        row_key = self._request_key(req.rid)
+        tok0 = self._pick(logits[0, -1], row_key, 0)
         if self._state is None:
             self._init_state(
                 row_cache, self.max_new_cap or max(req.max_new_tokens, 8)
@@ -249,25 +335,49 @@ class SlotScheduler:
                 f"this loop's out_buf holds {self.max_new_cap}; admit the "
                 "longest request first or pass max_new_cap to serve_loop"
             )
-        cache, toks, out_buf, steps = self._state
+        cache, toks, out_buf, steps, keys = self._state
         self._state = self._admit_fn(
-            cache, toks, out_buf, steps, row_cache, tok0, jnp.int32(idx)
+            cache, toks, out_buf, steps, keys, row_cache, tok0, row_key,
+            jnp.int32(idx),
         )
         self.active[idx] = True
-        self.slot_meta[idx] = _Slot(request=req, admitted_ts=now, steps_done=1)
+        meta = _Slot(request=req, admitted_ts=now, steps_done=1)
+        if self.stream:
+            # streaming pays one extra scalar sync per ADMIT (not per
+            # step) so the prefill token can ride the first PARTIAL frame
+            meta.first_token = int(tok0)
+        self.slot_meta[idx] = meta
         return idx
 
-    def step(self) -> None:
-        """Advance every active slot one token (one compiled dispatch)."""
-        cache, toks, out_buf, steps = self._state
-        cache, toks, out_buf, steps = self._step_fn(
-            self.engine.params, cache, toks, out_buf, steps,
+    def step(self) -> list[TokenDelta] | None:
+        """Advance every active slot one token (one compiled dispatch).
+
+        Returns the per-slot token deltas when streaming (one host sync
+        of the (slots,) next-token feed — the per-token cost streaming
+        inherently pays), else None (no sync; tokens stay device-side
+        until ``pop_finished``)."""
+        cache, toks, out_buf, steps, keys = self._state
+        cache, toks, out_buf, steps, keys = self._step_fn(
+            self.engine.params, cache, toks, out_buf, steps, keys,
             jnp.asarray(self.active),
         )
-        self._state = (cache, toks, out_buf, steps)
+        self._state = (cache, toks, out_buf, steps, keys)
+        deltas: list[TokenDelta] | None = None
+        if self.stream:
+            feed = np.asarray(toks)          # (slots, 1, 1): just-sampled
+            deltas = [
+                TokenDelta(
+                    rid=meta.request.rid,
+                    seq=meta.steps_done,     # tokens already out = position
+                    tokens=(int(feed[i, 0, 0]),),
+                )
+                for i, meta in enumerate(self.slot_meta)
+                if meta is not None
+            ]
         for meta in self.slot_meta:
             if meta is not None:
                 meta.steps_done += 1
+        return deltas
 
     def pop_finished(self, now: float) -> list[Completion]:
         """Retire every slot whose host-mirrored step count hit its target.
@@ -341,6 +451,11 @@ def run_serve_loop(
     epoch_watch=None,
     on_epoch=None,
     watch_interval_s: float = 0.02,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    sampling_seed: int = 0,
+    on_delta=None,
+    priority_aging_s: float = 0.05,
 ) -> ServeLoopReport:
     """Drive continuous batching until the source signals ``STOP``.
 
@@ -377,15 +492,63 @@ def run_serve_loop(
       expired requests (queued or in-flight) are retired with a
       ``status="deadline"`` completion carrying whatever partial row they
       earned — a structured DEADLINE frame, never a silent drop.
+
+    **Priority admission**: the accepted queue admits by priority class
+    (higher first), FIFO within a class. Starvation is bounded by aging —
+    a request's effective priority gains one class per ``priority_aging_s``
+    it has waited, so a saturating high-priority stream delays a low
+    request by at most ``(gap) * priority_aging_s``, never forever.
+    ``admitted_by_priority`` counts admissions per static class and
+    ``priority_aged`` counts admissions that out-ranked a queued higher
+    static class purely through age.
+
+    **Streaming** (``on_delta``): when given, every decoded token is
+    surfaced as a ``TokenDelta(rid, seq, tokens)`` the step it is sampled
+    (the prefill token as seq 0 at admission), in seq order per request —
+    the per-token frames the traffic plane forwards as PARTIAL frames.
+
+    **Sampling**: ``temperature``/``top_k``/``sampling_seed`` select
+    temperature (optionally top-k) sampling in the vmapped decode step;
+    per-request PRNG keys are derived as ``fold_in(base, rid)`` so
+    continuations are reproducible regardless of batch composition.
+    All timestamps are ``time.monotonic()`` — the system-wide
+    CLOCK_MONOTONIC that makes dispatcher-stamped enqueue times
+    comparable here, in a different process.
     """
     report = ServeLoopReport()
-    sched = SlotScheduler(engine, max_batch=max_batch, max_new_cap=max_new_cap)
-    queue: deque[Request] = deque()
+    sched = SlotScheduler(
+        engine, max_batch=max_batch, max_new_cap=max_new_cap,
+        temperature=temperature, top_k=top_k, sampling_seed=sampling_seed,
+        stream=on_delta is not None,
+    )
+    queue: list[tuple[Request, int, float]] = []  # (req, arrival, accepted_ts)
+    arrivals = 0
     draining = False
     pending_epoch = None             # EpochChange waiting for the boundary
     next_watch = 0.0
     stall_t0 = 0.0
-    t0 = time.perf_counter()
+    t0 = time.monotonic()
+
+    def _pick_next(now: float) -> Request:
+        """Priority-then-FIFO with aging: highest effective class wins,
+        oldest arrival breaks ties within a class."""
+        best = None
+        for entry in queue:
+            req, arrival, accepted = entry
+            eff = req.priority
+            if priority_aging_s > 0:
+                eff += int((now - accepted) / priority_aging_s)
+            key = (eff, -arrival)
+            if best is None or key > best[0]:
+                best = (key, entry)
+        _, entry = best
+        queue.remove(entry)
+        req = entry[0]
+        if any(q.priority > req.priority for q, _, _ in queue):
+            report.priority_aged += 1
+        by = report.admitted_by_priority
+        by[req.priority] = by.get(req.priority, 0) + 1
+        return req
 
     while True:
         # 0) rollover handshake: notice a landed commit (throttled), flip
@@ -393,7 +556,7 @@ def run_serve_loop(
         # Polling CONTINUES while a flip is pending: back-to-back commits
         # landing mid-drain coalesce to the newest generation (one flip,
         # counted per superseded commit), instead of queueing stale flips.
-        now = time.perf_counter()
+        now = time.monotonic()
         if epoch_watch is not None and now >= next_watch:
             next_watch = now + watch_interval_s
             change = epoch_watch.poll()
@@ -413,7 +576,7 @@ def run_serve_loop(
                     # weights we have — a wedged flip never hangs the loop
                     report.rollover_aborts += 1
             report.rollovers += 1
-            report.rollover_stall_s += time.perf_counter() - stall_t0
+            report.rollover_stall_s += time.monotonic() - stall_t0
             pending_epoch = None
 
         # 1) accept traffic while there is queue room (rollover included:
@@ -425,21 +588,25 @@ def run_serve_loop(
             if got is STOP:
                 draining = True
                 break
-            if got.deadline_s > 0 and got.enqueued_ts == 0.0:
-                # local source with no dispatcher clock: the deadline
-                # counts from acceptance, or it could never fire
-                got = replace(got, enqueued_ts=time.perf_counter())
-            queue.append(got)
+            now = time.monotonic()
+            if got.deadline_s > 0 and got.enqueued_ts is None:
+                # local source with no dispatcher clock (None, NOT a zero
+                # reading — 0.0 is a representable monotonic stamp): the
+                # deadline counts from acceptance, or it could never fire
+                got = replace(got, enqueued_ts=now)
+            queue.append((got, arrivals, now))
+            arrivals += 1
         report.peak_queue = max(report.peak_queue, len(queue))
 
         # 1b) deadline sweep — queued requests first (they expire without
         # ever costing a prefill), then in-flight slots (freed with their
         # partial row). Either way the caller gets a structured DEADLINE
         # completion; nothing is silently dropped.
-        now = time.perf_counter()
+        now = time.monotonic()
         if queue:
-            still = deque()
-            for req in queue:
+            still = []
+            for entry in queue:
+                req = entry[0]
                 if req.expired(now):
                     report.deadline_expired += 1
                     sink(
@@ -453,7 +620,7 @@ def run_serve_loop(
                         )
                     )
                 else:
-                    still.append(req)
+                    still.append(entry)
             queue = still
         for comp in sched.expire(now):
             report.deadline_expired += 1
@@ -461,20 +628,32 @@ def run_serve_loop(
 
         # 2) admit into free slots (prefill interleaves with decode here);
         # held back while a generation flip waits for in-flight slots
-        now = time.perf_counter()
+        now = time.monotonic()
         while pending_epoch is None and queue and sched.free_slots:
-            sched.admit(queue.popleft(), now)
+            req = _pick_next(now)
+            idx = sched.admit(req, now)
             report.admitted += 1
+            if on_delta is not None:
+                meta = sched.slot_meta[idx]
+                on_delta(
+                    TokenDelta(rid=req.rid, seq=0,
+                               tokens=(meta.first_token,))
+                )
+                report.deltas_out += 1
         report.peak_active = max(report.peak_active, sched.n_active)
 
         # 3) advance every active slot one token
         if sched.n_active:
             faults.on_decode_step(report.steps + 1)
-            sched.step()
+            deltas = sched.step()
             report.steps += 1
+            if on_delta is not None and deltas:
+                for d in deltas:
+                    on_delta(d)
+                report.deltas_out += len(deltas)
 
             # 4) retire finished requests (one host sync each)
-            for comp in sched.pop_finished(time.perf_counter()):
+            for comp in sched.pop_finished(time.monotonic()):
                 report.completed += 1
                 report.tokens_out += comp.tokens.shape[0]
                 sink(comp)
@@ -485,5 +664,5 @@ def run_serve_loop(
         else:
             time.sleep(idle_sleep_s)
 
-    report.wall_s = time.perf_counter() - t0
+    report.wall_s = time.monotonic() - t0
     return report

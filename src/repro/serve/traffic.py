@@ -28,11 +28,16 @@ cross-process clock agreement beyond CLOCK_MONOTONIC being system-wide).
 
 Wire format (fixed little-endian structs + int32 token payloads):
 
-    request    <qiidd>  rid, max_new, n_tokens, enqueued_ts, deadline_s
-               + tokens (deadline_s: seconds from enqueue; 0 = none)
+    request    <qiiddi> rid, max_new, n_tokens, enqueued_ts, deadline_s,
+               priority + tokens (deadline_s: seconds from enqueue; 0 =
+               none; enqueued_ts: the dispatcher's time.monotonic() stamp,
+               NaN = no dispatcher clock — NaN, not 0.0, because zero is a
+               representable clock reading that must rebase nothing)
     completion <qiiddd> rid, status, n_tokens, admitted, finished,
                enqueued + tokens (status: 0 ok, 1 DEADLINE — the request
-               expired and came back with its partial row, never dropped)
+               expired and came back with its partial row, never dropped;
+               2 PARTIAL — a streamed token span: the ``admitted`` field
+               carries the span's starting seq, the payload its tokens)
     rid sentinels: -1 STOP (drain and exit), -2 worker READY (engine
     built; payload = per-worker spin-up seconds), -3 worker ERROR
     (payload = utf-8 traceback excerpt, surfaced in the report instead of
@@ -40,6 +45,24 @@ Wire format (fixed little-endian structs + int32 token payloads):
     payload = JSON {worker, epoch_gen, digest} where digest content-hashes
     the tensors the worker now serves — the dispatcher verifies it against
     an independent load of the new generation).
+
+**Streaming** (``run_traffic(..., stream=True)``): workers run the serve
+loop with an ``on_delta`` sink, so every decoded token leaves as a
+PARTIAL frame (rid + seq + span) the step it is sampled — the prefill
+token as seq 0 at admission. The dispatcher reassembles spans by seq
+(idempotent under duplicate delivery, so a re-routed request's replayed
+stream is absorbed, not double-counted), records time-to-first-token per
+request (``ttft_p50_s``/``ttft_p99_s``), and at completion verifies the
+reassembled sequence against the completion frame's authoritative row:
+gaps, duplicates, and mismatches are counted separately in the report
+and are all zero in a healthy run. Per-request sampling keys are derived
+from the rid, so a re-routed request re-streams byte-identical spans.
+
+**MPMC rings** (``run_traffic(..., mpmc=True)``): request rings are
+created in ``core.shm_ring``'s multi-producer mode (bakery-lock reserve ->
+write -> publish) instead of SPSC — the topology that lets several
+dispatcher processes feed one worker. The single-dispatcher drive is
+unchanged; it just exercises the claim path end to end.
 
 **Supervision** (``run_traffic(..., supervise=True)``): the dispatcher
 doubles as a supervisor. A worker that dies — SIGKILL included — is
@@ -67,6 +90,7 @@ in progress (``rollover_p99_s``) from steady state.
 
 from __future__ import annotations
 
+import math
 import multiprocessing as mp
 import struct
 import time
@@ -77,11 +101,14 @@ import numpy as np
 
 from repro.core.shm_ring import ShmRing, ShmRingError, ring_owner_alive
 
-_REQ_HDR = struct.Struct("<qiidd")   # rid, max_new, n_toks, enqueued, deadline
+# rid, max_new, n_toks, enqueued (NaN = no clock), deadline, priority
+_REQ_HDR = struct.Struct("<qiiddi")
 _RSP_HDR = struct.Struct("<qiiddd")  # rid, status, n_toks, admitted, fin, enq
 _ST_OK = 0
 _ST_DEADLINE = 1
-_STATUS_NAMES = {_ST_OK: "ok", _ST_DEADLINE: "deadline"}
+_ST_PARTIAL = 2                      # streamed span; `admitted` carries seq
+_STATUS_NAMES = {_ST_OK: "ok", _ST_DEADLINE: "deadline",
+                 _ST_PARTIAL: "partial"}
 _STATUS_CODES = {v: k for k, v in _STATUS_NAMES.items()}
 _RID_STOP = -1
 _RID_READY = -2
@@ -94,31 +121,46 @@ RING_SLOTS = 64                          # per ring; queue depth per worker
 
 # ------------------------------------------------------------------- wire
 def encode_request(rid: int, prompt: np.ndarray, max_new: int,
-                   enqueued_ts: float, deadline_s: float = 0.0) -> bytes:
+                   enqueued_ts: float | None, deadline_s: float = 0.0,
+                   priority: int = 0) -> bytes:
     toks = np.ascontiguousarray(prompt, dtype="<i4")
+    enq = math.nan if enqueued_ts is None else enqueued_ts
     return (
-        _REQ_HDR.pack(rid, max_new, toks.size, enqueued_ts, deadline_s)
+        _REQ_HDR.pack(rid, max_new, toks.size, enq, deadline_s, priority)
         + toks.tobytes()
     )
 
 
 def decode_request(data: bytes):
-    rid, max_new, n, enq, deadline = _REQ_HDR.unpack_from(data)
+    rid, max_new, n, enq, deadline, priority = _REQ_HDR.unpack_from(data)
     if rid == _RID_STOP:
-        return rid, None, 0, 0.0, 0.0
+        return rid, None, 0, None, 0.0, 0
     toks = np.frombuffer(data, dtype="<i4", count=n, offset=_REQ_HDR.size)
-    return rid, toks.astype(np.int32), max_new, enq, deadline
+    enq = None if math.isnan(enq) else enq
+    return rid, toks.astype(np.int32), max_new, enq, deadline, priority
 
 
 def encode_completion(rid: int, tokens: np.ndarray, admitted: float,
-                      finished: float, enqueued: float,
+                      finished: float, enqueued: float | None,
                       status: str = "ok") -> bytes:
     toks = np.ascontiguousarray(tokens, dtype="<i4")
+    enq = math.nan if enqueued is None else enqueued
     return (
         _RSP_HDR.pack(
             rid, _STATUS_CODES.get(status, _ST_OK), toks.size,
-            admitted, finished, enqueued,
+            admitted, finished, enq,
         )
+        + toks.tobytes()
+    )
+
+
+def encode_partial(rid: int, seq: int, tokens, ts: float = 0.0) -> bytes:
+    """One streamed span: tokens at positions seq..seq+len-1 of rid's
+    continuation. The seq rides the `admitted` field (exact for any seq a
+    ring could carry), the worker's push stamp rides `finished`."""
+    toks = np.ascontiguousarray(tokens, dtype="<i4")
+    return (
+        _RSP_HDR.pack(rid, _ST_PARTIAL, toks.size, float(seq), ts, math.nan)
         + toks.tobytes()
     )
 
@@ -134,6 +176,7 @@ def decode_completion(data: bytes):
         return rid, blob, admitted, 0.0, 0.0, "ok"
     toks = np.frombuffer(data, dtype="<i4", count=n, offset=_RSP_HDR.size)
     name = _STATUS_NAMES.get(status, "ok")
+    enq = None if math.isnan(enq) else enq
     return rid, toks.astype(np.int32), admitted, finished, enq, name
 
 
@@ -178,6 +221,10 @@ def _traffic_worker(
     slot_bytes: int,
     fault_plan: dict | None = None,
     adopt_deadline_s: float = 0.0,
+    stream: bool = False,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    sampling_seed: int = 0,
 ) -> None:
     """One serving worker: epoch-path engine + serve_loop over the rings.
 
@@ -209,7 +256,7 @@ def _traffic_worker(
         slots=RING_SLOTS, slot_bytes=slot_bytes,
     )
     try:
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         cfg = get_config(arch, smoke=True)
         engine = ServeEngine.from_workspace(
             cfg, ws, app_name, strategy=strategy, cache_len=cache_len
@@ -219,7 +266,7 @@ def _traffic_worker(
         )
         _push_blocking(
             rsp,
-            _encode_blob(_RID_READY, b"", time.perf_counter() - t0),
+            _encode_blob(_RID_READY, b"", time.monotonic() - t0),
             timeout=30.0,
         )
 
@@ -227,12 +274,12 @@ def _traffic_worker(
             data = req.pop()
             if data is None:
                 return None
-            rid, toks, max_new, enq, deadline = decode_request(data)
+            rid, toks, max_new, enq, deadline, priority = decode_request(data)
             if rid == _RID_STOP:
                 return STOP
             return Request(
                 rid=rid, prompt=toks, max_new_tokens=max_new,
-                enqueued_ts=enq, deadline_s=deadline,
+                enqueued_ts=enq, deadline_s=deadline, priority=priority,
             )
 
         def sink(comp):
@@ -245,6 +292,23 @@ def _traffic_worker(
                 ),
                 timeout=60.0,
             )
+
+        on_delta = None
+        if stream:
+            frames_out = 0
+
+            def on_delta(d):
+                # every decoded token leaves the moment it is sampled: a
+                # PARTIAL frame (rid + seq + span) ahead of the final
+                # authoritative completion frame on the same SPSC ring
+                nonlocal frames_out
+                frames_out += 1
+                frame = encode_partial(
+                    d.rid, d.seq, list(d.tokens), time.monotonic()
+                )
+                _push_blocking(rsp, frame, timeout=60.0)
+                if faults.on_stream_frame(frames_out):
+                    _push_blocking(rsp, frame, timeout=60.0)
 
         # blue/green: notice sibling commits between requests; flip at an
         # empty request boundary and tell the dispatcher what we now serve
@@ -278,6 +342,8 @@ def _traffic_worker(
         engine.serve_loop(
             source, sink, max_batch=max_batch, max_new_cap=max_new_cap,
             epoch_watch=watch, on_epoch=on_epoch,
+            temperature=temperature, top_k=top_k,
+            sampling_seed=sampling_seed, on_delta=on_delta,
         )
         req.close()
         rsp.close()
@@ -319,10 +385,34 @@ class TrafficReport:
     rerouted_requests: int = 0          # in-flight requests re-sent elsewhere
     deadline_expired: int = 0           # completions that came back DEADLINE
     kill_latencies_s: list = field(default_factory=list)  # rerouted req e2e
+    # streaming (populated when stream=True):
+    partial_frames: int = 0             # PARTIAL frames received
+    ttft_s: list = field(default_factory=list)   # enqueue -> first PARTIAL
+    stream_gaps: int = 0                # seqs missing at completion time
+    stream_dup_frames: int = 0          # duplicate spans absorbed (not errors)
+    stream_mismatches: int = 0          # reassembly != completion frame row
+    stream_tokens: dict = field(default_factory=dict)  # rid -> reassembled
 
     @property
     def failed(self) -> int:
         return len(self.worker_errors)
+
+    def ttft_quantile(self, q: float) -> float:
+        if not self.ttft_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.ttft_s), q))
+
+    @property
+    def ttft_p50_s(self) -> float:
+        """Median enqueue -> first streamed token (0.0 off-stream)."""
+        return self.ttft_quantile(50.0)
+
+    @property
+    def ttft_p99_s(self) -> float:
+        """p99 time-to-first-token: the streaming claim is this landing
+        well under the full-completion p99 (a client starts reading at
+        the prefill token, not at the last decode step)."""
+        return self.ttft_quantile(99.0)
 
     @property
     def req_per_s(self) -> float:
@@ -421,6 +511,13 @@ class TrafficReport:
             "deadline_expired": self.deadline_expired,
             "kill_completions": len(self.kill_latencies_s),
             "kill_p99_latency_s": round(self.kill_p99_s, 4),
+            # streaming counters are honest zeros when stream=False
+            "partial_frames": self.partial_frames,
+            "ttft_p50_s": round(self.ttft_p50_s, 4),
+            "ttft_p99_s": round(self.ttft_p99_s, 4),
+            "stream_gaps": self.stream_gaps,
+            "stream_dup_frames": self.stream_dup_frames,
+            "stream_mismatches": self.stream_mismatches,
         }
 
 
@@ -447,6 +544,12 @@ def run_traffic(
     adopt_deadline_s: float = 0.0,
     supervise: bool = False,
     faults: dict | None = None,
+    stream: bool = False,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    sampling_seed: int = 0,
+    priorities=None,
+    mpmc: bool = False,
 ) -> TrafficReport:
     """Drive a Poisson request load through a spawned serving fleet.
 
@@ -492,6 +595,22 @@ def run_traffic(
       (``report.kill_p99_s``) and zero lost requests.
     * ``faults`` — a ``serve.faults.FaultPlan`` as a dict, shipped to the
       targeted worker's process (respawned workers get none).
+
+    Serving-surface knobs (the PR 10 streaming tier):
+
+    * ``stream`` — workers push every decoded token as a PARTIAL frame;
+      the dispatcher reassembles per-rid spans by seq, measures TTFT, and
+      verifies the reassembly byte-for-byte against each completion frame
+      (``stream_gaps``/``stream_dup_frames``/``stream_mismatches``).
+    * ``temperature``/``top_k``/``sampling_seed`` — temperature (top-k)
+      sampling in the workers' vmapped decode step; keys derive from the
+      rid, so re-routes and stream-vs-batch modes stay byte-identical.
+    * ``priorities`` — optional per-request admission classes (array of
+      ints, indexed by request); higher classes admit first, aged so
+      lower classes are starvation-bounded.
+    * ``mpmc`` — create request rings in multi-producer mode (the
+      claim-counter protocol that lets several dispatchers share one req
+      ring) instead of SPSC.
     """
     cache_len = cache_len or (prompt_len + max_new_tokens + 4)
     session = session or f"traffic-{uuid.uuid4().hex[:8]}"
@@ -505,6 +624,10 @@ def run_traffic(
         ShmRing.create(
             ws.registry, req_channel(session, i),
             slots=RING_SLOTS, slot_bytes=slot_bytes,
+            # mpmc: this dispatcher takes seat 0; additional dispatchers
+            # would attach with their own producer seats
+            producers=1 if mpmc else 0,
+            producer_id=0 if mpmc else None,
         )
         for i in range(workers)
     ]
@@ -513,6 +636,7 @@ def run_traffic(
             ws.root, app_name, arch, strategy, session, i,
             cache_len, max_batch, max_new_tokens, slot_bytes,
             plan, adopt_deadline_s,
+            stream, temperature, top_k, sampling_seed,
         )
 
     procs = [
@@ -547,6 +671,11 @@ def run_traffic(
     done_rids: set[int] = set()
     rerouted_rids: set[int] = set()
     restarts_per = [0] * workers
+    # streaming reassembly: per-rid spans keyed by seq (idempotent under
+    # duplicate delivery), plus the dispatcher-side send stamp for TTFT
+    send_ts: dict[int, float] = {}
+    spans: dict[int, dict[int, np.ndarray]] = {}
+    ttft_seen: set[int] = set()
 
     def _reap(i: int, blob: bytes | None) -> None:
         """Record worker i's death as a structured error, once."""
@@ -605,6 +734,29 @@ def run_traffic(
             owner[rid] = t
             rerouted_rids.add(rid)
             report.rerouted_requests += 1
+            # the survivor replays the request's WHOLE stream from seq 0
+            # (rid-derived sampling keys make it byte-identical); drop the
+            # corpse's partial spans so reassembly sees one clean pass
+            spans.pop(rid, None)
+
+    def _verify_stream(rid: int, final_row: np.ndarray) -> None:
+        """At completion, check the reassembled stream against the
+        completion frame's authoritative row: every seq present exactly
+        once (gaps/dups counted separately) and byte-identical tokens."""
+        sp = spans.pop(rid, {})
+        flat: dict[int, int] = {}
+        for s, arr in sp.items():
+            for off, tok in enumerate(np.asarray(arr).tolist()):
+                flat.setdefault(s + off, tok)
+        want = int(final_row.size)
+        missing = [i for i in range(want) if i not in flat]
+        if missing:
+            report.stream_gaps += len(missing)
+            return
+        rec = np.asarray([flat[i] for i in range(want)], np.int32)
+        report.stream_tokens[rid] = rec
+        if not np.array_equal(rec, np.asarray(final_row, np.int32)):
+            report.stream_mismatches += 1
 
     def _drain() -> None:
         nonlocal last_recv, warmed, roll_active
@@ -624,10 +776,28 @@ def run_traffic(
                     )
                     if roll_active and len(report.adoptions) >= sum(alive):
                         # every surviving worker now serves generation N+1
-                        report.rollover_wall_s = time.perf_counter() - roll_t0
+                        report.rollover_wall_s = time.monotonic() - roll_t0
                         roll_active = False
                 elif rid == _RID_ERROR:
                     _reap(i, payload)
+                elif status == "partial":
+                    # streamed span: reassemble by seq. Late frames for a
+                    # completed rid and duplicate seqs (re-route replay,
+                    # dup-delivery faults) are absorbed idempotently.
+                    if rid >= _RID_WARM or rid in done_rids:
+                        continue
+                    report.partial_frames += 1
+                    seq = int(a)
+                    sp = spans.setdefault(rid, {})
+                    if seq in sp:
+                        report.stream_dup_frames += 1
+                    else:
+                        sp[seq] = payload
+                    if rid not in ttft_seen:
+                        ttft_seen.add(rid)
+                        st = send_ts.get(rid)
+                        if st is not None:
+                            report.ttft_s.append(time.monotonic() - st)
                 elif rid >= _RID_WARM:
                     if rid not in done_rids:
                         done_rids.add(rid)
@@ -637,20 +807,24 @@ def run_traffic(
                         continue     # duplicate: replayed AND re-routed
                     done_rids.add(rid)
                     owner.pop(rid, None)
-                    now = time.perf_counter()
+                    now = time.monotonic()
                     last_recv = max(last_recv, now)
                     report.completed += 1
                     if status == "deadline":
                         # structured DEADLINE frame: answered, not served
                         report.deadline_expired += 1
+                        spans.pop(rid, None)  # partial stream: unverifiable
                     else:
                         report.tokens_out += int(payload.size)
-                        report.latencies_s.append(now - enq)
-                        if roll_active:
-                            report.rollover_latencies_s.append(now - enq)
-                        else:
-                            report.steady_latencies_s.append(now - enq)
-                    if rid in rerouted_rids:
+                        if enq is not None:
+                            report.latencies_s.append(now - enq)
+                            if roll_active:
+                                report.rollover_latencies_s.append(now - enq)
+                            else:
+                                report.steady_latencies_s.append(now - enq)
+                        if stream:
+                            _verify_stream(rid, payload)
+                    if rid in rerouted_rids and enq is not None:
                         report.kill_latencies_s.append(now - enq)
             if alive[i] and not procs[i].is_alive() and procs[i].exitcode:
                 if supervise:
@@ -665,7 +839,7 @@ def run_traffic(
             for j in range(warmup_per_worker):
                 wrid = _RID_WARM + w * warmup_per_worker + j
                 frame = encode_request(
-                    wrid, prompts[(w + j) % n_requests], max_new_tokens, 0.0,
+                    wrid, prompts[(w + j) % n_requests], max_new_tokens, None,
                 )
                 _push_blocking(req_rings[w], frame, timeout=30.0)
                 sent_frames[wrid] = frame
@@ -688,7 +862,7 @@ def run_traffic(
                 # roll the world under live load: the commit lands here,
                 # on the dispatcher, while workers keep serving gen N
                 report.rollover_at = rollover_at
-                roll_t0 = time.perf_counter()
+                roll_t0 = time.monotonic()
                 roll_active = True
                 rollover_fn()
             time.sleep(gaps[k])
@@ -705,12 +879,15 @@ def run_traffic(
                     )
                 sent = False
                 for t in targets:
+                    stamp = time.monotonic()
                     frame = encode_request(
-                        k, prompts[k], max_new_tokens, time.perf_counter(),
+                        k, prompts[k], max_new_tokens, stamp,
                         request_deadline_s,
+                        0 if priorities is None else int(priorities[k]),
                     )
                     if req_rings[t].push(frame):
                         sent_frames[k] = frame
+                        send_ts[k] = stamp
                         owner[k] = t
                         nxt = (t + 1) % workers
                         sent = True
@@ -723,10 +900,10 @@ def run_traffic(
                 time.sleep(0.001)
             report.sent += 1
             if first_send == 0.0:
-                first_send = time.perf_counter()
+                first_send = time.monotonic()
 
         # ---- drain phase: STOP each worker, collect the tail
-        stop_frame = _REQ_HDR.pack(_RID_STOP, 0, 0, 0.0, 0.0)
+        stop_frame = _REQ_HDR.pack(_RID_STOP, 0, 0, 0.0, 0.0, 0)
         for i, ring in enumerate(req_rings):
             if not alive[i]:
                 continue

@@ -296,7 +296,8 @@ def test_request_deadline_returns_structured_frame():
     cfg, engine = _mk_engine()
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size, (2, 10), dtype=np.int32)
-    now = time.perf_counter()
+    # the serving tier's one clock domain: stamps are time.monotonic()
+    now = time.monotonic()
     feed = iter(
         [
             # already a full second past its budget when accepted
@@ -593,3 +594,82 @@ def test_request_deadline_over_the_wire(shm_ws):
     assert rep.deadline_expired > 0, s
     # every completion is accounted for exactly once
     assert rep.deadline_expired + len(rep.latencies_s) == n, s
+
+
+def test_sigkilled_worker_midstream_rerouted_stream_intact(shm_ws):
+    """PR 10 acceptance: worker 0 SIGKILLs itself MID-STREAM. The
+    supervisor re-routes its in-flight requests; the survivor replays
+    each re-routed stream from seq 0 (sampling keys are a pure function
+    of (seed, rid, i), so the replay is byte-identical) and the
+    dispatcher's reassembly ends with zero gaps, zero duplicate seqs,
+    and zero mismatches against the completion rows."""
+    from repro.serve import run_traffic
+
+    ws = shm_ws
+    _, app_name = _publish_model(ws, "mamba2-370m")
+
+    n, max_new = 10, 4
+    rep = run_traffic(
+        ws,
+        app_name,
+        arch="mamba2-370m",
+        workers=2,
+        n_requests=n,
+        rate_hz=100.0,
+        prompt_len=10,
+        max_new_tokens=max_new,
+        max_batch=2,
+        timeout=JOIN_S * 2,
+        supervise=True,
+        stream=True,
+        temperature=0.7,
+        top_k=8,
+        sampling_seed=42,
+        # dies AFTER its warmup request (4 decode steps) — mid stream
+        faults={"die_at_step": 6, "worker": 0},
+    )
+    s = rep.summary()
+    assert rep.sent == n and rep.completed == n, s      # zero lost
+    assert rep.restarts >= 1, s
+    assert rep.rerouted_requests >= 1, s
+    assert rep.failed == 0, s
+    assert rep.stream_gaps == 0, s
+    assert rep.stream_mismatches == 0, s
+    # every stream reassembled complete: seqs 0..max_new-1 exactly once
+    assert set(rep.stream_tokens) == set(range(n)), s
+    for rid, toks in rep.stream_tokens.items():
+        assert len(toks) == max_new, (rid, toks, s)
+    assert 0 < rep.ttft_p99_s and np.isfinite(rep.ttft_p99_s), s
+
+
+def test_duplicated_stream_frames_absorbed_idempotently(shm_ws):
+    """At-least-once delivery: a fault plan re-pushes every 2nd PARTIAL
+    frame. The dispatcher's seq-keyed reassembly must count the dups and
+    absorb them — no gaps, no mismatches, streams still complete."""
+    from repro.serve import run_traffic
+
+    ws = shm_ws
+    _, app_name = _publish_model(ws, "mamba2-370m")
+
+    n, max_new = 6, 4
+    rep = run_traffic(
+        ws,
+        app_name,
+        arch="mamba2-370m",
+        workers=1,
+        n_requests=n,
+        rate_hz=200.0,
+        prompt_len=10,
+        max_new_tokens=max_new,
+        max_batch=2,
+        timeout=JOIN_S * 2,
+        stream=True,
+        faults={"dup_stream_every": 2},
+    )
+    s = rep.summary()
+    assert rep.sent == n and rep.completed == n and rep.failed == 0, s
+    assert rep.stream_dup_frames > 0, s       # the fault actually fired
+    assert rep.stream_gaps == 0, s
+    assert rep.stream_mismatches == 0, s
+    for rid, toks in rep.stream_tokens.items():
+        assert len(toks) == max_new, (rid, toks, s)

@@ -33,12 +33,15 @@ def _new_fixture(**overrides) -> dict:
         "smoke/stable-shm": 10.0,
         "smoke/lazy": 700.0,
         "smoke/fleet_procs": 1.5e6,
-        "smoke/fleet_fills": 1.0,
+        "smoke/fleet_fills_cold": 1.0,
+        "smoke/fleet_fills_warm": 0.0,
         "smoke/mmap_speedup_vs_dynamic": 5.7,
         "smoke/cached_speedup_vs_mmap": 87.5,
         "smoke/journal_epoch_overhead": 0.0,
         "serve/p50_latency": 20000.0,
         "serve/p99_latency": 36000.0,
+        "serve/ttft_p50": 15000.0,
+        "serve/ttft_p99": 30000.0,
         "serve/req_per_s": 120.0,
         "serve/tok_per_s": 1000.0,
         "serve/rollover_p99_latency": 52000.0,
@@ -107,6 +110,9 @@ def test_is_derived_classifies_unsweepable_rows():
     # the clean fetch paths ARE swept once both trajectories carry them
     assert not perf_gate.is_derived("store/fetch_cold")
     assert not perf_gate.is_derived("store/fetch_warm")
+    # TTFT rows (PR 10) are steady-state latencies: swept like p50/p99
+    assert not perf_gate.is_derived("serve/ttft_p50")
+    assert not perf_gate.is_derived("serve/ttft_p99")
 
 
 # --------------------------------------------------------------- compare()
@@ -165,9 +171,28 @@ def test_trajectory_flags_shm_slower_than_cached_floor():
 
 
 def test_trajectory_flags_fleet_that_fills_more_than_once():
-    new = _new_fixture(**{"smoke/fleet_fills": 3.0})
+    new = _new_fixture(**{"smoke/fleet_fills_cold": 3.0})
     failures = perf_gate.trajectory_asserts(new, _old_fixture())
-    assert any("shm fill" in f for f in failures)
+    assert any("fills_cold=3" in f for f in failures)
+
+
+def test_trajectory_flags_warm_fleet_that_refills():
+    """PR 10: a warm rerun that fills again means the segment did not
+    survive the first fleet — the machine-wide sharing claim is broken."""
+    new = _new_fixture(**{"smoke/fleet_fills_warm": 1.0})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("fills_warm=1" in f for f in failures)
+
+
+def test_trajectory_requires_both_fleet_fill_temperatures():
+    """PR 10 measured-zero fix: the old single smoke/fleet_fills row was
+    vacuous (always 0 — the sweep pre-published the segment); both split
+    rows are now required."""
+    for key in ("smoke/fleet_fills_cold", "smoke/fleet_fills_warm"):
+        new = _new_fixture()
+        del new[key]
+        failures = perf_gate.trajectory_asserts(new, _old_fixture())
+        assert any(f"required key {key}" in f for f in failures)
 
 
 def test_trajectory_missing_key_fails_without_crashing():
@@ -278,6 +303,40 @@ def test_trajectory_bounds_faulted_fetch():
     assert any("fetch_under_faults" in f for f in failures)
 
 
+def test_trajectory_requires_ttft_rows():
+    """PR 10: a trajectory without TTFT quantiles fails the gate — the
+    streaming tier must really have pushed per-token frames."""
+    for key in ("serve/ttft_p50", "serve/ttft_p99"):
+        new = _new_fixture()
+        del new[key]
+        failures = perf_gate.trajectory_asserts(new, _old_fixture())
+        assert any(f"required key {key}" in f for f in failures)
+
+
+def test_trajectory_rejects_zero_or_nonfinite_ttft():
+    new = _new_fixture(**{"serve/ttft_p99": 0.0})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("ttft_p99" in f for f in failures)
+    new = _new_fixture(**{"serve/ttft_p50": float("inf")})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("ttft_p50" in f for f in failures)
+
+
+def test_trajectory_bounds_ttft_by_completion_p99():
+    """The first streamed token cannot land after the completion frame —
+    ttft_p99 is bounded by the worst completion p99 of the run (steady or
+    rollover window, whichever is larger)."""
+    new = _new_fixture(**{"serve/ttft_p99": 52000.0 * 1.5})
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("first token lands before the last" in f for f in failures)
+
+
+def test_trajectory_orders_ttft_quantiles():
+    new = _new_fixture(**{"serve/ttft_p50": 31000.0})   # > ttft_p99
+    failures = perf_gate.trajectory_asserts(new, _old_fixture())
+    assert any("ttft_p50" in f and "ttft_p99" in f for f in failures)
+
+
 def test_trajectory_requires_a_real_quarantine():
     # zero quarantined means the corrupt-transfer scenario never ran
     new = _new_fixture(**{"store/quarantined": 0.0})
@@ -302,9 +361,10 @@ def test_measured_zero_rejection_allowlists_true_zero_rows():
 
 
 def test_measured_zero_rejection_ignores_derived_rows():
-    # a legitimately-zero derived count (fleet attached everywhere) is the
-    # derived checks' business, not the measured sweep's
-    new = _new_fixture(**{"smoke/fleet_fills": 0.0})
+    # fleet_fills_warm MEASURES zero (the warm fleet attaches) — it is a
+    # derived count whose honest-zero claim the trajectory asserts enforce
+    # (warm == 0, cold == 1), not the measured sweep's business
+    new = _new_fixture(**{"smoke/fleet_fills_warm": 0.0})
     assert perf_gate.check_measured_zeros(new) == []
 
 

